@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing, result recording, CSV emission."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def record(name: str, rows: list[dict], csv_line: tuple | None = None):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(rows, indent=2))
+    if csv_line:
+        print(",".join(str(x) for x in csv_line), flush=True)
+    return rows

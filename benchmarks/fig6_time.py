@@ -1,0 +1,46 @@
+"""Paper Fig 6: execution time IPKMeans vs PKMeans, same data/seeds.
+
+Two views: (a) measured wall time of the JAX solvers on this host;
+(b) modeled Hadoop seconds (job startup + calibrated shuffle + disk), the
+apples-to-apples reproduction of the paper's environment.  Claim: up to 2/3
+less time; PKMeans can win when it converges in very few iterations
+(paper experiments 2-3)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import record, timeit
+from repro.core import IPKMeansConfig, io_model, ipkmeans, pkmeans
+from repro.data import initial_centroid_groups, paper_dataset_3000
+
+
+def run():
+    pts, _ = paper_dataset_3000(0)
+    inits = initial_centroid_groups(pts, 5, groups=5)
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    model = io_model.HadoopCostModel()
+    rows = []
+    for i, init in enumerate(inits):
+        ref = pkmeans(pts, init)
+        res = ipkmeans(pts, init, jax.random.key(0), cfg)
+        t_pk = timeit(lambda init=init: pkmeans(pts, init))
+        t_ipk = timeit(lambda init=init: ipkmeans(pts, init,
+                                                  jax.random.key(0), cfg))
+        h_pk = model.pkmeans_sec(3000, 2, 5, int(ref.iters))
+        h_ipk = model.ipkmeans_sec(3000, 2, 5, 6, int(res.kd_depth))
+        rows.append({
+            "experiment": i + 1,
+            "jax_sec_pkmeans": t_pk, "jax_sec_ipkmeans": t_ipk,
+            "hadoop_model_sec_pkmeans": h_pk,
+            "hadoop_model_sec_ipkmeans": h_ipk,
+            "hadoop_time_reduction": 1 - h_ipk / h_pk,
+        })
+    best = max(r["hadoop_time_reduction"] for r in rows)
+    t = rows[0]["jax_sec_ipkmeans"]
+    record("fig6_time", rows,
+           ("fig6_time", f"{t*1e6:.0f}", f"best_time_reduction={best:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

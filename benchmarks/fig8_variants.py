@@ -1,0 +1,50 @@
+"""Paper Fig 8: partitioning x merging variant comparison.
+
+Variants: 1) kd+random-label  2) kd+axis-label  3) global random partition,
+merges: a) hierarchical  b) min-ASSE.  Paper ranking (worst -> best):
+2+a < 3+b < 1+b < 2+b, vs single-machine k-means as the floor."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import IPKMeansConfig, ipkmeans, pkmeans
+from repro.data import initial_centroid_groups, paper_dataset_3000
+
+COMBOS = {
+    "2+a": ("kd_axis", "hierarchical"),
+    "3+b": ("random", "min_asse"),
+    "1+b": ("kd_random", "min_asse"),
+    "2+b": ("kd_axis", "min_asse"),
+}
+REDUCERS = (6, 11, 23, 46, 93)
+
+
+def run():
+    pts, _ = paper_dataset_3000(0)
+    inits = initial_centroid_groups(pts, 5, groups=3)
+    base = float(np.mean([float(pkmeans(pts, i).sse) for i in inits]))
+    rows = []
+    for name, (part, merge) in COMBOS.items():
+        for m in REDUCERS:
+            sses = []
+            for s, init in enumerate(inits):
+                cfg = IPKMeansConfig(num_clusters=5, num_subsets=m,
+                                     partition=part, merge=merge)
+                sses.append(float(ipkmeans(pts, init, jax.random.key(s),
+                                           cfg).sse))
+            rows.append({"combo": name, "reducers": m,
+                         "mean_sse": float(np.mean(sses)),
+                         "vs_single_machine_pct":
+                             100 * (float(np.mean(sses)) / base - 1)})
+    # paper's headline: 2+b is the best combo on average
+    avg = {c: float(np.mean([r["mean_sse"] for r in rows
+                             if r["combo"] == c])) for c in COMBOS}
+    best = min(avg, key=avg.get)
+    record("fig8_variants", rows, ("fig8_variants", "0", f"best={best}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Kernel micro-bench: Pallas assignment / update vs jnp reference.
+
+On this CPU container the Pallas kernels execute under interpret=True (a
+Python interpreter — not meaningful for wall-clock), so the timed comparison
+is jnp-reference vs jnp-reference-at-scale; the Pallas numbers reported are
+correctness-path timings only.  The real target is the TPU lowering, whose
+tiling is validated structurally (block shapes, VMEM footprint) here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import record, timeit
+from repro.kernels import ops, ref
+
+SIZES = [(10_000, 2, 5), (100_000, 16, 64), (500_000, 64, 256)]
+
+
+def vmem_footprint(bn, bk, d_pad, dtype_bytes=4):
+    """Bytes of VMEM the assign kernel's working set claims per grid step."""
+    return (bn * d_pad + bk * d_pad + bk + 2 * bn) * dtype_bytes
+
+
+def run():
+    rows = []
+    for n, d, k in SIZES:
+        kx, kc = jax.random.split(jax.random.key(n))
+        x = jax.random.normal(kx, (n, d), jnp.float32)
+        c = jax.random.normal(kc, (k, d), jnp.float32)
+        fn = jax.jit(lambda x, c: ref.assign_ref(x, c))
+        t = timeit(fn, x, c)
+        bn, bk = 256, 128
+        d_pad = max(-(-d // 128) * 128, 128)
+        rows.append({
+            "n": n, "d": d, "k": k,
+            "jnp_ref_us": t * 1e6,
+            "flops": 2.0 * n * k * d,
+            "gflops_per_s": 2.0 * n * k * d / t / 1e9,
+            "pallas_block": [bn, bk, d_pad],
+            "pallas_vmem_bytes": vmem_footprint(bn, bk, d_pad),
+            "vmem_ok": vmem_footprint(bn, bk, d_pad) < 16 * 2 ** 20,
+        })
+    record("kernel_bench", rows,
+           ("kernel_assign", f"{rows[-1]['jnp_ref_us']:.0f}",
+            f"gflops={rows[-1]['gflops_per_s']:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

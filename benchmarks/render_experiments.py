@@ -1,0 +1,136 @@
+"""Render EXPERIMENTS.md tables from experiments/{dryrun,bench} JSONs.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments > /tmp/tables.md
+
+Keeps EXPERIMENTS.md numbers reproducible from artifacts.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def _fmt(x, n=3):
+    return f"{x:.{n}e}" if isinstance(x, float) else str(x)
+
+
+def roofline_table(mesh: str):
+    rows = []
+    for p in sorted((ROOT / "dryrun").glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("variant"):
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"skip: {r['reason'][:58]} | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        rf = r.get("roofline_expanded", r["roofline"])
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / bound if bound else 0
+        flops = r.get("flops_expanded", r.get("flops"))
+        useful = (r.get("model_flops_per_device", 0) / flops
+                  if flops else 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(rf['compute_s'])} | "
+            f"{_fmt(rf['memory_s'])} | {_fmt(rf['collective_s'])} | "
+            f"{rf['dominant'].replace('_s', '')} | {frac:.3f} | {useful:.2f} |")
+    head = ("| arch | shape | compute_s | memory_s | collective_s | "
+            "dominant | roofline frac | useful-FLOPs ratio |\n"
+            "|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def dryrun_table(mesh: str):
+    rows = []
+    for p in sorted((ROOT / "dryrun").glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("variant") or r["status"] != "ok":
+            continue
+        args = r.get("argument_size_in_bytes", 0) / 2**30
+        temp = r.get("temp_size_in_bytes", 0) / 2**30
+        coll = sum(r.get("collective_bytes", {}).values()) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['flops']:.2e} | "
+            f"{r['bytes_accessed']:.2e} | {coll:.2f} | {args:.2f} | "
+            f"{temp:.2f} | {r.get('compile_s', 0):.0f}s |")
+    head = ("| arch | shape | HLO FLOPs/dev | HLO bytes/dev | coll GiB/dev | "
+            "args GiB | temps GiB | compile |\n|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def variant_table():
+    rows = []
+    for p in sorted((ROOT / "dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        tag = r.get("variant")
+        if not tag or r["status"] != "ok":
+            continue
+        rf = r.get("roofline_expanded", r["roofline"])
+        rows.append(f"| {tag} | {r['arch']} x {r['shape']} | "
+                    f"{_fmt(rf['compute_s'])} | {_fmt(rf['memory_s'])} | "
+                    f"{_fmt(rf['collective_s'])} | {r.get('note', '')[:70]} |")
+    head = ("| variant | cell | compute_s | memory_s | collective_s | note |\n"
+            "|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def kmeans_table(mesh: str):
+    rows = []
+    for p in sorted((ROOT / "dryrun").glob(f"kmeans-*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        rf = r["roofline"]
+        extra = []
+        if "collectives_in_solver_loop" in r:
+            extra.append(f"loop-collectives={r['collectives_in_solver_loop']}")
+        rows.append(f"| {r['arch']} | {_fmt(rf['compute_s'])} | "
+                    f"{_fmt(rf['memory_s'])} | {_fmt(rf['collective_s'])} | "
+                    f"{rf['dominant'].replace('_s','')} | "
+                    f"{'; '.join(extra) or '—'} |")
+    head = ("| program | compute_s | memory_s | collective_s | dominant | "
+            "notes |\n|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def bench_tables():
+    out = []
+    for name in ("table1_sse", "fig5_io", "fig6_time", "table2_reducers",
+                 "table3_large", "fig8_variants"):
+        p = ROOT / "bench" / f"{name}.json"
+        if not p.exists():
+            continue
+        rows = json.loads(p.read_text())
+        if not rows:
+            continue
+        keys = list(rows[0].keys())
+        head = "| " + " | ".join(keys) + " |\n|" + "---|" * len(keys)
+        body = "\n".join(
+            "| " + " | ".join(
+                (f"{v:.4g}" if isinstance(v, float) else str(v))
+                for v in r.values()) + " |"
+            for r in rows)
+        out.append(f"### {name}\n\n{head}\n{body}")
+    return "\n\n".join(out)
+
+
+def main():
+    print("## §Roofline — single pod 16x16 (256 chips)\n")
+    print(roofline_table("16x16"))
+    print("\n## §Dry-run raw terms — 16x16\n")
+    print(dryrun_table("16x16"))
+    print("\n## §Dry-run — multi-pod 2x16x16 (512 chips)\n")
+    print(dryrun_table("2x16x16"))
+    print("\n## k-means programs (the paper's technique) — 16x16\n")
+    print(kmeans_table("16x16"))
+    print("\n## §Perf variants\n")
+    print(variant_table())
+    print("\n## Paper-claim benchmarks\n")
+    print(bench_tables())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""§Roofline: render the three-term roofline table from the dry-run JSONs."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import record
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh="16x16"):
+    recs = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run(mesh="16x16"):
+    rows = []
+    for r in load(mesh):
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r.get("status"),
+                         "reason": r.get("reason", r.get("error", ""))[:120]})
+            continue
+        rf = r.get("roofline_expanded", r["roofline"])
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        flops = r.get("flops_expanded", r.get("flops", 0))
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "dominant": rf["dominant"],
+            "roofline_fraction": rf["compute_s"] / bound if bound else 0.0,
+            "useful_flops_ratio":
+                r.get("model_flops_per_device", 0) / flops if flops else 0,
+            "hbm_args_gb": r.get("argument_size_in_bytes", 0) / 2**30,
+            "hbm_temp_gb": r.get("temp_size_in_bytes", 0) / 2**30,
+        })
+    ok = [r for r in rows if r.get("status") == "ok"]
+    worst = min(ok, key=lambda r: r["roofline_fraction"]) if ok else None
+    record(f"roofline_{mesh}", rows,
+           ("roofline", "0",
+            f"cells={len(ok)}"
+            + (f",worst={worst['arch']}/{worst['shape']}"
+               f"@{worst['roofline_fraction']:.3f}" if worst else "")))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

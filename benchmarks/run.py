@@ -1,0 +1,40 @@
+"""Benchmark harness — one entry per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines; full rows land in
+experiments/bench/*.json.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig5_io, fig6_time, fig8_variants, kernel_bench,
+                            roofline, table1_sse, table2_reducers,
+                            table3_large)
+    benches = [
+        ("table1_sse", table1_sse.run),
+        ("fig5_io", fig5_io.run),
+        ("fig6_time", fig6_time.run),
+        ("table2_reducers", table2_reducers.run),
+        ("table3_large", table3_large.run),
+        ("fig8_variants", fig8_variants.run),
+        ("kernel_bench", kernel_bench.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}",
+                  flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table 1: SSE of PKMeans vs IPKMeans — 3000 pts, K=5, 5 initial
+centroid groups.  Claim: SSEs are very close (paper: 3.4817e4 vs 3.484xe4,
+a <0.1% gap)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import record, timeit
+from repro.core import IPKMeansConfig, ipkmeans, pkmeans
+from repro.data import initial_centroid_groups, paper_dataset_3000
+
+
+def run():
+    pts, _ = paper_dataset_3000(0)
+    inits = initial_centroid_groups(pts, 5, groups=5)
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    rows = []
+    for i, init in enumerate(inits):
+        ref = pkmeans(pts, init)
+        res = ipkmeans(pts, init, jax.random.key(0), cfg)
+        rows.append({
+            "experiment": i + 1,
+            "sse_pkmeans": float(ref.sse),
+            "sse_ipkmeans": float(res.sse),
+            "gap_pct": 100 * (float(res.sse) / float(ref.sse) - 1),
+            "pkmeans_iters": int(ref.iters),
+            "ipkmeans_kd_depth": int(res.kd_depth),
+        })
+    worst = max(r["gap_pct"] for r in rows)
+    t = timeit(lambda: ipkmeans(pts, inits[0], jax.random.key(0), cfg))
+    record("table1_sse", rows,
+           ("table1_sse", f"{t*1e6:.0f}", f"worst_gap_pct={worst:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Table 3: 15000 points, 4 clusters, 58/117/234/468/937 reducers.
+
+Claims: first four experiments nearly match single-machine SSE (1.3178e5);
+937 reducers (15 pts/reducer) degrades but still clusters."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import record, timeit
+from repro.core import IPKMeansConfig, ipkmeans, pkmeans
+from repro.data import initial_centroid_groups, paper_dataset_15000
+
+REDUCERS = (58, 117, 234, 468, 937)
+
+
+def run():
+    pts, _ = paper_dataset_15000(1)
+    init = initial_centroid_groups(pts, 4, groups=1, seed=200)[0]
+    base = float(pkmeans(pts, init).sse)
+    rows = []
+    for m in REDUCERS:
+        cfg = IPKMeansConfig(num_clusters=4, num_subsets=m)
+        res = ipkmeans(pts, init, jax.random.key(0), cfg)
+        t = timeit(lambda cfg=cfg: ipkmeans(pts, init, jax.random.key(0),
+                                            cfg), repeats=1)
+        rows.append({
+            "reducers": m,
+            "sse": float(res.sse),
+            "sse_vs_single_machine_pct": 100 * (float(res.sse) / base - 1),
+            "jax_sec": t,
+            "points_per_reducer": 15000 // m,
+        })
+    ok4 = all(r["sse_vs_single_machine_pct"] < 10 for r in rows[:4])
+    record("table3_large", rows,
+           ("table3_large", f"{rows[0]['jax_sec']*1e6:.0f}",
+            f"first4_within_10pct={ok4}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""End-to-end driver: train a ~110M-parameter LM for a few hundred steps
+with checkpoints, WSD schedule, and resumable data.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Uses a 110M xLSTM-family config (the assigned xlstm-125m scaled to CPU-
+trainable sequence length).  Loss should fall from ~ln(vocab)≈9.2 toward
+~5-6 within a few hundred steps on the synthetic stream.
+"""
+import argparse
+import dataclasses
+import functools
+
+from repro import optim
+from repro.configs import ARCHS
+from repro.launch.train import train_loop
+from repro.optim import schedules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # the real xlstm-125m config, CPU-adapted: f32, no remat, short chunks
+    cfg = dataclasses.replace(ARCHS["xlstm-125m"], dtype="float32",
+                              remat="none")
+    print(f"model: {cfg.name}  params≈"
+          f"{cfg.param_count()/1e6:.0f}M  steps={args.steps}")
+    schedule = functools.partial(schedules.wsd, peak_lr=3e-4, warmup=20,
+                                 stable=int(args.steps * 0.7),
+                                 decay=int(args.steps * 0.2))
+    _, _, history = train_loop(
+        cfg, steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=10,
+        adamw_cfg=optim.AdamWConfig(weight_decay=0.01))
+    first, last = history[0][1], history[-1][1]
+    print(f"loss: {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

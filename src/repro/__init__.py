@@ -1,0 +1,3 @@
+"""repro — IPKMeans (Jin/Cui/Yu 2016) on TPU: JAX/Pallas production framework."""
+
+__version__ = "1.0.0"

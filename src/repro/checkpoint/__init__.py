@@ -1,0 +1,6 @@
+from repro.checkpoint import manager
+from repro.checkpoint.manager import (AsyncCheckpointer, gc_old, latest_step,
+                                      restore, restore_latest, save)
+
+__all__ = ["manager", "AsyncCheckpointer", "save", "restore",
+           "restore_latest", "latest_step", "gc_old"]

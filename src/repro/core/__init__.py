@@ -1,0 +1,13 @@
+"""Core library: IPKMeans (the paper's contribution) + PKMeans baseline."""
+from repro.core.ipkmeans import (IPKMeansConfig, IPKMeansResult, ipkmeans,
+                                 ipkmeans_distributed)
+from repro.core.kmeans import KMeansParams, KMeansResult, kmeans, kmeans_batched
+from repro.core.pkmeans import PKMeansResult, pkmeans, pkmeans_sharded
+from repro.core import init, io_model, kdtree, merge, metrics
+
+__all__ = [
+    "IPKMeansConfig", "IPKMeansResult", "ipkmeans", "ipkmeans_distributed",
+    "KMeansParams", "KMeansResult", "kmeans", "kmeans_batched",
+    "PKMeansResult", "pkmeans", "pkmeans_sharded",
+    "init", "io_model", "kdtree", "merge", "metrics",
+]

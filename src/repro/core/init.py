@@ -1,0 +1,46 @@
+"""Centroid initialization strategies.
+
+The paper evaluates with fixed, shared initial centroids (same centroids fed
+to PKMeans and to every IPKMeans reducer) — ``sample_init`` reproduces that.
+``kmeans_plus_plus`` is provided as a beyond-paper option.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics
+
+
+@partial(jax.jit, static_argnames=("k",))
+def sample_init(points: jnp.ndarray, key: jax.Array, k: int) -> jnp.ndarray:
+    """Sample k distinct points uniformly as initial centroids."""
+    idx = jax.random.choice(key, points.shape[0], (k,), replace=False)
+    return points[idx]
+
+
+@partial(jax.jit, static_argnames=("k",))
+def kmeans_plus_plus(points: jnp.ndarray, key: jax.Array, k: int) -> jnp.ndarray:
+    """k-means++ seeding (Arthur & Vassilvitskii 2007): each next centroid is
+    sampled proportionally to squared distance from the chosen set."""
+    n, d = points.shape
+    k0, key = jax.random.split(key)
+    first = points[jax.random.randint(k0, (), 0, n)]
+    centroids = jnp.zeros((k, d), points.dtype).at[0].set(first)
+
+    def body(i, carry):
+        cents, key = carry
+        key, sub = jax.random.split(key)
+        d2 = metrics.pairwise_sq_dists(points, cents)
+        # distances to not-yet-chosen slots must not win the min
+        valid = jnp.arange(k) < i
+        d2 = jnp.where(valid[None, :], d2, jnp.inf)
+        w = jnp.min(d2, axis=-1)
+        probs = w / jnp.maximum(jnp.sum(w), 1e-30)
+        idx = jax.random.choice(sub, n, p=probs)
+        return cents.at[i].set(points[idx]), key
+
+    centroids, _ = jax.lax.fori_loop(1, k, body, (centroids, key))
+    return centroids

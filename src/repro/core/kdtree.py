@@ -1,0 +1,325 @@
+"""Level-synchronous k-d tree partitioning + subset labeling (paper Algs 2-3).
+
+The paper builds the tree with one MapReduce job per level: reducers split
+each sub-region at the exact median along a cycling axis, appending one bit to
+the region id.  The TPU adaptation keeps the *level-synchronous* schedule but
+replaces the shuffle with a lexicographic sort: one (region, coord) sort per
+level computes every region's exact median split simultaneously.  ``depth``
+levels <=> the paper's O(log n) MapReduce jobs.
+
+Everything is pure jnp and jit-safe for a static ``depth`` / ``num_subsets``,
+and — because sorts and scatters are SPMD-partitionable — runs sharded under
+pjit on a mesh without modification.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Partition(NamedTuple):
+    subset_ids: jnp.ndarray      # (n,) int32 in [0, num_subsets)
+    region_ids: jnp.ndarray      # (n,) int32 in [0, 2**depth) — tree leaves
+    depth: int                   # tree levels == number of "MapReduce jobs"
+
+
+def _segment_rank(sort_primary: jnp.ndarray, order: jnp.ndarray, num_segments: int):
+    """Given a permutation ``order`` that sorts by (segment, key), return for
+    each *sorted* position its rank within its segment and the segment size."""
+    n = sort_primary.shape[0]
+    sorted_seg = sort_primary[order]
+    counts = jnp.bincount(sort_primary, length=num_segments)           # (m,)
+    starts = jnp.cumsum(counts) - counts                               # (m,)
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[sorted_seg].astype(jnp.int32)
+    size = counts[sorted_seg].astype(jnp.int32)
+    return sorted_seg, rank, size
+
+
+@partial(jax.jit, static_argnames=("depth",))
+def build_kdtree(points: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Assign every point a leaf region id via ``depth`` median-split rounds.
+
+    Axes cycle x, y, x, y, ... exactly as in the paper's 2-D construction;
+    the left child takes ceil(size/2) points ("split at median point").
+    Returns (n,) int32 region ids in [0, 2**depth).
+    """
+    n, d = points.shape
+    region = jnp.zeros(n, dtype=jnp.int32)
+    for level in range(depth):
+        axis = level % d
+        coord = points[:, axis]
+        order = jnp.lexsort((coord, region))           # sort by region, then coord
+        sorted_seg, rank, size = _segment_rank(region, order, 2 ** level)
+        child = (rank >= (size + 1) // 2).astype(jnp.int32)
+        new_sorted = sorted_seg * 2 + child
+        region = jnp.zeros_like(region).at[order].set(new_sorted)
+    return region
+
+
+def _monotone_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Order-preserving float32 -> uint32 mapping (IEEE-754 trick)."""
+    b = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return jnp.where((b >> 31) == 1, ~b, b | jnp.uint32(0x80000000))
+
+
+def _histogram_median_go_right(key: jnp.ndarray, idx: jnp.ndarray,
+                               region: jnp.ndarray, num_regions: int):
+    """Exact per-region median split WITHOUT sorting.
+
+    Radix-refines the median over 8 byte-rounds (4 bytes of the monotone
+    float key + 4 bytes of the point index as a unique tie-break, matching
+    the stable lexsort's ordering).  Per round: one histogram scatter-add
+    of active points into (R, 256) bins — O(n) traffic and an O(R*256)
+    reduction, vs a full O(n log n) global sort per tree level.  This is
+    the §Perf cell-C optimization; equality with the sort-based splitter
+    is asserted in tests.
+    """
+    n = key.shape[0]
+    counts = jnp.bincount(region, length=num_regions)
+    remaining = ((counts + 1) // 2).astype(jnp.int32)     # ceil -> left
+    match = jnp.ones(n, bool)
+    less = jnp.zeros(n, bool)
+    for r in range(8):
+        if r < 4:
+            byte = (key >> (8 * (3 - r))) & jnp.uint32(0xFF)
+        else:
+            byte = (idx >> (8 * (7 - r))) & jnp.uint32(0xFF)
+        byte = byte.astype(jnp.int32)
+        hist = jnp.zeros((num_regions * 256,), jnp.int32).at[
+            region * 256 + byte].add(match.astype(jnp.int32))
+        hist = hist.reshape(num_regions, 256)
+        cum = jnp.cumsum(hist, axis=1)
+        bstar = jnp.argmax(cum >= remaining[:, None], axis=1).astype(jnp.int32)
+        below = jnp.where(bstar > 0,
+                          jnp.take_along_axis(
+                              cum, jnp.maximum(bstar - 1, 0)[:, None],
+                              axis=1)[:, 0],
+                          0)
+        remaining = remaining - below.astype(jnp.int32)
+        b_reg = bstar[region]
+        less = less | (match & (byte < b_reg))
+        match = match & (byte == b_reg)
+    # the unique surviving point is the median element; it joins the left
+    # half iff one left-slot remains (remaining == 1 by construction)
+    left = less | (match & (remaining[region] > 0))
+    return ~left
+
+
+@partial(jax.jit, static_argnames=("depth",))
+def build_kdtree_histogram(points: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Sort-free k-d tree build: identical output to :func:`build_kdtree`
+    (exact medians, same tie-breaks) via radix-histogram median selection.
+    O(depth * 8) histogram passes instead of O(depth) global sorts."""
+    n, d = points.shape
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    keys = [_monotone_u32(points[:, a]) for a in range(d)]
+    region = jnp.zeros(n, dtype=jnp.int32)
+    for level in range(depth):
+        key = keys[level % d]
+        go_right = _histogram_median_go_right(key, idx, region, 2 ** level)
+        region = region * 2 + go_right.astype(jnp.int32)
+    return region
+
+
+def required_depth(n: int, leaf_capacity: int) -> int:
+    """Levels so leaves hold ~leaf_capacity points.
+
+    The paper splits 'until every sub region contains at most M points' and
+    its Table-3 arithmetic (58 reducers x 258-point subsets on 15000 pts)
+    implies leaves of size *closest to* M — one split further would halve
+    the leaves and leave subsets M/2..M-1 empty (labels are ranks within
+    the leaf).  So: depth = round(log2(n / capacity)), leaf in (M/2, M]."""
+    import math
+    if n <= leaf_capacity:
+        return 0
+    return max(0, round(math.log2(n / leaf_capacity)))
+
+
+@partial(jax.jit, static_argnames=("num_regions", "num_subsets", "strategy", "label_axis"))
+def label_regions(points: jnp.ndarray,
+                  region_ids: jnp.ndarray,
+                  key: jax.Array,
+                  num_regions: int,
+                  num_subsets: int,
+                  strategy: str = "axis",
+                  label_axis: int = 0) -> jnp.ndarray:
+    """Paper Algorithm 3: label points 1..M inside each leaf; label i forms
+    subset i.  ``strategy``:
+
+      * ``'axis'``   — variant (2): sort along ``label_axis`` inside the leaf
+        and label left-to-right (the paper's winning variant).
+      * ``'random'`` — variant (1): random permutation inside the leaf.
+
+    Labels wrap mod ``num_subsets`` so leaf capacity need not equal M.
+    """
+    if strategy == "axis":
+        key2 = points[:, label_axis]
+    elif strategy == "random":
+        key2 = jax.random.uniform(key, (points.shape[0],))
+    else:
+        raise ValueError(f"unknown labeling strategy: {strategy}")
+    order = jnp.lexsort((key2, region_ids))
+    _, rank, _ = _segment_rank(region_ids, order, num_regions)
+    label_sorted = (rank % num_subsets).astype(jnp.int32)
+    return jnp.zeros_like(region_ids).at[order].set(label_sorted)
+
+
+@partial(jax.jit, static_argnames=("num_subsets",))
+def random_partition(points: jnp.ndarray, key: jax.Array, num_subsets: int):
+    """Variant (3): global random partition, no k-d tree (ablation baseline).
+
+    Uses a random permutation + round-robin so subset sizes stay balanced,
+    matching how HashPartitioner would spread records across reducers."""
+    n = points.shape[0]
+    perm = jax.random.permutation(key, n)
+    ids = jnp.zeros(n, dtype=jnp.int32).at[perm].set(
+        (jnp.arange(n) % num_subsets).astype(jnp.int32))
+    return ids
+
+
+@partial(jax.jit, static_argnames=("num_subsets", "capacity"))
+def pack_subsets(points: jnp.ndarray,
+                 subset_ids: jnp.ndarray,
+                 num_subsets: int,
+                 capacity: int):
+    """Scatter points into a rectangular (M, capacity, d) tensor + bool mask.
+
+    This is the shuffle that routes each subset to its reducer.  Points beyond
+    ``capacity`` in a subset are dropped (cannot happen for kd-tree labeling
+    with capacity >= ceil(num_leaves * leaf_cap / M); asserted in tests).
+    """
+    n, d = points.shape
+    order = jnp.argsort(subset_ids, stable=True)
+    sorted_sub, rank, _ = _segment_rank(subset_ids, order, num_subsets)
+    out = jnp.zeros((num_subsets, capacity, d), points.dtype)
+    msk = jnp.zeros((num_subsets, capacity), bool)
+    # ranks >= capacity fall out of bounds and are dropped by mode='drop'
+    out = out.at[sorted_sub, rank].set(points[order], mode="drop")
+    msk = msk.at[sorted_sub, rank].set(True, mode="drop")
+    return out, msk
+
+
+@partial(jax.jit, static_argnames=("num_subsets", "capacity"))
+def pack_subsets_sorted(points: jnp.ndarray,
+                        subset_ids: jnp.ndarray,
+                        num_subsets: int,
+                        capacity: int):
+    """Equal-size pack via one sort + reshape (no scatter).
+
+    Valid when every subset holds exactly ``capacity`` points (true for the
+    kd-tree labeling whenever n == num_subsets * capacity, i.e. full
+    leaves).  GSPMD lowers the scatter in :func:`pack_subsets` as a
+    local-scatter + full-output ALL-REDUCE (a dataset-sized reduction);
+    the sort+gather formulation moves the data once instead — §Perf C2.
+    """
+    n, d = points.shape
+    assert n == num_subsets * capacity, (n, num_subsets, capacity)
+    order = jnp.argsort(subset_ids, stable=True)
+    packed = points[order].reshape(num_subsets, capacity, d)
+    return packed, jnp.ones((num_subsets, capacity), bool)
+
+
+def pack_subsets_a2a(points: jnp.ndarray,
+                     subset_ids: jnp.ndarray,
+                     num_subsets: int,
+                     capacity: int,
+                     mesh,
+                     axis_names: tuple[str, ...],
+                     slack: float = 1.3):
+    """Communication-optimal pack: explicit all_to_all shuffle (§Perf C3).
+
+    GSPMD lowers both the scatter- and the sort-based packs as dataset-
+    sized all-reduce/all-gather; but the shuffle's destinations are known
+    (subset s lives on device s // (M/R)), so a capacity-padded shard_map
+    all_to_all moves each point exactly once — the same dispatch pattern as
+    the MoE layer.  Per-(src,dst) capacity is n_loc/R * slack; overflow
+    drops are impossible for region-aligned inputs and negligible for
+    random order (asserted via mask count in tests).
+
+    Returns (packed (M, capacity, d) sharded over M, mask) — same contract
+    as :func:`pack_subsets`.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    n, d = points.shape
+    r = 1
+    for a in axis_names:
+        r *= mesh.shape[a]
+    if num_subsets % r or n % r:
+        return pack_subsets(points, subset_ids, num_subsets, capacity)
+    m_loc = num_subsets // r
+    n_loc = n // r
+    c_send = max(8, -(-int(n_loc / r * slack) // 8) * 8)
+
+    def body(pts_loc, ids_loc):
+        # route local points to the device owning their subset
+        dst = (ids_loc // m_loc).astype(jnp.int32)
+        order = jnp.argsort(dst, stable=True)
+        counts = jnp.bincount(dst, length=r)
+        starts = jnp.cumsum(counts) - counts
+        slot_sorted = jnp.arange(n_loc, dtype=jnp.int32) \
+            - starts[dst[order]].astype(jnp.int32)
+        slot = jnp.zeros(n_loc, jnp.int32).at[order].set(slot_sorted)
+        slot = jnp.where(slot < c_send, slot, c_send)        # drop overflow
+        send_x = jnp.zeros((r, c_send, d), pts_loc.dtype).at[
+            dst, slot].set(pts_loc, mode="drop")
+        send_id = jnp.full((r, c_send), -1, jnp.int32).at[
+            dst, slot].set(ids_loc.astype(jnp.int32), mode="drop")
+        recv_x = jax.lax.all_to_all(send_x, axis_names, 0, 0, tiled=True)
+        recv_id = jax.lax.all_to_all(send_id, axis_names, 0, 0, tiled=True)
+        # local re-pack into (m_loc, capacity, d)
+        flat_x = recv_x.reshape(r * c_send, d)
+        flat_id = recv_id.reshape(r * c_send)
+        local_sub = jnp.where(flat_id >= 0, flat_id % m_loc, m_loc)
+        order2 = jnp.argsort(local_sub, stable=True)
+        counts2 = jnp.bincount(local_sub, length=m_loc + 1)
+        starts2 = jnp.cumsum(counts2) - counts2
+        rank_sorted = jnp.arange(r * c_send, dtype=jnp.int32) \
+            - starts2[local_sub[order2]].astype(jnp.int32)
+        rank = jnp.zeros(r * c_send, jnp.int32).at[order2].set(rank_sorted)
+        valid = (flat_id >= 0) & (rank < capacity)
+        out = jnp.zeros((m_loc, capacity, d), pts_loc.dtype).at[
+            jnp.where(valid, local_sub, m_loc),
+            jnp.where(valid, rank, capacity)].set(flat_x, mode="drop")
+        msk = jnp.zeros((m_loc, capacity), bool).at[
+            jnp.where(valid, local_sub, m_loc),
+            jnp.where(valid, rank, capacity)].set(True, mode="drop")
+        return out, msk
+
+    spec = P(axis_names)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=(P(axis_names, None, None), P(axis_names, None)),
+        check_vma=False)(points, subset_ids)
+
+
+def partition_dataset(points: jnp.ndarray,
+                      key: jax.Array,
+                      num_subsets: int,
+                      leaf_capacity: int | None = None,
+                      strategy: str = "kd_axis",
+                      label_axis: int = 0,
+                      builder: str = "sort") -> Partition:
+    """Full stage-1 pipeline: tree build + labeling (or random partition).
+
+    ``strategy`` in {'kd_axis', 'kd_random', 'random'} — the paper's variants
+    (2), (1) and (3) respectively.  ``builder``: 'sort' (paper-faithful
+    level-sync sorts) or 'histogram' (identical output, sort-free — §Perf).
+    """
+    n = points.shape[0]
+    cap = num_subsets if leaf_capacity is None else leaf_capacity
+    if strategy == "random":
+        ids = random_partition(points, key, num_subsets)
+        return Partition(subset_ids=ids,
+                         region_ids=jnp.zeros(n, jnp.int32), depth=0)
+    depth = required_depth(n, cap)
+    build = build_kdtree_histogram if builder == "histogram" else build_kdtree
+    region = build(points, depth)
+    label_strategy = "axis" if strategy == "kd_axis" else "random"
+    ids = label_regions(points, region, key, 2 ** depth, num_subsets,
+                        strategy=label_strategy, label_axis=label_axis)
+    return Partition(subset_ids=ids, region_ids=region, depth=depth)

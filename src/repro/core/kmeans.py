@@ -1,0 +1,127 @@
+"""Single-shard Lloyd's k-means, the unit of work each IPKMeans "reducer" runs.
+
+The whole solver is a single ``lax.while_loop`` — no host round-trips, no
+collectives — so under ``shard_map`` every device iterates *independently* to
+convergence, which is exactly the paper's "each reducer runs one complete
+k-means" semantics (Algorithm 4).
+
+The assignment step can route through the Pallas kernel (``backend='pallas'``)
+or the pure-jnp reference (``backend='jnp'``, default — also the oracle the
+kernel is tested against).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics
+
+
+class KMeansParams(NamedTuple):
+    max_iters: int = 300
+    tol: float = 1e-6             # paper: "until centroids stop moving"
+    backend: str = "jnp"          # 'jnp' | 'pallas'
+
+
+class KMeansResult(NamedTuple):
+    centroids: jnp.ndarray        # (k, d)
+    sse: jnp.ndarray              # () total SSE on this shard
+    asse: jnp.ndarray             # () average SSE (paper's merge criterion)
+    iters: jnp.ndarray            # () int32 Lloyd iterations executed
+    converged: jnp.ndarray        # () bool
+
+
+def _assign(points, centroids, backend: str):
+    """Nearest-centroid labels + squared distances, (n,) i32 and (n,) f32."""
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.assign(points, centroids)
+    d2 = metrics.pairwise_sq_dists(points, centroids)
+    labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    mind = jnp.take_along_axis(d2, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return labels, mind
+
+
+def _update(points, labels, mind, mask, k: int, old_centroids, backend: str):
+    """Weighted centroid recomputation; empty clusters keep their centroid."""
+    w = jnp.ones(points.shape[0], points.dtype) if mask is None \
+        else mask.astype(points.dtype)
+    if backend == "pallas":
+        from repro.kernels import ops
+        sums, counts = ops.centroid_update(points, labels, w, k)
+    else:
+        onehot = jax.nn.one_hot(labels, k, dtype=points.dtype) * w[:, None]
+        sums = onehot.T @ points                                    # (k, d)
+        counts = jnp.sum(onehot, axis=0)                            # (k,)
+    new_c = jnp.where(counts[:, None] > 0.0,
+                      sums / jnp.maximum(counts[:, None], 1.0),
+                      old_centroids)
+    shard_sse = jnp.sum(jnp.where(w > 0.0, mind, 0.0))
+    return new_c, shard_sse
+
+
+def lloyd_step(points, centroids, mask=None, backend: str = "jnp"):
+    """One Lloyd iteration: assign + update. Returns (new_centroids, sse)."""
+    k = centroids.shape[0]
+    labels, mind = _assign(points, centroids, backend)
+    return _update(points, labels, mind, mask, k, centroids, backend)
+
+
+@partial(jax.jit, static_argnames=("params",))
+def kmeans(points: jnp.ndarray,
+           init_centroids: jnp.ndarray,
+           mask: jnp.ndarray | None = None,
+           params: KMeansParams = KMeansParams()) -> KMeansResult:
+    """Run Lloyd's algorithm to convergence on one shard of data.
+
+    Args:
+      points: (n, d) float array.  Padded rows allowed when ``mask`` given.
+      init_centroids: (k, d) initial centroids (the paper uses the *same*
+        initial centroids for every reducer, so callers broadcast these).
+      mask: optional (n,) bool — False rows are padding and fully ignored.
+      params: loop controls + assignment backend.
+    """
+    k = init_centroids.shape[0]
+
+    def cond(carry):
+        c, prev_c, it, shift = carry
+        return jnp.logical_and(it < params.max_iters, shift > params.tol)
+
+    def body(carry):
+        c, _, it, _ = carry
+        new_c, _ = lloyd_step(points, c, mask, params.backend)
+        return (new_c, c, it + 1, metrics.centroid_shift(new_c, c))
+
+    init = (init_centroids, init_centroids, jnp.int32(0), jnp.asarray(jnp.inf))
+    final_c, _, iters, shift = jax.lax.while_loop(cond, body, init)
+
+    # final statistics with the converged centroids
+    labels, mind = _assign(points, final_c, params.backend)
+    w = jnp.ones(points.shape[0], points.dtype) if mask is None \
+        else mask.astype(points.dtype)
+    total_sse = jnp.sum(jnp.where(w > 0.0, mind, 0.0))
+    cnt = jnp.sum(w)
+    # empty shards must never win the min-ASSE merge: ASSE = +inf
+    asse = jnp.where(cnt > 0.0, total_sse / jnp.maximum(cnt, 1.0), jnp.inf)
+    return KMeansResult(centroids=final_c,
+                        sse=total_sse,
+                        asse=asse,
+                        iters=iters,
+                        converged=shift <= params.tol)
+
+
+def kmeans_batched(subsets: jnp.ndarray,
+                   masks: jnp.ndarray,
+                   init_centroids: jnp.ndarray,
+                   params: KMeansParams = KMeansParams()) -> KMeansResult:
+    """vmap of :func:`kmeans` over a stack of subsets — (M, S, d) + (M, S).
+
+    This is the per-device body of IPKMeans stage 2: when more subsets than
+    devices exist, each device runs a stack of complete k-means instances
+    (Hadoop would queue reducers the same way).
+    """
+    fn = lambda p, m: kmeans(p, init_centroids, m, params)
+    return jax.vmap(fn)(subsets, masks)

@@ -1,0 +1,57 @@
+"""Stage-3 centroid merging (paper Section 2.iii).
+
+Inputs are the K*M intermediate centroids from M per-subset k-means runs.
+Both algorithms operate on a few-thousand-float tensor, so they run replicated
+("single machine is enough" — paper) but are still jit-compiled and mask-based
+so they compose with the end-to-end pipeline.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("num_clusters",))
+def hierarchical_merge(centroids: jnp.ndarray, num_clusters: int) -> jnp.ndarray:
+    """Algorithm 5: repeatedly replace the closest active pair by its midpoint
+    until only ``num_clusters`` remain.  O(N^3) with N = K*M, run as a
+    fixed-trip ``fori_loop`` over (N - K) merge steps with an active mask.
+
+    Returns (num_clusters, d): the surviving centroids, packed by sorting the
+    active mask (inactive rows pushed to the end and sliced off).
+    """
+    n, d = centroids.shape
+    steps = n - num_clusters
+    if steps <= 0:
+        return centroids[:num_clusters]
+
+    def body(_, carry):
+        c, active = carry
+        d2 = jnp.sum((c[:, None, :] - c[None, :, :]) ** 2, axis=-1)
+        pair_ok = active[:, None] & active[None, :]
+        d2 = jnp.where(pair_ok, d2, jnp.inf)
+        d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)
+        flat = jnp.argmin(d2)
+        i, j = flat // n, flat % n
+        mid = 0.5 * (c[i] + c[j])
+        c = c.at[i].set(mid)
+        active = active.at[j].set(False)
+        return c, active
+
+    c, active = jax.lax.fori_loop(
+        0, steps, body, (centroids, jnp.ones(n, dtype=bool)))
+    # pack the `num_clusters` active rows to the front (stable by index)
+    order = jnp.argsort(~active, stable=True)
+    return c[order][:num_clusters]
+
+
+@jax.jit
+def min_asse_merge(centroid_sets: jnp.ndarray, asses: jnp.ndarray) -> jnp.ndarray:
+    """Paper's minimum-ASSE selection: among the M per-subset centroid sets
+    (M, K, d), return the set whose subset had the lowest average SSE.
+    O(M); "more robust and reliable than hierarchical merging" (Section 3.v).
+    """
+    best = jnp.argmin(asses)
+    return centroid_sets[best]

@@ -1,0 +1,51 @@
+"""Distance / SSE / ASSE metrics shared across the k-means stack.
+
+All functions are pure jnp, jit- and vmap-safe, and accept an optional point
+mask so padded points (used to make subset tensors rectangular) contribute
+nothing to any statistic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distances, (n, d) x (k, d) -> (n, k).
+
+    Uses the ||x||^2 - 2 x.c + ||c||^2 decomposition so the inner product is a
+    single matmul (MXU-friendly; this is also the contraction the Pallas
+    assignment kernel implements).  Clamped at zero against cancellation.
+    """
+    x2 = jnp.sum(points * points, axis=-1, keepdims=True)          # (n, 1)
+    c2 = jnp.sum(centroids * centroids, axis=-1)[None, :]          # (1, k)
+    xc = points @ centroids.T                                      # (n, k)
+    return jnp.maximum(x2 - 2.0 * xc + c2, 0.0)
+
+
+def masked_count(mask: jnp.ndarray | None, n: int) -> jnp.ndarray:
+    if mask is None:
+        return jnp.asarray(n, jnp.float32)
+    return jnp.sum(mask.astype(jnp.float32))
+
+
+def sse(points: jnp.ndarray, centroids: jnp.ndarray,
+        mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Sum of squared errors of each point to its nearest centroid."""
+    d2 = pairwise_sq_dists(points, centroids)
+    m = jnp.min(d2, axis=-1)
+    if mask is not None:
+        m = jnp.where(mask, m, 0.0)
+    return jnp.sum(m)
+
+
+def asse(points: jnp.ndarray, centroids: jnp.ndarray,
+         mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Average SSE (the paper's merge-selection criterion, Section 2.iii.b)."""
+    total = sse(points, centroids, mask)
+    cnt = masked_count(mask, points.shape[0])
+    return total / jnp.maximum(cnt, 1.0)
+
+
+def centroid_shift(new: jnp.ndarray, old: jnp.ndarray) -> jnp.ndarray:
+    """Max euclidean movement over centroids — the paper's stop criterion."""
+    return jnp.max(jnp.sqrt(jnp.sum((new - old) ** 2, axis=-1)))

@@ -1,0 +1,107 @@
+"""PKMeans baseline (Zhao et al. 2009) — the paper's comparison target.
+
+One Lloyd iteration == one MapReduce job: mappers assign points, <=K reducers
+average.  The TPU adaptation keeps the per-iteration global synchronization
+explicit: points are sharded over the flattened mesh axis and every iteration
+performs a ``psum`` of (sums, counts, shift) — that all-reduce is the
+job-per-iteration overhead the paper attacks, and it is what the I/O model and
+the roofline collective term meter.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import metrics
+from repro.core.kmeans import KMeansParams, _assign
+
+
+class PKMeansResult(NamedTuple):
+    centroids: jnp.ndarray     # (k, d)
+    sse: jnp.ndarray           # () total SSE over the full dataset
+    iters: jnp.ndarray         # () int32 — one MapReduce job per iteration
+    converged: jnp.ndarray     # () bool
+
+
+def _local_stats(points, centroids, mask, backend):
+    """Mapper + combiner: local label assignment and partial (sums, counts)."""
+    k = centroids.shape[0]
+    labels, mind = _assign(points, centroids, backend)
+    w = jnp.ones(points.shape[0], points.dtype) if mask is None \
+        else mask.astype(points.dtype)
+    onehot = jax.nn.one_hot(labels, k, dtype=points.dtype) * w[:, None]
+    sums = onehot.T @ points
+    counts = jnp.sum(onehot, axis=0)
+    local_sse = jnp.sum(jnp.where(w > 0.0, mind, 0.0))
+    return sums, counts, local_sse
+
+
+@partial(jax.jit, static_argnames=("params",))
+def pkmeans(points: jnp.ndarray,
+            init_centroids: jnp.ndarray,
+            mask: jnp.ndarray | None = None,
+            params: KMeansParams = KMeansParams()) -> PKMeansResult:
+    """Single-process PKMeans: global Lloyd to convergence.
+
+    Numerically identical to the distributed version (the psum is exact), so
+    this is both the reference and the single-machine-k-means benchmark line
+    used in the paper's Fig 8 / Table 3.
+    """
+    def cond(carry):
+        c, _, it, shift = carry
+        return jnp.logical_and(it < params.max_iters, shift > params.tol)
+
+    def body(carry):
+        c, _, it, _ = carry
+        sums, counts, _ = _local_stats(points, c, mask, params.backend)
+        new_c = jnp.where(counts[:, None] > 0.0,
+                          sums / jnp.maximum(counts[:, None], 1.0), c)
+        return (new_c, c, it + 1, metrics.centroid_shift(new_c, c))
+
+    init = (init_centroids, init_centroids, jnp.int32(0), jnp.asarray(jnp.inf))
+    final_c, _, iters, shift = jax.lax.while_loop(cond, body, init)
+    total = metrics.sse(points, final_c, mask)
+    return PKMeansResult(final_c, total, iters, shift <= params.tol)
+
+
+def pkmeans_sharded(mesh,
+                    axis_names: tuple[str, ...],
+                    params: KMeansParams = KMeansParams()):
+    """Build a shard_map'd PKMeans step for a mesh: points sharded over the
+    flattened ``axis_names``; each Lloyd iteration all-reduces (K*d + K + 1)
+    floats — the explicit per-iteration collective.
+
+    Returns a function (points_sharded, init_centroids, mask) -> PKMeansResult
+    with centroids replicated.
+    """
+    def solve(points, init_centroids, mask):
+        def cond(carry):
+            c, _, it, shift = carry
+            return jnp.logical_and(it < params.max_iters, shift > params.tol)
+
+        def body(carry):
+            c, _, it, _ = carry
+            sums, counts, _ = _local_stats(points, c, mask, params.backend)
+            sums = jax.lax.psum(sums, axis_names)      # <- the "MapReduce job"
+            counts = jax.lax.psum(counts, axis_names)
+            new_c = jnp.where(counts[:, None] > 0.0,
+                              sums / jnp.maximum(counts[:, None], 1.0), c)
+            return (new_c, c, it + 1, metrics.centroid_shift(new_c, c))
+
+        init = (init_centroids, init_centroids, jnp.int32(0),
+                jnp.asarray(jnp.inf))
+        final_c, _, iters, shift = jax.lax.while_loop(cond, body, init)
+        _, _, local_sse = _local_stats(points, final_c, mask, params.backend)
+        total = jax.lax.psum(local_sse, axis_names)
+        return PKMeansResult(final_c, total, iters, shift <= params.tol)
+
+    shard_axes = P(axis_names)
+    return jax.shard_map(
+        solve, mesh=mesh,
+        in_specs=(shard_axes, P(), shard_axes),
+        out_specs=PKMeansResult(P(), P(), P(), P()),
+        check_vma=False)

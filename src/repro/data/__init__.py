@@ -1,0 +1,8 @@
+from repro.data.synthetic import (gaussian_mixture, paper_dataset_3000,
+                                  paper_dataset_15000, initial_centroid_groups)
+from repro.data.pipeline import TokenPipeline, PipelineConfig
+
+__all__ = [
+    "gaussian_mixture", "paper_dataset_3000", "paper_dataset_15000",
+    "initial_centroid_groups", "TokenPipeline", "PipelineConfig",
+]

@@ -1,0 +1,3 @@
+from repro.distributed import compress, runtime, sharding
+
+__all__ = ["compress", "runtime", "sharding"]

@@ -1,0 +1,206 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Parameters carry *logical* axis names (Box aux-data); these rules translate
+them into PartitionSpecs for a concrete mesh.  Per-arch overrides let, e.g.,
+DeepSeek-V3 shard its 256 experts over the full (data x model) mesh
+(expert-parallel degree 256) while mixtral keeps experts replicated and
+shards expert d_ff (tensor-parallel FFN).
+
+Rules degrade gracefully: a logical dim that does not divide by its mesh
+axes, or whose mesh axis is already taken by an earlier dim of the same
+tensor, is replicated — recorded so the dry-run can report what fell back.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Box
+
+# Default logical -> mesh mapping (single- and multi-pod meshes share it;
+# 'pod' joins 'data' for batch / ZeRO axes on the multi-pod mesh).
+BASE_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "expert_ff": ("model",),
+    "experts": ("model",),
+    "rnn": ("model",),
+    "embed": (),            # replicated by default; FSDP rule overrides
+    "head_dim": (),
+    "q_lora": (),
+    "kv_lora": (),
+    "conv": (),
+    "layers": (),           # the scan axis — never sharded
+}
+
+# FSDP/ZeRO: shard the 'embed' dim of params (and optimizer state) over the
+# data axes — required for the >=30B configs to fit 16 GB/chip with AdamW.
+FSDP_RULES = {"embed": ("pod", "data")}
+
+# Row-parallel decode layout: weights sharded on their *contracting* (d)
+# dim, matching the layout GSPMD's solver prefers inside the decode layer
+# scan.  Decode activations are (B,1,d)-tiny, so the per-matmul partial-sum
+# psums cost ~MBs while weight movement drops to zero (§Perf cell B).
+ROW_PARALLEL_RULES = {
+    "embed": ("model",), "heads": (), "kv_heads": (), "ff": (),
+    "expert_ff": (), "rnn": ("model",), "q_lora": (), "kv_lora": (),
+}
+
+# per-arch overrides
+ARCH_RULES: dict[str, dict[str, tuple[str, ...]]] = {
+    # DSv3: 256 experts over the whole mesh => EP=256; expert_ff unsharded
+    "deepseek-v3-671b": {"experts": ("data", "model"), "expert_ff": ()},
+    # multi-pod variant (the 'pod' axis also shards experts: EP=512)
+    "deepseek-v3-671b/multipod": {"experts": ("pod", "data", "model"),
+                                  "expert_ff": ()},
+}
+
+# params >= this many bytes/device replicated => turn on FSDP rules
+FSDP_THRESHOLD_PARAMS = 4e9
+
+
+def rules_for(cfg: ModelConfig, mesh, fsdp: bool | None = None,
+              layout: str = "train") -> dict:
+    rules = dict(BASE_RULES)
+    if layout == "row_parallel":
+        rules.update(ROW_PARALLEL_RULES)
+        fsdp = False
+    if fsdp is None:
+        fsdp = cfg.param_count() >= FSDP_THRESHOLD_PARAMS
+    if fsdp:
+        rules.update(FSDP_RULES)
+    multi = "pod" in mesh.axis_names
+    if cfg.name in ARCH_RULES:
+        rules.update(ARCH_RULES[cfg.name])
+    if multi and f"{cfg.name}/multipod" in ARCH_RULES:
+        rules.update(ARCH_RULES[f"{cfg.name}/multipod"])
+    return rules
+
+
+def spec_for(shape, axes, rules, mesh) -> P:
+    """PartitionSpec for one tensor given its logical axes."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        if logical is None or logical not in rules:
+            parts.append(None)
+            continue
+        cand = tuple(a for a in rules[logical]
+                     if a in mesh_shape and a not in used)
+        size = 1
+        for a in cand:
+            size *= mesh_shape[a]
+        if not cand or size == 1 or dim % size != 0:
+            # try progressively shorter prefixes before giving up
+            ok = ()
+            for cut in range(len(cand) - 1, 0, -1):
+                sub = cand[:cut]
+                s = 1
+                for a in sub:
+                    s *= mesh_shape[a]
+                if s > 1 and dim % s == 0:
+                    ok = sub
+                    break
+            cand = ok
+        if not cand:
+            parts.append(None)
+            continue
+        used.update(cand)
+        parts.append(cand if len(cand) > 1 else cand[0])
+    return P(*parts)
+
+
+def param_shardings(boxed_abstract, cfg: ModelConfig, mesh,
+                    fsdp: bool | None = None, layout: str = "train"):
+    """NamedSharding tree matching a boxed (abstract) param tree.
+
+    Embedding/LM-head tensors (any tensor with a 'vocab' axis) always get
+    the 2-D (vocab x embed) layout even when FSDP is off — the logits
+    matmul is the one place a decode step has train-sized compute, so its
+    sharding must not degrade with the param-layout choice (§Perf cell B).
+    """
+    rules = rules_for(cfg, mesh, fsdp, layout)
+    vocab_rules = dict(rules)
+    vocab_rules.update(FSDP_RULES)
+    if layout == "row_parallel":
+        vocab_rules["vocab"] = ("model",)
+
+    def one(b: Box):
+        r = vocab_rules if "vocab" in b.axes else rules
+        return NamedSharding(mesh, spec_for(b.value.shape, b.axes, r, mesh))
+
+    return jax.tree.map(one, boxed_abstract,
+                        is_leaf=lambda x: isinstance(x, Box))
+
+
+def batch_shardings(batch_abstract, mesh):
+    """Token batches: shard the leading (batch) dim over (pod, data)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims = {a: s for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+        size = 1
+        for a in axes:
+            size *= dims[a]
+        if leaf.shape[0] % size == 0 and size > 1:
+            return NamedSharding(mesh, P(axes, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_abstract)
+
+
+def cache_shardings(cache_abstract, cfg: ModelConfig, mesh, batch: int):
+    """Decode-cache shardings: batch dim over (pod,data) when divisible,
+    head-like dims over model; long-context batch=1 falls back to sharding
+    the large interior dim (sequence/width) over the data axes."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh_shape)
+    data_size = 1
+    for a in data_axes:
+        data_size *= mesh_shape[a]
+    model = mesh_shape.get("model", 1)
+
+    def one(leaf):
+        shape = leaf.shape
+        parts = [None] * leaf.ndim
+        # locate batch dim: first dim equal to `batch` (possibly after a
+        # stacked-layer leading dim)
+        bdim = None
+        for i, s in enumerate(shape[:2]):
+            if s == batch:
+                bdim = i
+                break
+        if bdim is not None and batch % data_size == 0 and data_size > 1:
+            parts[bdim] = data_axes if len(data_axes) > 1 else data_axes[0]
+            placed_data = True
+        else:
+            placed_data = False
+        # shard the biggest remaining dim over model (then data if unused)
+        order = sorted(range(leaf.ndim), key=lambda i: -shape[i])
+        model_used = False
+        for i in order:
+            if parts[i] is not None or i == bdim:
+                continue
+            if not model_used and model > 1 and shape[i] % model == 0 \
+                    and shape[i] >= model:
+                parts[i] = "model"
+                model_used = True
+            elif not placed_data and data_size > 1 \
+                    and shape[i] % data_size == 0 and shape[i] >= data_size:
+                parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                placed_data = True
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, cache_abstract)
+
+
+def replicated(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree,
+                        is_leaf=lambda x: isinstance(x, Box))

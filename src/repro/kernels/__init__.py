@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the k-means hot-spots (assignment + update)."""
+from repro.kernels import ops, ref
+from repro.kernels.assign import assign_pallas
+from repro.kernels.centroid_update import centroid_update_pallas
+
+__all__ = ["ops", "ref", "assign_pallas", "centroid_update_pallas"]

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: weighted centroid accumulation (segment-sum).
+
+The Lloyd update is a segment-sum of points by label.  Scatter-adds are
+VPU-serial on TPU; the MXU-native formulation is a one-hot matmul:
+
+    sums   = onehot(labels)^T @ X        (k x bn) @ (bn x d)
+    counts = sum(onehot(labels), axis=0)
+
+Grid streams n-tiles through VMEM; the (k, d) output block is revisited every
+step and accumulated in place (k is small for k-means, so the whole output
+fits VMEM).  Padded points carry weight 0 and padded labels point at row k
+(sliced off by the wrapper), so no masking branch is needed in the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(x_ref, lab_ref, w_ref, sums_ref, counts_ref, *, k_pad: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                     # (bn, d)
+    lab = lab_ref[...]                                     # (bn,)
+    w = w_ref[...].astype(jnp.float32)                     # (bn,)
+
+    onehot = (lab[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (lab.shape[0], k_pad), 1)).astype(jnp.float32)
+    onehot = onehot * w[:, None]
+
+    local_sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    local_counts = jnp.sum(onehot, axis=0)[None, :]        # (1, k_pad)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = local_sums
+        counts_ref[...] = local_counts
+
+    @pl.when(i > 0)
+    def _accumulate():
+        sums_ref[...] += local_sums
+        counts_ref[...] += local_counts
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def centroid_update_pallas(points: jnp.ndarray,
+                           labels: jnp.ndarray,
+                           weights: jnp.ndarray,
+                           k: int,
+                           *,
+                           block_n: int = 512,
+                           interpret: bool = False):
+    """(n,d),(n,),(n,) -> sums (k,d) f32, counts (k,) f32."""
+    n, d = points.shape
+    bn = min(block_n, max(8, n))
+    n_pad = -(-n // bn) * bn
+    d_pad = max(-(-d // 128) * 128, 128)
+    k_pad = max(-(-(k + 1) // 8) * 8, 8)    # +1 trash row for padded points
+
+    x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
+    lab = jnp.full((n_pad,), k, jnp.int32).at[:n].set(labels.astype(jnp.int32))
+    w = jnp.zeros((n_pad,), jnp.float32).at[:n].set(weights.astype(jnp.float32))
+
+    grid = (n_pad // bn,)
+    sums, counts = pl.pallas_call(
+        functools.partial(_update_kernel, k_pad=k_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k_pad, d_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, k_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, lab, w)
+
+    return sums[:k, :d], counts[0, :k]

@@ -1,0 +1,40 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On the TPU target the kernels compile natively; on this CPU container they
+execute via ``interpret=True`` (Pallas's Python interpreter), which is what
+the correctness sweeps in tests/test_kernels.py exercise against ref.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.assign import assign_pallas
+from repro.kernels.centroid_update import centroid_update_pallas
+from repro.kernels import ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def assign(points, centroids, *, block_n: int = 256, block_k: int = 128,
+           interpret: bool | None = None):
+    """Nearest-centroid labels + min squared distances via the Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return assign_pallas(points, centroids, block_n=block_n,
+                         block_k=block_k, interpret=interpret)
+
+
+def centroid_update(points, labels, weights, k: int, *, block_n: int = 512,
+                    interpret: bool | None = None):
+    """Weighted per-cluster (sums, counts) via the Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return centroid_update_pallas(points, labels, weights, k,
+                                  block_n=block_n, interpret=interpret)
+
+
+# re-export oracles so callers can switch implementations uniformly
+assign_ref = ref.assign_ref
+centroid_update_ref = ref.centroid_update_ref

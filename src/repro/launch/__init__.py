@@ -1,0 +1,3 @@
+from repro.launch import mesh, specs
+
+__all__ = ["mesh", "specs"]

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (the XLA_FLAGS line above runs before any
+other import, because jax locks the device count on first init).  For each
+cell it:
+
+  1. builds the production mesh (16x16, or 2x16x16 with --multi-pod),
+  2. builds abstract params / optimizer state / inputs (ShapeDtypeStruct —
+     nothing is allocated),
+  3. ``jit(step).lower(...).compile()`` with full in/out shardings,
+  4. records cost_analysis (FLOPs, bytes), memory_analysis (per-device
+     bytes) and the collective-bytes tally parsed from the optimized HLO,
+  5. writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.distributed import sharding as shlib
+from repro.launch import specs as speclib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.launch.train import make_train_step
+from repro.models import registry
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# v5e hardware constants (per chip) for the roofline terms
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 2 * 50e9            # ~2 links' worth of effective ring bandwidth
+
+_COLL_RE = re.compile(
+    r"(\w+\[[^\]]*\])[\w\s,()\{\}]*?=\s*(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|s32|u32|s64|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8}
+
+
+def _shape_bytes(txt: str) -> int:
+    m = _SHAPE_RE.match(txt)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _parse_computations(hlo_text: str):
+    """{computation_name: [op lines]} from optimized HLO text."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for raw in hlo_text.splitlines():
+        if not raw.startswith(" ") and "{" in raw and "->" in raw:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", raw.strip())
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if raw.startswith("}"):
+            current = None
+            continue
+        if current is not None and raw.strip():
+            comps[current].append(raw.strip())
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Scan loops compare an induction var against one integer constant;
+    dynamic (convergence) loops have compound conditions -> count once."""
+    compares = [l for l in cond_lines if " compare(" in l]
+    if len(compares) != 1 or any(" and(" in l for l in cond_lines):
+        return 1
+    consts = []
+    for l in cond_lines:
+        m = re.search(r"constant\((\d+)\)", l)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts and max(consts) <= 1_000_000 else 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Effective collective bytes: per-op result bytes, multiplied by the
+    trip counts of enclosing (scan-style) while loops via the call graph."""
+    comps = _parse_computations(hlo_text)
+    entry = None
+    for raw in hlo_text.splitlines():
+        if raw.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", raw)
+            entry = m.group(1) if m else None
+    if entry is None or entry not in comps:        # fallback: flat scan
+        entry = max(comps, key=lambda c: len(comps[c]), default=None)
+
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+
+    def visit(comp: str, mult: int, seen: tuple):
+        if comp not in comps or comp in seen:
+            return
+        for line in comps[comp]:
+            m = re.match(
+                r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\))|"
+                r"(?:\w+\[[^\]]*\][^\s]*))\s+([\w\-]+)", line)
+            op = m.group(2) if m else ""
+            if op in _COLL_OPS:
+                nbytes = sum(_shape_bytes(s) for s in
+                             re.findall(r"\w+\[[\d,]*\]", m.group(1)))
+                out[op] = out.get(op, 0) + nbytes * mult
+                count[op] = count.get(op, 0) + 1
+                continue
+            wm = re.search(r"while\(.*?body=%?([\w.\-]+)", line)
+            if wm:
+                # XLA annotates statically-counted loops (scan) with
+                # known_trip_count; dynamic (convergence) loops lack it and
+                # count once (flagged in EXPERIMENTS.md methodology)
+                tm = re.search(r'known_trip_count[^\d]*(\d+)', line)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    cm = re.search(r"condition=%?([\w.\-]+)", line)
+                    trips = _trip_count(comps.get(cm.group(1), [])) if cm else 1
+                visit(wm.group(1), mult * max(trips, 1), seen + (comp,))
+                continue
+            for key in ("to_apply=", "calls="):
+                km = re.search(key + r"%?([\w.\-]+)", line)
+                if km and km.group(1) in comps:
+                    visit(km.group(1), mult, seen + (comp,))
+            bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    visit(b.strip().lstrip("%"), mult, seen + (comp,))
+
+    visit(entry, 1, ())
+    out["_counts"] = count
+    return out
+
+
+def _mesh_cells(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               include_optimizer: bool = True, cfg=None, overrides=None,
+               fsdp: bool | None = None, layout: str = "train"):
+    """Lower+compile one cell; returns the result record dict."""
+    cfg = cfg or get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = _mesh_cells(mesh)
+    boxed = registry.abstract_params(cfg)
+    p_shard = shlib.param_shardings(boxed, cfg, mesh, fsdp=fsdp,
+                                    layout=layout)
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "x".join(map(str, mesh.devices.shape)),
+              "n_devices": n_dev, "status": "ok"}
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            adamw_cfg = optim.AdamWConfig(
+                state_dtype="bfloat16" if cfg.param_count() > 5e10
+                else "float32")
+            opt_abstract = jax.eval_shape(
+                lambda p: optim.init(p, adamw_cfg), boxed)
+            # optimizer state mirrors param shardings (ZeRO via FSDP rules)
+            o_shard = optim.AdamWState(
+                count=NamedSharding(mesh, P()), m=p_shard, v=p_shard)
+            batch_abs = speclib.train_batch_specs(cfg, shape)
+            b_shard = shlib.batch_shardings(batch_abs, mesh)
+            step = make_train_step(cfg, adamw_cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard,
+                              NamedSharding(mesh, P())),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(boxed, opt_abstract, batch_abs,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            batch_abs = speclib.prefill_specs(cfg, shape)
+            b_shard = shlib.batch_shardings(batch_abs, mesh)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(boxed, batch_abs)
+        else:  # decode
+            caches_abs = speclib.abstract_decode_caches(cfg, shape)
+            c_shard = shlib.cache_shardings(caches_abs, cfg, mesh,
+                                            shape.global_batch)
+            dec = speclib.decode_specs(cfg, shape)
+            step = make_decode_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard,
+                              shlib.batch_shardings(
+                                  {"t": dec["tokens"]}, mesh)["t"],
+                              NamedSharding(mesh, P())),
+                donate_argnums=(1,))
+            lowered = jitted.lower(boxed, caches_abs, dec["tokens"],
+                                   dec["pos"])
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+    cost = compiled.cost_analysis() or {}
+    record["flops"] = float(cost.get("flops", 0.0))
+    record["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                record[k] = int(v)
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    record["collective_bytes"] = {k: v for k, v in coll.items()
+                                  if k != "_counts"}
+    record["collective_counts"] = coll.get("_counts", {})
+    record["hlo_chars"] = len(txt)
+
+    # roofline terms (seconds) — cost_analysis flops are whole-program,
+    # executed per device under SPMD: per-device flops = flops (XLA reports
+    # the per-module count after partitioning)
+    total_coll = sum(v for k, v in record["collective_bytes"].items())
+    record["roofline"] = {
+        "compute_s": record["flops"] / PEAK_FLOPS,
+        "memory_s": record["bytes_accessed"] / HBM_BW,
+        "collective_s": total_coll / ICI_BW,
+    }
+    dom = max(record["roofline"], key=record["roofline"].get)
+    record["roofline"]["dominant"] = dom
+
+    # model-level FLOPs for the usefulness ratio
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else (shape.seq_len if shape.kind == "prefill" else 1))
+    mult = 6 if shape.kind == "train" else 2
+    record["model_flops_global"] = float(mult * n_active * tokens)
+    record["model_flops_per_device"] = record["model_flops_global"] / n_dev
+    record["params"] = int(n_params)
+    record["active_params"] = int(n_active)
+    return record
+
+
+def run_cell(arch, shape_name, multi_pod, force=False, out_dir=OUT_DIR,
+             tag=""):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    name = f"{arch}__{shape_name}__{mesh_tag}{tag}.json"
+    path = out_dir / name
+    if path.exists() and not force:
+        print(f"[dryrun] cached {name}")
+        return json.loads(path.read_text())
+    print(f"[dryrun] lowering {arch} x {shape_name} x {mesh_tag} ...",
+          flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    path.write_text(json.dumps(rec, indent=2))
+    status = rec.get("status")
+    extra = "" if status != "ok" else (
+        f" flops={rec['flops']:.3e} dom={rec['roofline']['dominant']}"
+        f" compile={rec['compile_s']}s")
+    print(f"[dryrun] {name}: {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = 0
+        for arch in ARCHS:
+            for shape_name in SHAPES:
+                rec = run_cell(arch, shape_name, args.multi_pod,
+                               force=args.force)
+                failures += rec.get("status") == "error"
+        sys.exit(1 if failures else 0)
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod, force=args.force)
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                     indent=2))
+    sys.exit(0 if rec.get("status") in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

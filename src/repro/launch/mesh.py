@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+device query, and tests/benches must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(shape=None, axes=("data",)):
+    """Whatever devices the current process actually has (tests/examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n,)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def flat_axis_names(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,55 @@
+"""Abstract input stand-ins (ShapeDtypeStruct) for every (arch x shape) cell.
+
+The same pattern shannon/kernels uses: weak-type-correct, shardable, zero
+device allocation — what ``jit.lower`` consumes in the dry-run.  Modality
+frontends are stubs: audio supplies precomputed frame embeddings at a 2:1
+frame:token ratio cap (seq capped at 4096 frames for enc-dec cells).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if cfg.is_encdec or cfg.frontend == "audio_frames":
+        enc_len = min(s, 4096)
+        batch["embeds"] = jax.ShapeDtypeStruct(
+            (b, enc_len, cfg.d_model), jnp.bfloat16 if cfg.dtype == "bfloat16"
+            else jnp.float32)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        # encoder consumes frames; decoder prefills tokens
+        return {"embeds": jax.ShapeDtypeStruct(
+                    (b, min(s, 4096), cfg.d_model),
+                    jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(tokens (B,1), pos ()) — caches are built separately (abstract)."""
+    b = shape.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_decode_caches(cfg: ModelConfig, shape: ShapeSpec):
+    from repro.models import registry
+    b, s = shape.global_batch, shape.seq_len
+    enc_len = min(s, 4096) if cfg.is_encdec else 0
+    return jax.eval_shape(
+        lambda: registry.init_decode_caches(cfg, b, s, enc_len))

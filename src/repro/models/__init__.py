@@ -1,0 +1,5 @@
+from repro.models import (attention, common, encdec, mla, moe, recurrent,
+                          registry, transformer, xlstm)
+
+__all__ = ["attention", "common", "encdec", "mla", "moe", "recurrent",
+           "registry", "transformer", "xlstm"]

@@ -1,0 +1,203 @@
+"""Attention: GQA with dense / chunked(flash-style) / windowed / decode paths.
+
+``chunked_attention`` is the production path for long sequences: an online-
+softmax two-level scan (q-chunks outer, kv-chunks inner) that never
+materializes the (S x T) score matrix — O(S * kv_chunk) live memory, which is
+what makes the 32k-prefill dry-run cells memory-sane.  The sliding-window
+path only visits the ceil(window/kv_chunk)+1 kv chunks a q-chunk can see, so
+SWA prefill does O(S * window) work, not O(S^2).
+
+``dense_attention`` is the oracle the chunked path is tested against.
+
+Supports Dq != Dv (needed by MLA whose keys are 192-wide but values 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_heads(q, num_kv_heads):
+    """(B,S,H,D) -> (B,S,Hk,G,D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv_heads, h // num_kv_heads, d)
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    q_offset=0):
+    """Reference attention.  q (B,S,H,Dq), k (B,T,Hk,Dq), v (B,T,Hk,Dv).
+
+    ``q_offset``: global position of q[0] (for decode-style suffix queries).
+    """
+    b, s, h, dq = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else dq ** -0.5
+    qh = _split_heads(q, hk).astype(jnp.float32)
+    s_mat = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k.astype(jnp.float32)) * scale
+    rows = q_offset + jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s_mat = jnp.where(mask[None, None, None], s_mat, NEG_INF)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def _online_update(carry, s_blk, v_blk):
+    """One online-softmax accumulation step.
+    carry: (acc (..,q,Dv), row_max (..,q), row_sum (..,q));
+    s_blk: (.., q, kblk) scores (already masked), v_blk (B,kblk,Hk,Dv)."""
+    acc, row_max, row_sum = carry
+    blk_max = jnp.max(s_blk, axis=-1)
+    new_max = jnp.maximum(row_max, blk_max)
+    corr = jnp.exp(row_max - new_max)
+    p = jnp.exp(s_blk - new_max[..., None])                  # (b,hk,g,q,kblk)
+    row_sum = row_sum * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+    acc = acc * corr[..., None] + pv
+    return acc, new_max, row_sum
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_chunk", "kv_chunk", "scale"))
+def chunked_attention(q, k, v, *, causal=True, window=None,
+                      q_chunk=512, kv_chunk=512, scale=None):
+    """Flash-style attention.  Same contract as dense_attention (q_offset=0,
+    S == T self-attention)."""
+    b, s, h, dq = q.shape
+    t, hk, dv = k.shape[1], k.shape[2], v.shape[-1]
+    assert s == t, "chunked_attention is for self-attention (S == T)"
+    scale = scale if scale is not None else dq ** -0.5
+    g = h // hk
+
+    cq = min(q_chunk, s)
+    ck = min(kv_chunk, t)
+    s_pad = -(-s // cq) * cq
+    t_pad = -(-t // ck) * ck
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+
+    nq, nk = s_pad // cq, t_pad // ck
+    # (Nq, B, cq, Hk, G, Dq) — scan carries one q-chunk at a time
+    q_chunks = qp.reshape(b, nq, cq, hk, g, dq).transpose(1, 0, 2, 3, 4, 5)
+    k_chunks = kp.reshape(b, nk, ck, hk, dq).transpose(1, 0, 2, 3, 4)
+    v_chunks = vp.reshape(b, nk, ck, hk, dv).transpose(1, 0, 2, 3, 4)
+
+    rows_in_chunk = jnp.arange(cq)
+    cols_in_chunk = jnp.arange(ck)
+
+    def elem_mask(qi, kj):
+        rows = qi * cq + rows_in_chunk[:, None]            # (cq, 1)
+        cols = kj * ck + cols_in_chunk[None, :]            # (1, ck)
+        m = cols < t                                       # mask kv padding
+        if causal:
+            m &= cols <= rows
+        if window is not None:
+            m &= cols > rows - window
+        return m                                           # (cq, ck)
+
+    def scores(qc, kc):
+        return jnp.einsum("bqhgd,bkhd->bhgqk",
+                          qc.astype(jnp.float32),
+                          kc.astype(jnp.float32)) * scale
+
+    if window is None:
+        # full/causal: stream every kv chunk past each q chunk
+        def q_body(_, qi_qc):
+            qi, qc = qi_qc
+
+            def kv_body(carry, kj_kc_vc):
+                kj, kc, vc = kj_kc_vc
+                s_blk = scores(qc, kc)
+                s_blk = jnp.where(elem_mask(qi, kj)[None, None, None],
+                                  s_blk, NEG_INF)
+                return _online_update(carry, s_blk, vc), None
+
+            acc0 = jnp.zeros((b, hk, g, cq, dv), jnp.float32)
+            m0 = jnp.full((b, hk, g, cq), NEG_INF, jnp.float32)
+            s0 = jnp.zeros((b, hk, g, cq), jnp.float32)
+            (acc, _, rs), _ = jax.lax.scan(
+                kv_body, (acc0, m0, s0),
+                (jnp.arange(nk), k_chunks, v_chunks))
+            out = acc / jnp.maximum(rs[..., None], 1e-30)
+            return None, out
+
+        _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), q_chunks))
+    else:
+        # sliding window: q chunk qi needs cols [qi*cq - window + 1,
+        # qi*cq + cq - 1], i.e. at most this many kv chunks (chunk grids of
+        # q and kv need not be aligned):
+        n_chunks = -(-(window + cq - 1) // ck) + 1
+
+        def q_body(_, qi_qc):
+            qi, qc = qi_qc
+            kj_hi = (qi * cq + cq - 1) // ck               # diagonal kv chunk
+            acc0 = jnp.zeros((b, hk, g, cq, dv), jnp.float32)
+            m0 = jnp.full((b, hk, g, cq), NEG_INF, jnp.float32)
+            s0 = jnp.zeros((b, hk, g, cq), jnp.float32)
+
+            def off_body(carry, off):
+                kj = kj_hi - off
+                kj_c = jnp.clip(kj, 0, nk - 1)
+                kc = jax.lax.dynamic_index_in_dim(k_chunks, kj_c, 0, False)
+                vc = jax.lax.dynamic_index_in_dim(v_chunks, kj_c, 0, False)
+                s_blk = scores(qc, kc)
+                m = elem_mask(qi, kj_c) & (kj >= 0) & (kj < nk)
+                s_blk = jnp.where(m[None, None, None], s_blk, NEG_INF)
+                return _online_update(carry, s_blk, vc), None
+
+            (acc, _, rs), _ = jax.lax.scan(
+                off_body, (acc0, m0, s0), jnp.arange(n_chunks))
+            out = acc / jnp.maximum(rs[..., None], 1e-30)
+            return None, out
+
+        _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), q_chunks))
+
+    # (Nq, B, Hk, G, cq, Dv) -> (B, S, H, Dv)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s_pad, h, dv)
+    return out[:, :s].astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None,
+              q_chunk=512, kv_chunk=1024, dense_below=1024):
+    """Dispatch: dense for short sequences, chunked beyond."""
+    if q.shape[1] <= dense_below:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               scale=scale)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk, scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, kv_positions, pos, *,
+                     window=None, scale=None):
+    """Single-token decode vs. a (ring-)cache.
+
+    q (B,1,H,Dq); caches (B,T,Hk,D*); kv_positions (B,T) i32 — the global
+    position each cache slot holds (-1 = empty; ring caches wrap);
+    pos () or (B,) i32 current position.  Returns (B,1,H,Dv).
+    """
+    b, _, h, dq = q.shape
+    hk = k_cache.shape[2]
+    scale = scale if scale is not None else dq ** -0.5
+    qh = _split_heads(q, hk).astype(jnp.float32)           # (B,1,Hk,G,Dq)
+    s_mat = jnp.einsum("bqhgd,bthd->bhgqt", qh,
+                       k_cache.astype(jnp.float32)) * scale
+    pos = jnp.asarray(pos)
+    pos_b = pos if pos.ndim else pos[None].repeat(b, 0)    # (B,)
+    valid = (kv_positions >= 0) & (kv_positions <= pos_b[:, None])
+    if window is not None:
+        valid &= kv_positions > (pos_b[:, None] - window)
+    s_mat = jnp.where(valid[:, None, None, None, :], s_mat, NEG_INF)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bhgqt,bthd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)

@@ -1,0 +1,181 @@
+"""Model substrate: boxed params with logical sharding axes, norms, RoPE.
+
+Every parameter is created through :func:`param`, which attaches a tuple of
+*logical axis names* (``'embed'``, ``'heads'``, ``'ff'``, ...) as pytree
+aux-data.  ``unbox`` splits a boxed tree into (values, axes); axes map to mesh
+axes through per-arch sharding rules (distributed/sharding.py).  Because axes
+ride in aux-data, ``jax.eval_shape`` over an init function yields abstract
+params *with* their sharding — that is what the multi-pod dry-run consumes
+(no parameter is ever materialized for the full-size configs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class Box:
+    """A parameter leaf + its logical sharding axes (aux-data)."""
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Box(shape={shape}, axes={self.axes})"
+
+
+def _is_box(x):
+    return isinstance(x, Box)
+
+
+def unbox(tree):
+    """Boxed tree -> (param values, logical axes tree)."""
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=_is_box)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_box)
+    return values, axes
+
+
+def boxed_like(values, axes):
+    """Re-attach axes to a value tree (inverse of unbox)."""
+    return jax.tree.map(Box, values, axes,
+                        is_leaf=lambda x: x is None)
+
+
+def stack_axes(boxed_tree, axis_name: str = "layers"):
+    """Prepend a logical axis to every Box after a vmap-stacking init.
+
+    vmap adds the leading (layer) dim to Box *values* but aux-data axes
+    pass through unchanged — without this fix-up every stacked tensor's
+    sharding spec is off by one dimension.
+    """
+    return jax.tree.map(lambda b: Box(b.value, (axis_name,) + b.axes),
+                        boxed_tree, is_leaf=_is_box)
+
+
+def param(key, shape, axes, dtype=jnp.float32, init="normal", scale=None):
+    """Create one boxed parameter.
+
+    init: 'normal' (trunc-normal, fan-in scaled unless ``scale``), 'zeros',
+    'ones', 'embed' (normal 1.0 scaled by ``scale`` or 0.02).
+    """
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+            scale = fan_in ** -0.5 if init == "normal" else 0.02
+        v = (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+             * scale).astype(dtype)
+    return Box(v, axes)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ----------------------------- norms -----------------------------
+
+def rmsnorm(x, weight, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, weight, eps=1e-5):
+    """Bias-free LayerNorm (command-r style)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x - jnp.mean(x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def norm_init(key, d, kind):
+    if kind == "rmsnorm":
+        return param(key, (d,), ("embed",), init="zeros")
+    return param(key, (d,), ("embed",), init="ones")
+
+
+def apply_norm(x, w, kind):
+    return rmsnorm(x, w) if kind == "rmsnorm" else layernorm(x, w)
+
+
+# ----------------------------- RoPE -----------------------------
+
+def rope_freqs(head_dim, theta=10_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta=10_000.0):
+    """x: (..., S, H, Dh) with positions (..., S) — interleaved-pair RoPE."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ----------------------------- misc -----------------------------
+
+def shard(x, *mesh_axes):
+    """Best-effort activation sharding constraint by positional mesh axes.
+
+    ``mesh_axes`` entries are mesh-axis names (or None/tuples); ignored when
+    no mesh is active so model code runs identically on a single device.
+    """
+    from jax.sharding import PartitionSpec as P
+    try:
+        env_mesh = jax.sharding.get_abstract_mesh()
+        if env_mesh is None or not env_mesh.shape:
+            return x
+        valid = set(env_mesh.axis_names)
+        fixed = []
+        for a in mesh_axes:
+            if a is None:
+                fixed.append(None)
+            elif isinstance(a, tuple):
+                names = tuple(n for n in a if n in valid)
+                fixed.append(names if names else None)
+            else:
+                fixed.append(a if a in valid else None)
+        return jax.lax.with_sharding_constraint(x, P(*fixed))
+    except Exception:
+        return x
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: silu(x @ Wg) * (x @ Wu) @ Wd."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def cross_entropy_loss(logits, labels, mask):
+    """Mean token cross-entropy in f32. logits (..., V), labels (...) i32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,194 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional dense layers over precomputed modality-frontend
+embeddings (the audio frontend is a STUB per the assignment — input_specs
+provides (B, S_enc, d) frame embeddings).  Decoder: causal self-attention +
+cross-attention to the encoder memory + SwiGLU, with KV caching for decode
+(cross K/V computed once at prefill and frozen).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.common import (apply_norm, apply_rope, norm_init, param,
+                                 split_keys, shard)
+from repro.models.transformer import (_attn_sublayer, _dtype, _mlp, init_attn,
+                                      init_mlp)
+
+
+def init_encdec_params(key, cfg: ModelConfig):
+    ks = split_keys(key, 8)
+    dt = _dtype(cfg)
+
+    def enc_layer(k):
+        kk = split_keys(k, 4)
+        return {"norm1": norm_init(kk[0], cfg.d_model, cfg.norm),
+                "attn": init_attn(kk[1], cfg),
+                "norm2": norm_init(kk[2], cfg.d_model, cfg.norm),
+                "ffn": init_mlp(kk[3], cfg)}
+
+    def dec_layer(k):
+        kk = split_keys(k, 6)
+        return {"norm1": norm_init(kk[0], cfg.d_model, cfg.norm),
+                "self_attn": init_attn(kk[1], cfg),
+                "norm_x": norm_init(kk[2], cfg.d_model, cfg.norm),
+                "cross_attn": init_attn(kk[3], cfg),
+                "norm2": norm_init(kk[4], cfg.d_model, cfg.norm),
+                "ffn": init_mlp(kk[5], cfg)}
+
+    enc_keys = jnp.stack(split_keys(ks[0], cfg.encoder_layers))
+    dec_keys = jnp.stack(split_keys(ks[1], cfg.num_layers))
+    from repro.models.common import stack_axes
+    return {
+        "embed": param(ks[2], (cfg.vocab_size, cfg.d_model),
+                       ("vocab", "embed"), dtype=dt, init="embed"),
+        "enc_layers": stack_axes(jax.vmap(enc_layer)(enc_keys)),
+        "enc_norm": norm_init(ks[3], cfg.d_model, cfg.norm),
+        "dec_layers": stack_axes(jax.vmap(dec_layer)(dec_keys)),
+        "dec_norm": norm_init(ks[4], cfg.d_model, cfg.norm),
+        "lm_head": param(ks[5], (cfg.d_model, cfg.vocab_size),
+                         ("embed", "vocab"), dtype=dt),
+    }
+
+
+def _cross_attention(p, x, mem_k, mem_v, cfg):
+    """Cross-attention with precomputed encoder memory K/V (B,T,Hk,Dh)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].value)
+    o = attn_lib.dense_attention(q, mem_k, mem_v, causal=False) \
+        if q.shape[1] <= 1024 else \
+        _chunked_cross(q, mem_k, mem_v, cfg)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"].value)
+
+
+def _chunked_cross(q, k, v, cfg):
+    # non-causal cross attention with S != T: chunk q only
+    b, s, h, dh = q.shape
+    cq = min(cfg.q_chunk, s)
+    s_pad = -(-s // cq) * cq
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    qs = qp.reshape(b, s_pad // cq, cq, h, dh).swapaxes(0, 1)
+    outs = jax.lax.map(
+        lambda qc: attn_lib.dense_attention(qc, k, v, causal=False), qs)
+    return outs.swapaxes(0, 1).reshape(b, s_pad, h, dh)[:, :s]
+
+
+def encode(params, embeds, cfg: ModelConfig):
+    """Frontend embeddings (B,S,d) -> encoder memory (B,S,d)."""
+    x = embeds.astype(_dtype(cfg))
+    x = shard(x, ("pod", "data"), None, None)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, lp):
+        h = apply_norm(x, lp["norm1"].value, cfg.norm)
+        q = jnp.einsum("bsd,dhe->bshe", h, lp["attn"]["wq"].value)
+        k = jnp.einsum("bsd,dhe->bshe", h, lp["attn"]["wk"].value)
+        v = jnp.einsum("bsd,dhe->bshe", h, lp["attn"]["wv"].value)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attn_lib.attention(q, k, v, causal=False,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["attn"]["wo"].value)
+        x = x + _mlp(lp["ffn"], apply_norm(x, lp["norm2"].value, cfg.norm))
+        return x, None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) \
+        if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return apply_norm(x, params["enc_norm"].value, cfg.norm)
+
+
+def _memory_kv(params, memory, cfg):
+    """Precompute cross-attention K/V per decoder layer (stacked (L,...))."""
+    def one(lp):
+        k = jnp.einsum("btd,dhe->bthe", memory, lp["cross_attn"]["wk"].value)
+        v = jnp.einsum("btd,dhe->bthe", memory, lp["cross_attn"]["wv"].value)
+        return k, v
+    return jax.vmap(one)(params["dec_layers"])
+
+
+def decode_train(params, tokens, memory, cfg: ModelConfig):
+    """Teacher-forced decoder pass.  Returns logits (B,S,V)."""
+    x = (params["embed"].value[tokens] * cfg.embed_scale).astype(_dtype(cfg))
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    mem_k, mem_v = _memory_kv(params, memory, cfg)
+
+    def body(x, xs):
+        lp, mk, mv = xs
+        h = apply_norm(x, lp["norm1"].value, cfg.norm)
+        attn_out, _ = _attn_sublayer(lp["self_attn"], h, positions, cfg,
+                                     window=None)
+        x = x + attn_out
+        hx = apply_norm(x, lp["norm_x"].value, cfg.norm)
+        x = x + _cross_attention(lp["cross_attn"], hx, mk, mv, cfg)
+        x = x + _mlp(lp["ffn"], apply_norm(x, lp["norm2"].value, cfg.norm))
+        return x, None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) \
+        if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, (params["dec_layers"], mem_k, mem_v))
+    x = apply_norm(x, params["dec_norm"].value, cfg.norm)
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"].value)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    from repro.models.common import cross_entropy_loss
+    memory = encode(params, batch["embeds"], cfg)
+    logits = decode_train(params, batch["tokens"], memory, cfg)
+    ce = cross_entropy_loss(logits, batch["labels"], batch["mask"])
+    return ce, {"ce": ce}
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       enc_len: int):
+    dt = _dtype(cfg)
+    hk, dh = cfg.num_kv_heads, cfg.head_dim_
+    L = cfg.num_layers
+    return {
+        "self_k": jnp.zeros((L, batch, max_len, hk, dh), dt),
+        "self_v": jnp.zeros((L, batch, max_len, hk, dh), dt),
+        "kv_pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "mem_k": jnp.zeros((L, batch, enc_len, hk, dh), dt),
+        "mem_v": jnp.zeros((L, batch, enc_len, hk, dh), dt),
+    }
+
+
+def prefill_memory(params, memory, caches, cfg):
+    mem_k, mem_v = _memory_kv(params, memory, cfg)
+    return {**caches, "mem_k": mem_k, "mem_v": mem_v}
+
+
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
+    """One decoder token against cached self/cross KV."""
+    b = tokens.shape[0]
+    x = (params["embed"].value[tokens] * cfg.embed_scale).astype(_dtype(cfg))
+    positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+    kv_pos = jax.lax.dynamic_update_slice_in_dim(
+        caches["kv_pos"], jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32),
+        jnp.asarray(pos), 1)
+
+    def body(x, xs):
+        lp, sk, sv, mk, mv = xs
+        h = apply_norm(x, lp["norm1"].value, cfg.norm)
+        attn_out, new_kv = _attn_sublayer(
+            lp["self_attn"], h, positions, cfg, window=None,
+            cache={"k": sk, "v": sv, "kv_pos": kv_pos})
+        x = x + attn_out
+        hx = apply_norm(x, lp["norm_x"].value, cfg.norm)
+        x = x + _cross_attention(lp["cross_attn"], hx, mk, mv, cfg)
+        x = x + _mlp(lp["ffn"], apply_norm(x, lp["norm2"].value, cfg.norm))
+        return x, (new_kv["k"], new_kv["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], caches["self_k"], caches["self_v"],
+                  caches["mem_k"], caches["mem_v"]))
+    x = apply_norm(x, params["dec_norm"].value, cfg.norm)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].value)
+    new_caches = {**caches, "self_k": nk, "self_v": nv, "kv_pos": kv_pos}
+    return logits, new_caches

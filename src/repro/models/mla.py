@@ -1,0 +1,106 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Keys/values are stored as a single low-rank latent ``c_kv`` (kv_lora_rank
+wide, 512 for DSv3) plus a tiny shared RoPE key — so the decode KV cache is
+(512 + 64) floats/token instead of 2 * H * Dh = 32768: a 56x cache shrink,
+which is what makes the decode_32k roofline memory term move.
+
+Train/prefill uses the expanded form (chunked flash attention); decode uses
+the *absorbed* form (q projected through W_uk into latent space, attention
+performed directly against the latent cache, output re-expanded via W_uv).
+Tests assert absorbed-decode == expanded attention at the last position.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models import attention as attn_lib
+from repro.models.common import apply_rope, param, rmsnorm, split_keys
+
+
+def init_mla(key, d_model: int, num_heads: int, mla: MLAConfig, dtype):
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    ks = split_keys(key, 9)
+    return {
+        "w_dq": param(ks[0], (d_model, mla.q_lora_rank), ("embed", "q_lora"), dtype=dtype),
+        "q_norm": param(ks[1], (mla.q_lora_rank,), ("q_lora",), init="zeros"),
+        "w_uq": param(ks[2], (mla.q_lora_rank, num_heads, dn + dr),
+                      ("q_lora", "heads", "head_dim"), dtype=dtype),
+        "w_dkv": param(ks[3], (d_model, mla.kv_lora_rank), ("embed", "kv_lora"), dtype=dtype),
+        "kv_norm": param(ks[4], (mla.kv_lora_rank,), ("kv_lora",), init="zeros"),
+        "w_kr": param(ks[5], (d_model, dr), ("embed", "head_dim"), dtype=dtype),
+        "w_uk": param(ks[6], (mla.kv_lora_rank, num_heads, dn),
+                      ("kv_lora", "heads", "head_dim"), dtype=dtype),
+        "w_uv": param(ks[7], (mla.kv_lora_rank, num_heads, dv),
+                      ("kv_lora", "heads", "head_dim"), dtype=dtype),
+        "w_o": param(ks[8], (num_heads, dv, d_model),
+                     ("heads", "head_dim", "embed"), dtype=dtype),
+    }
+
+
+def _queries(p, x, positions, mla: MLAConfig, rope_theta):
+    dn, dr = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+    cq = rmsnorm(jnp.einsum("bsd,dq->bsq", x, p["w_dq"].value),
+                 p["q_norm"].value)
+    q = jnp.einsum("bsq,qhe->bshe", cq, p["w_uq"].value)      # (B,S,H,dn+dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, rope_theta)
+    return qn, qr
+
+
+def _latents(p, x, positions, mla: MLAConfig, rope_theta):
+    ckv = rmsnorm(jnp.einsum("bsd,dc->bsc", x, p["w_dkv"].value),
+                  p["kv_norm"].value)                          # (B,S,C)
+    kr = jnp.einsum("bsd,de->bse", x, p["w_kr"].value)[:, :, None, :]
+    kr = apply_rope(kr, positions, rope_theta)                 # (B,S,1,dr)
+    return ckv, kr
+
+
+def mla_attention(p, x, positions, mla: MLAConfig, rope_theta=10_000.0,
+                  q_chunk=512, kv_chunk=1024, dense_below=1024):
+    """Expanded-form MLA for train/prefill.  x (B,S,d) -> (B,S,d)."""
+    h = p["w_uk"].value.shape[1]
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    qn, qr = _queries(p, x, positions, mla, rope_theta)
+    ckv, kr = _latents(p, x, positions, mla, rope_theta)
+    kn = jnp.einsum("bsc,chn->bshn", ckv, p["w_uk"].value)     # (B,S,H,dn)
+    v = jnp.einsum("bsc,chv->bshv", ckv, p["w_uv"].value)      # (B,S,H,dv)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr, kn.shape[:3] + (dr,))], axis=-1)
+    scale = (dn + dr) ** -0.5
+    o = attn_lib.attention(q, k, v, causal=True, scale=scale,
+                           q_chunk=q_chunk, kv_chunk=kv_chunk,
+                           dense_below=dense_below)
+    return jnp.einsum("bshv,hvd->bsd", o, p["w_o"].value)
+
+
+def mla_decode(p, x, ckv_cache, kr_cache, kv_positions, pos, mla: MLAConfig,
+               rope_theta=10_000.0):
+    """Absorbed-form single-token decode.
+
+    x (B,1,d); ckv_cache (B,T,C) (normalized latents, current token already
+    written); kr_cache (B,T,dr) (roped); returns (B,1,d).
+    """
+    dn, dr = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+    positions = jnp.asarray(pos)[None, None] if jnp.asarray(pos).ndim == 0 \
+        else jnp.asarray(pos)[:, None]
+    qn, qr = _queries(p, x, positions, mla, rope_theta)        # (B,1,H,*)
+    # absorb W_uk: q_lat (B,1,H,C) — attention runs in latent space
+    q_lat = jnp.einsum("bshn,chn->bshc", qn.astype(jnp.float32),
+                       p["w_uk"].value.astype(jnp.float32))
+    s_lat = jnp.einsum("bshc,btc->bhst", q_lat,
+                       ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bshe,bte->bhst", qr.astype(jnp.float32),
+                        kr_cache.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    s = (s_lat + s_rope) * scale                               # (B,H,1,T)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (x.shape[0],))
+    valid = (kv_positions >= 0) & (kv_positions <= pos_b[:, None])
+    s = jnp.where(valid[:, None, None, :], s, attn_lib.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btc->bshc", pr, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bshc,chv->bshv", ctx,
+                   p["w_uv"].value.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bshv,hvd->bsd", o, p["w_o"].value)

@@ -1,0 +1,333 @@
+"""Mixture-of-Experts layer: router + three dispatch strategies.
+
+  * ``dense``  — every expert runs on every token, masked combine.  O(E/topk)
+    overcompute; used only as the correctness oracle and for tiny smokes.
+  * ``gather`` — static-capacity sort-based dispatch.  Tokens are ranked
+    within their expert via a segment-rank (same trick as the k-d tree
+    labeling) and gathered into an (E, C, d) tensor; experts run as a vmapped
+    FFN.  Suits few-expert models (mixtral: experts replicated, d_ff sharded).
+  * ``einsum`` — GShard-style one-hot (T, E, C) dispatch/combine einsums.
+    Suits many-expert models (deepseek-v3: experts sharded over the mesh,
+    XLA inserts the all_to_all at the T->E resharding boundary).
+
+All strategies drop tokens over capacity (capacity_factor controls waste) —
+the classic throughput/quality trade; tests verify gather/einsum == dense
+whenever capacity is not exceeded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import common
+from repro.models.common import Box, param, split_keys
+
+
+def init_moe(key, d_model: int, mcfg: MoEConfig, dtype):
+    ks = split_keys(key, 8)
+    p = {
+        "router": param(ks[0], (d_model, mcfg.num_experts),
+                        ("embed", "experts"), dtype=jnp.float32),
+        "w_gate": param(ks[1], (mcfg.num_experts, d_model, mcfg.d_ff_expert),
+                        ("experts", "embed", "expert_ff"), dtype=dtype),
+        "w_up": param(ks[2], (mcfg.num_experts, d_model, mcfg.d_ff_expert),
+                      ("experts", "embed", "expert_ff"), dtype=dtype),
+        "w_down": param(ks[3], (mcfg.num_experts, mcfg.d_ff_expert, d_model),
+                        ("experts", "expert_ff", "embed"), dtype=dtype),
+    }
+    if mcfg.num_shared_experts:
+        f = mcfg.d_ff_shared * mcfg.num_shared_experts
+        p["shared_gate"] = param(ks[4], (d_model, f), ("embed", "ff"), dtype=dtype)
+        p["shared_up"] = param(ks[5], (d_model, f), ("embed", "ff"), dtype=dtype)
+        p["shared_down"] = param(ks[6], (f, d_model), ("ff", "embed"), dtype=dtype)
+    return p
+
+
+def _router(x, w_router, mcfg: MoEConfig):
+    """Top-k routing.  x (T, d) -> probs (T, K), idx (T, K) i32, aux loss."""
+    logits = x.astype(jnp.float32) @ w_router.astype(jnp.float32)   # (T, E)
+    if mcfg.router_score == "softmax":
+        scores = jax.nn.softmax(logits, axis=-1)
+    elif mcfg.router_score == "sigmoid_norm":                        # DSv3
+        scores = jax.nn.sigmoid(logits)
+    else:
+        raise ValueError(mcfg.router_score)
+    top_vals, top_idx = jax.lax.top_k(scores, mcfg.top_k)
+    probs = top_vals / jnp.maximum(
+        jnp.sum(top_vals, axis=-1, keepdims=True), 1e-9)
+    probs = probs * mcfg.routed_scaling
+    # Switch-style load-balance aux loss: E * sum(frac_tokens * frac_prob)
+    e = mcfg.num_experts
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return probs.astype(x.dtype), top_idx.astype(jnp.int32), aux
+
+
+def _expert_ffn(xe, w_gate, w_up, w_down):
+    """(E, C, d) through per-expert SwiGLU -> (E, C, d)."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate))
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up)
+    return jnp.einsum("ecf,efd->ecd", g * u, w_down)
+
+
+def _capacity(t: int, mcfg: MoEConfig) -> int:
+    c = int(t * mcfg.top_k / mcfg.num_experts * mcfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _moe_dense(x, p, probs, idx, mcfg):
+    t, d = x.shape
+    out = jnp.zeros_like(x)
+    onehot = jax.nn.one_hot(idx, mcfg.num_experts, dtype=x.dtype)    # (T,K,E)
+    gates = jnp.einsum("tk,tke->te", probs.astype(x.dtype), onehot)  # (T,E)
+    h = _expert_ffn(jnp.broadcast_to(x, (mcfg.num_experts, t, d)),
+                    p["w_gate"].value, p["w_up"].value, p["w_down"].value)
+    return jnp.einsum("te,etd->td", gates, h)
+
+
+def _moe_gather(x, p, probs, idx, mcfg, weights=None):
+    """Sort-based dispatch: segment-rank each (token, k) slot within its
+    expert, gather to (E, C, d), run experts, scatter-add back.
+
+    ``weights``: optional (w_gate, w_up, w_down) override — used by the
+    shard_map-local mode where the boxed params are already unwrapped."""
+    wg, wu, wd = weights if weights is not None else (
+        p["w_gate"].value, p["w_up"].value, p["w_down"].value)
+    t, d = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    cap = _capacity(t, mcfg)
+    flat_e = idx.reshape(-1)                                   # (T*K,)
+    # rank of each slot within its expert (ties by slot order = token order)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[flat_e[order]].astype(jnp.int32)
+    rank = jnp.zeros(t * k, jnp.int32).at[order].set(rank_sorted)
+    keep = rank < cap
+    token_of_slot = jnp.arange(t * k) // k
+    # gather tokens into expert buckets
+    xe = jnp.zeros((e, cap, d), x.dtype)
+    xe = xe.at[flat_e, jnp.where(keep, rank, cap)].set(
+        x[token_of_slot], mode="drop")
+    he = _expert_ffn(xe, wg, wu, wd)
+    # combine: weighted scatter-add back to tokens
+    gathered = he[flat_e, jnp.clip(rank, 0, cap - 1)]          # (T*K, d)
+    w = (probs.reshape(-1)[:, None].astype(x.dtype)
+         * keep[:, None].astype(x.dtype))
+    out = jnp.zeros_like(x).at[token_of_slot].add(gathered * w)
+    return out
+
+
+def _moe_einsum(x, p, probs, idx, mcfg):
+    """GShard capacity dispatch via one-hot einsums (EP-shardable)."""
+    t, d = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    cap = _capacity(t, mcfg)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)           # (T, K, E)
+    # position of each (t, k) slot in its expert queue: cumsum over slots
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                      # (T*K, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, k)           # (T, K)
+    keep = pos < cap
+    # dispatch (T, E, C) one-hot over capacity slots
+    disp = (jax.nn.one_hot(idx, e, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                             dtype=x.dtype)[..., None, :])     # (T,K,E,C+1)
+    disp = jnp.sum(disp[..., :cap], axis=1)                    # (T, E, C)
+    comb = jnp.einsum("tk,tkec->tec", probs.astype(x.dtype),
+                      (jax.nn.one_hot(idx, e, dtype=x.dtype)[..., None]
+                       * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                                        dtype=x.dtype)[..., None, :cap]))
+    xe = jnp.einsum("tec,td->ecd", disp, x)
+    xe = common.shard(xe, "model", None, None)                 # EP boundary
+    he = _expert_ffn(xe, p["w_gate"].value, p["w_up"].value, p["w_down"].value)
+    he = common.shard(he, "model", None, None)
+    return jnp.einsum("tec,ecd->td", comb, he)
+
+
+def _moe_a2a_local(xf, weights, probs, idx, mcfg: MoEConfig, *,
+                   ep_axes, num_ranks: int):
+    """Per-device body of the expert-parallel all-to-all dispatch.
+
+    Runs INSIDE shard_map: ``xf`` (T_loc, d) are this device's tokens,
+    ``weights`` (E_loc, d, f) its expert shard.  Tokens are routed with one
+    all_to_all of a (R, C, d) capacity buffer (+ its int sidecar), experts
+    compute strictly locally — so expert *gradients* are local too (no
+    cross-device grad all-reduce), which is the optimization that moves the
+    dsv3 train cell (EXPERIMENTS.md §Perf).
+    """
+    w_gate, w_up, w_down = weights
+    t_loc, d = xf.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    r = num_ranks
+    e_loc = e // r
+    cap = max(8, -(-int(t_loc * k * mcfg.capacity_factor / r) // 8) * 8)
+
+    dest = (idx // e_loc).reshape(-1)                      # (T_loc*K,) rank
+    le = (idx % e_loc).reshape(-1)                         # local expert id
+    # slot of each assignment within its destination rank
+    order = jnp.argsort(dest, stable=True)
+    counts = jnp.bincount(dest, length=r)
+    starts = jnp.cumsum(counts) - counts
+    slot_sorted = jnp.arange(t_loc * k, dtype=jnp.int32) \
+        - starts[dest[order]].astype(jnp.int32)
+    slot = jnp.zeros(t_loc * k, jnp.int32).at[order].set(slot_sorted)
+    keep = slot < cap
+    token_of = jnp.arange(t_loc * k) // k
+
+    send_x = jnp.zeros((r, cap, d), xf.dtype).at[
+        dest, jnp.where(keep, slot, cap)].set(xf[token_of], mode="drop")
+    send_le = jnp.full((r, cap), e_loc, jnp.int32).at[
+        dest, jnp.where(keep, slot, cap)].set(le, mode="drop")
+
+    recv_x = jax.lax.all_to_all(send_x, ep_axes, 0, 0, tiled=True)
+    recv_le = jax.lax.all_to_all(send_le, ep_axes, 0, 0, tiled=True)
+
+    xin = recv_x.reshape(r * cap, d)
+    lein = recv_le.reshape(r * cap)
+    if e_loc == 1:
+        h = _expert_ffn(xin[None], w_gate, w_up, w_down)[0]
+    else:
+        # few local experts: masked dense combine over E_loc
+        onehot = jax.nn.one_hot(lein, e_loc, dtype=xin.dtype)  # (RC, E_loc)
+        hs = _expert_ffn(jnp.broadcast_to(xin, (e_loc,) + xin.shape),
+                         w_gate, w_up, w_down)                  # (E_loc,RC,d)
+        h = jnp.einsum("ne,end->nd", onehot, hs)
+    back = jax.lax.all_to_all(h.reshape(r, cap, d).astype(xf.dtype),
+                              ep_axes, 0, 0, tiled=True)
+
+    gathered = back[dest, jnp.clip(slot, 0, cap - 1)]       # (T_loc*K, d)
+    w = (probs.reshape(-1)[:, None].astype(xf.dtype)
+         * keep[:, None].astype(xf.dtype))
+    return jnp.zeros_like(xf).at[token_of].add(gathered * w)
+
+
+def _moe_a2a(x, p, mcfg: MoEConfig):
+    """shard_map wrapper: sequence-parallel tokens, expert-parallel weights.
+
+    Falls back to gather dispatch when no mesh is active or the expert count
+    does not divide the expert-parallel rank count.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    names = dict(zip(mesh.axis_names, mesh.shape.values())) if mesh.shape else {}
+    ep_axes = tuple(a for a in ("data", "model") if names.get(a, 1) > 1)
+    r = 1
+    for a in ep_axes:
+        r *= names[a]
+    b, s, d = x.shape
+    batch_axes = tuple(a for a in ("pod", "data") if names.get(a, 1) > 1)
+    bsz = 1
+    for a in batch_axes:
+        bsz *= names[a]
+    if r <= 1 or mcfg.num_experts % r or b % max(bsz, 1):
+        xf = x.reshape(b * s, d)
+        probs, idx, aux = _router(xf, p["router"].value, mcfg)
+        return _moe_gather(xf, p, probs, idx, mcfg).reshape(b, s, d), aux
+
+    from jax.sharding import PartitionSpec as P
+    seq_axis = "model" if (names.get("model", 1) > 1
+                           and s % names["model"] == 0) else None
+    x_spec = P(batch_axes if batch_axes else None, seq_axis, None)
+    ep_spec = P(ep_axes)
+
+    def body(x_loc, router_w, wg, wu, wd):
+        bl, sl, _ = x_loc.shape
+        xf = x_loc.reshape(bl * sl, d)
+        probs, idx, aux = _router(xf, router_w, mcfg)
+        out = _moe_a2a_local(xf, (wg, wu, wd), probs, idx, mcfg,
+                             ep_axes=ep_axes, num_ranks=r)
+        aux = jax.lax.pmean(aux, ep_axes)
+        return out.reshape(bl, sl, d), aux
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(None, None), ep_spec, ep_spec, ep_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"].value, p["w_gate"].value, p["w_up"].value,
+      p["w_down"].value)
+    # named so a remat policy can SAVE the routed output: recomputing it in
+    # the backward pass would re-run both all_to_alls (§Perf A4)
+    from jax.ad_checkpoint import checkpoint_name
+    out = checkpoint_name(out, "moe_out")
+    return out, aux
+
+
+def _moe_local(x, p, mcfg: MoEConfig):
+    """shard_map-local gather dispatch for few-expert models (mixtral).
+
+    Every device holds ALL experts with d_ff TP-sharded over 'model', and
+    routes only its own (batch-sharded) tokens — the global-view gather
+    formulation lets GSPMD lower the combine scatter as a dataset-sized
+    all-reduce, while here the only collective is one (T_loc, d) psum per
+    layer from the ff-sharded down-projection (§Perf mixtral-prefill cell).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    names = dict(zip(mesh.axis_names, mesh.shape.values())) if mesh.shape else {}
+    batch_axes = tuple(a for a in ("pod", "data") if names.get(a, 1) > 1)
+    model = names.get("model", 1)
+    b, s, d = x.shape
+    bsz = 1
+    for a in batch_axes:
+        bsz *= names[a]
+    if (not batch_axes and model <= 1) or b % max(bsz, 1) \
+            or mcfg.d_ff_expert % max(model, 1):
+        xf = x.reshape(b * s, d)
+        probs, idx, aux = _router(xf, p["router"].value, mcfg)
+        return _moe_gather(xf, p, probs, idx, mcfg).reshape(b, s, d), aux
+
+    from jax.sharding import PartitionSpec as P
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+
+    def body(x_loc, router_w, wg, wu, wd):
+        bl, sl, _ = x_loc.shape
+        xf = x_loc.reshape(bl * sl, d)
+        probs, idx, aux = _router(xf, router_w, mcfg)
+        out = _moe_gather(xf, None, probs, idx, mcfg, weights=(wg, wu, wd))
+        if model > 1:
+            out = jax.lax.psum(out, "model")       # ff-sharded partials
+            aux = jax.lax.pmean(aux, "model")
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return out.reshape(bl, sl, d), aux
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P(None, None, "model"),
+                  P(None, None, "model"), P(None, "model", None)),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"].value, p["w_gate"].value, p["w_up"].value,
+      p["w_down"].value)
+
+
+def moe_ffn(x, p, mcfg: MoEConfig):
+    """x (B, S, d) -> (B, S, d); returns (out, aux_loss)."""
+    b, s, d = x.shape
+    if mcfg.dispatch == "local":
+        out, aux = _moe_local(x, p, mcfg)
+        if mcfg.num_shared_experts:
+            out = out + common.swiglu(x, p["shared_gate"].value,
+                                      p["shared_up"].value,
+                                      p["shared_down"].value)
+        from jax.ad_checkpoint import checkpoint_name
+        return checkpoint_name(out, "moe_out"), aux
+    if mcfg.dispatch == "a2a":
+        out, aux = _moe_a2a(x, p, mcfg)
+        if mcfg.num_shared_experts:
+            out = out + common.swiglu(x, p["shared_gate"].value,
+                                      p["shared_up"].value,
+                                      p["shared_down"].value)
+        return out, aux
+    xf = x.reshape(b * s, d)
+    probs, idx, aux = _router(xf, p["router"].value, mcfg)
+    fn = {"dense": _moe_dense, "gather": _moe_gather,
+          "einsum": _moe_einsum}[mcfg.dispatch]
+    out = fn(xf, p, probs, idx, mcfg)
+    if mcfg.num_shared_experts:
+        out = out + common.swiglu(xf, p["shared_gate"].value,
+                                  p["shared_up"].value,
+                                  p["shared_down"].value)
+    return out.reshape(b, s, d), aux

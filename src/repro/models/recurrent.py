@@ -1,0 +1,106 @@
+"""Griffin/RecurrentGemma temporal-mixing block: causal conv + RG-LRU.
+
+The RG-LRU recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is linear in h, so prefill/train evaluates it with a log-depth
+``associative_scan`` over time (the TPU-native equivalent of the paper's
+sequential kernel), and decode is a single fused step.  The per-channel decay
+is a_t = exp(-c * softplus(L) * r_t) with gates r, i computed from the block
+input — all elementwise, VPU-friendly.
+
+State per sequence is just (h (B,W), conv tail (B,conv_width-1,W)) — O(1) in
+sequence length, which is why recurrentgemma runs the long_500k decode cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecurrentConfig
+from repro.models.common import param, split_keys
+
+_C = 8.0          # Griffin's fixed decay temperature
+
+
+def init_recurrent_block(key, d_model: int, rcfg: RecurrentConfig, dtype):
+    w = rcfg.lru_width or d_model
+    ks = split_keys(key, 8)
+    return {
+        "w_x": param(ks[0], (d_model, w), ("embed", "rnn"), dtype=dtype),
+        "w_gate": param(ks[1], (d_model, w), ("embed", "rnn"), dtype=dtype),
+        "conv_w": param(ks[2], (rcfg.conv_width, w), ("conv", "rnn"),
+                        dtype=dtype, scale=0.1),
+        "lambda_": param(ks[3], (w,), ("rnn",), init="ones"),
+        "w_r": param(ks[4], (w, w), ("rnn", "rnn"), dtype=dtype),
+        "w_i": param(ks[5], (w, w), ("rnn", "rnn"), dtype=dtype),
+        "w_out": param(ks[6], (w, d_model), ("rnn", "embed"), dtype=dtype),
+    }
+
+
+def _causal_conv(x, conv_w, tail=None):
+    """Depthwise causal conv.  x (B,S,W), conv_w (K,W); ``tail`` (B,K-1,W)
+    prepends state for decode.  Returns (out (B,S,W), new_tail)."""
+    k = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xin = jnp.concatenate([tail, x], axis=1)                   # (B,S+K-1,W)
+    out = sum(xin[:, i:i + x.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(k))
+    return out, xin[:, -(k - 1):, :]
+
+
+def _gates(p, u):
+    """Decay log_a (negative) and gated input, elementwise from u (B,S,W)."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_r"].value))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_i"].value))
+    log_a = (-_C * jax.nn.softplus(p["lambda_"].value)[None, None, :]
+             * r.astype(jnp.float32))
+    gated = (jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+             * i.astype(jnp.float32) * u.astype(jnp.float32))
+    return log_a, gated
+
+
+def rglru_scan(p, u):
+    """Full-sequence RG-LRU via associative scan.  u (B,S,W) -> (B,S,W)."""
+    log_a, gated = _gates(p, u)
+
+    def combine(e1, e2):
+        la1, b1 = e1
+        la2, b2 = e2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    la, h = jax.lax.associative_scan(combine, (log_a, gated), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(p, u, h_prev):
+    """One decode step.  u (B,1,W), h_prev (B,W) -> (out (B,1,W), h (B,W))."""
+    log_a, gated = _gates(p, u)
+    h = jnp.exp(log_a[:, 0]) * h_prev.astype(jnp.float32) + gated[:, 0]
+    return h[:, None, :].astype(u.dtype), h
+
+
+def recurrent_block(p, x, state=None):
+    """Griffin recurrent block.  x (B,S,d) -> (B,S,d).
+
+    ``state``: None for train/prefill-from-scratch, or dict with
+    {'h': (B,W), 'conv': (B,K-1,W)} for decode; returns (out, new_state).
+    """
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].value)
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].value))
+    if state is None:
+        c, conv_tail = _causal_conv(u, p["conv_w"].value)
+        y = rglru_scan(p, c)
+        h_last = y[:, -1, :].astype(jnp.float32)
+        new_state = {"h": h_last, "conv": conv_tail}
+    else:
+        c, conv_tail = _causal_conv(u, p["conv_w"].value, tail=state["conv"])
+        y, h_last = rglru_step(p, c, state["h"])
+        new_state = {"h": h_last, "conv": conv_tail}
+    out = jnp.einsum("bsw,wd->bsd", g * y, p["w_out"].value)
+    return out, new_state
+
+
+def init_state(batch: int, d_model: int, rcfg: RecurrentConfig, dtype):
+    w = rcfg.lru_width or d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, rcfg.conv_width - 1, w), dtype)}

@@ -1,0 +1,62 @@
+"""Model registry: config -> init / loss / decode entry points + param math."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.common import unbox
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.is_encdec:
+        return encdec.init_encdec_params(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Boxed abstract param tree (ShapeDtypeStruct leaves) — no allocation."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def loss_fn(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return lambda p, batch: encdec.loss_fn(p, batch, cfg)
+    return lambda p, batch: transformer.loss_fn(p, batch, cfg)
+
+
+def decode_step_fn(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return lambda p, caches, tok, pos: encdec.decode_step(p, caches, tok, pos, cfg)
+    return lambda p, caches, tok, pos: transformer.decode_step(p, caches, tok, pos, cfg)
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       enc_len: int = 0):
+    if cfg.is_encdec:
+        return encdec.init_decode_caches(cfg, batch, max_len,
+                                         enc_len or max_len)
+    return transformer.init_decode_caches(cfg, batch, max_len)
+
+
+def count_params_abstract(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count from abstract shapes.  ``active_only`` counts
+    MoE expert params at top_k/num_experts weight (for 6*N_active*D)."""
+    boxed = abstract_params(cfg)
+    values, axes = unbox(boxed)
+    total = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(values)
+    for path, leaf in flat:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if active_only and cfg.moe is not None:
+            keys = "/".join(str(p) for p in path)
+            # expert tensors are (..., E, d, f) — possibly layer-stacked
+            if any(w in keys for w in ("w_gate", "w_up", "w_down")) \
+                    and "shared" not in keys and leaf.ndim >= 3 \
+                    and leaf.shape[-3] == cfg.moe.num_experts:
+                n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total

@@ -1,0 +1,534 @@
+"""Config-driven decoder LM assembling every assigned architecture family.
+
+A model is a sequence of homogeneous *layer groups*; each group's parameters
+are stacked on a leading axis and executed with ``lax.scan`` (+ optional
+remat), keeping HLO size O(#groups) instead of O(#layers) — essential for
+compiling 95-layer configs with 512 partitioned devices.
+
+Layer kinds:
+  dense     GQA attention (full or sliding) + SwiGLU (or parallel block)
+  moe       GQA attention + mixture-of-experts FFN
+  mla_dense / mla_moe    DeepSeek-V3 latent attention variants
+  griffin   RecurrentGemma residual unit: RG-LRU or local-attn mixer + MLP
+  mlstm / slstm          xLSTM blocks (unrolled; 12-layer models)
+
+Decode uses per-group stacked KV/recurrent caches; sliding-window layers use
+ring caches of window size so long_500k decode state is O(window), not O(S).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import (apply_norm, apply_rope, cross_entropy_loss,
+                                 norm_init, param, split_keys, shard,
+                                 stack_axes)
+
+# ---------------------------------------------------------------- groups
+
+def layer_groups(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """[(kind, num_layers_in_group), ...] in execution order."""
+    if cfg.xlstm is not None:
+        return [("slstm" if i in cfg.xlstm.slstm_layers else "mlstm", 1)
+                for i in range(cfg.num_layers)]
+    if cfg.recurrent is not None:
+        pat = cfg.recurrent.pattern
+        full, rem = divmod(cfg.num_layers, len(pat))
+        groups = [("griffin", full)] if full else []
+        for i in range(rem):                       # tail layers, unscanned
+            groups.append((f"griffin_tail_{pat[i]}", 1))
+        return groups
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        kind = "mla_moe" if cfg.mla is not None else "moe"
+        dense_kind = "mla_dense" if cfg.mla is not None else "dense"
+        return [(dense_kind, cfg.moe.first_dense_layers),
+                (kind, cfg.num_layers - cfg.moe.first_dense_layers)]
+    if cfg.moe is not None:
+        return [("moe", cfg.num_layers)]
+    if cfg.mla is not None:
+        return [("mla_dense", cfg.num_layers)]
+    return [("dense", cfg.num_layers)]
+
+
+# ---------------------------------------------------------------- init
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_attn(key, cfg: ModelConfig):
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = split_keys(key, 6)
+    p = {
+        "wq": param(ks[0], (d, h, dh), ("embed", "heads", "head_dim"), dtype=_dtype(cfg)),
+        "wk": param(ks[1], (d, hk, dh), ("embed", "kv_heads", "head_dim"), dtype=_dtype(cfg)),
+        "wv": param(ks[2], (d, hk, dh), ("embed", "kv_heads", "head_dim"), dtype=_dtype(cfg)),
+        "wo": param(ks[3], (h, dh, d), ("heads", "head_dim", "embed"), dtype=_dtype(cfg)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = param(ks[4], (dh,), ("head_dim",), init="zeros")
+        p["k_norm"] = param(ks[5], (dh,), ("head_dim",), init="zeros")
+    return p
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    return {
+        "w_gate": param(ks[0], (d, f), ("embed", "ff"), dtype=_dtype(cfg)),
+        "w_up": param(ks[1], (d, f), ("embed", "ff"), dtype=_dtype(cfg)),
+        "w_down": param(ks[2], (f, d), ("ff", "embed"), dtype=_dtype(cfg)),
+    }
+
+
+def init_layer(key, cfg: ModelConfig, kind: str):
+    ks = split_keys(key, 8)
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": norm_init(ks[0], d, cfg.norm)}
+    if kind in ("dense", "moe"):
+        p["attn"] = init_attn(ks[1], cfg)
+        if not cfg.parallel_block:
+            p["norm2"] = norm_init(ks[2], d, cfg.norm)
+        p["ffn"] = (moe_lib.init_moe(ks[3], d, cfg.moe, _dtype(cfg))
+                    if kind == "moe" else init_mlp(ks[3], cfg))
+    elif kind in ("mla_dense", "mla_moe"):
+        p["attn"] = mla_lib.init_mla(ks[1], d, cfg.num_heads, cfg.mla, _dtype(cfg))
+        p["norm2"] = norm_init(ks[2], d, cfg.norm)
+        p["ffn"] = (moe_lib.init_moe(ks[3], d, cfg.moe, _dtype(cfg))
+                    if kind == "mla_moe" else init_mlp(ks[3], cfg))
+    elif kind == "griffin" or kind.startswith("griffin_tail"):
+        sub = cfg.recurrent.pattern if kind == "griffin" \
+            else (kind.removeprefix("griffin_tail_"),)
+        subs = []
+        for i, s in enumerate(sub):
+            kk = split_keys(ks[4 + (i % 3)], 4)
+            sp = {"norm1": norm_init(kk[0], d, cfg.norm),
+                  "norm2": norm_init(kk[1], d, cfg.norm),
+                  "mlp": init_mlp(kk[2], cfg)}
+            if s == "rglru":
+                sp["rec"] = rec_lib.init_recurrent_block(kk[3], d, cfg.recurrent, _dtype(cfg))
+            else:
+                sp["attn"] = init_attn(kk[3], cfg)
+            subs.append(sp)
+        p["subs"] = subs
+    elif kind == "mlstm":
+        x = cfg.xlstm
+        di = int(x.proj_factor * d)
+        hh = x.num_heads
+        kk = split_keys(ks[1], 9)
+        p.update({
+            "w_up": param(kk[0], (d, di), ("embed", "ff"), dtype=_dtype(cfg)),
+            "w_z": param(kk[1], (d, di), ("embed", "ff"), dtype=_dtype(cfg)),
+            "conv_w": param(kk[2], (4, di), ("conv", "ff"), dtype=_dtype(cfg), scale=0.1),
+            "w_q": param(kk[3], (di, di), ("ff", "ff"), dtype=_dtype(cfg)),
+            "w_k": param(kk[4], (di, di), ("ff", "ff"), dtype=_dtype(cfg)),
+            "w_v": param(kk[5], (di, di), ("ff", "ff"), dtype=_dtype(cfg)),
+            "w_i": param(kk[6], (di, hh), ("ff", "heads"), dtype=jnp.float32),
+            "w_f": param(kk[7], (di, hh), ("ff", "heads"), dtype=jnp.float32),
+            "out_norm": param(kk[8], (di,), ("ff",), init="zeros"),
+            "w_down": param(ks[2], (di, d), ("ff", "embed"), dtype=_dtype(cfg)),
+        })
+    elif kind == "slstm":
+        x = cfg.xlstm
+        hh = x.num_heads
+        dh = d // hh
+        f = int(x.slstm_proj_factor * d)
+        kk = split_keys(ks[1], 10)
+        p.update({
+            "conv_w": param(kk[0], (4, d), ("conv", "embed"), dtype=_dtype(cfg), scale=0.1),
+            "w_gates": param(kk[1], (d, 4, hh, dh), ("embed", None, "heads", "head_dim"),
+                             dtype=_dtype(cfg)),
+            "r_i": param(kk[2], (hh, dh, dh), ("heads", "head_dim", None), dtype=_dtype(cfg)),
+            "r_f": param(kk[3], (hh, dh, dh), ("heads", "head_dim", None), dtype=_dtype(cfg)),
+            "r_z": param(kk[4], (hh, dh, dh), ("heads", "head_dim", None), dtype=_dtype(cfg)),
+            "r_o": param(kk[5], (hh, dh, dh), ("heads", "head_dim", None), dtype=_dtype(cfg)),
+            "out_norm": param(kk[6], (d,), ("embed",), init="zeros"),
+            "norm2": norm_init(kk[7], d, cfg.norm),
+            "ffn_up": param(kk[8], (d, 2 * f), ("embed", "ff"), dtype=_dtype(cfg)),
+            "ffn_down": param(kk[9], (f, d), ("ff", "embed"), dtype=_dtype(cfg)),
+        })
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    """Boxed param tree for the full model (decoder-only)."""
+    ks = split_keys(key, 4 + len(layer_groups(cfg)))
+    params: dict[str, Any] = {
+        "embed": param(ks[0], (cfg.vocab_size, cfg.d_model),
+                       ("vocab", "embed"), dtype=_dtype(cfg), init="embed"),
+        "final_norm": norm_init(ks[1], cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = param(ks[2], (cfg.d_model, cfg.vocab_size),
+                                  ("embed", "vocab"), dtype=_dtype(cfg))
+    groups = []
+    for gi, (kind, count) in enumerate(layer_groups(cfg)):
+        gkey = ks[4 + gi]
+        if count == 1:
+            groups.append(init_layer(gkey, cfg, kind))
+        else:
+            lkeys = jnp.stack(split_keys(gkey, count))
+            stacked = jax.vmap(lambda k: init_layer(k, cfg, kind))(lkeys)
+            groups.append(stack_axes(stacked))
+    params["groups"] = groups
+    return params
+
+
+# ---------------------------------------------------------------- forward
+
+def _attn_sublayer(p, x, positions, cfg: ModelConfig, *, window, cache=None):
+    """GQA attention.  cache None -> full-sequence; else single-token decode
+    against {'k','v','kv_pos'} ring cache (already containing this token)."""
+    wq, wk, wv, wo = (p[n].value for n in ("wq", "wk", "wv", "wo"))
+    if cache is not None:
+        # decode: hard-pin weights at use site — the layer scan otherwise
+        # re-shards the whole stacked weight tuple every step (§Perf B)
+        wq = shard(wq, None, "model", None)
+        wk = shard(wk, None, None, None)
+        wv = shard(wv, None, None, None)
+        wo = shard(wo, "model", None, None)
+    q = jnp.einsum("bsd,dhe->bshe", x, wq)
+    k = jnp.einsum("bsd,dhe->bshe", x, wk)
+    v = jnp.einsum("bsd,dhe->bshe", x, wv)
+    if cfg.qk_norm:
+        from repro.models.common import rmsnorm
+        q = rmsnorm(q, p["q_norm"].value)
+        k = rmsnorm(k, p["k_norm"].value)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("pod", "data"), None, "model", None)
+    if cache is None:
+        o = attn_lib.attention(q, k, v, causal=True, window=window,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        new_kv = (k, v)
+    else:
+        t = cache["k"].shape[1]
+        pos = positions[0, 0]
+        slot = pos % t
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        kv_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["kv_pos"], jnp.broadcast_to(pos, (x.shape[0], 1)).astype(jnp.int32),
+            slot, 1)
+        o = attn_lib.decode_attention(q, ck, cv, kv_pos, pos, window=window)
+        o = shard(o, ("pod", "data"), None, "model", None)
+        new_kv = {"k": ck, "v": cv, "kv_pos": kv_pos}
+    out = jnp.einsum("bshe,hed->bsd", o, wo)
+    return out, new_kv
+
+
+def _mlp(p, x, pin: bool = False):
+    # explicit ff-axis constraints: keep GSPMD's loop-body layout identical
+    # to the stored (ff -> model) weight layout — without them the decode
+    # layer scan re-shards the stacked weights every step (§Perf cell B)
+    wg, wu, wd = p["w_gate"].value, p["w_up"].value, p["w_down"].value
+    if pin:
+        wg = shard(wg, None, "model")
+        wu = shard(wu, None, "model")
+        wd = shard(wd, "model", None)
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, wg))
+    u = jnp.einsum("...d,df->...f", x, wu)
+    h = shard(g * u, ("pod", "data"), None, "model")
+    return jnp.einsum("...f,fd->...d", h, wd)
+
+
+def _dense_layer(p, x, positions, cfg, kind, cache=None):
+    """dense/moe layer.  Returns (x, aux, new_cache)."""
+    window = cfg.window if cfg.attention == "sliding" else None
+    aux = jnp.zeros((), jnp.float32)
+    if cache is not None:
+        # pin the residual stream in decode: batch-sharded, d replicated —
+        # removes the sharding-solver's freedom to flip the loop body into
+        # a weight-resharding fixed point (§Perf cell B iteration log)
+        x = shard(x, ("pod", "data"), None, None)
+    h = apply_norm(x, p["norm1"].value, cfg.norm)
+    attn_out, new_cache = _attn_sublayer(p["attn"], h, positions, cfg,
+                                         window=window, cache=cache)
+    if cfg.parallel_block:
+        ff = _mlp(p["ffn"], h, pin=cache is not None)
+        x = x + cfg.residual_scale * (attn_out + ff)
+    else:
+        x = x + cfg.residual_scale * attn_out
+        h2 = apply_norm(x, p["norm2"].value, cfg.norm)
+        if kind == "moe":
+            ff, aux = moe_lib.moe_ffn(h2, p["ffn"], cfg.moe)
+        else:
+            ff = _mlp(p["ffn"], h2, pin=cache is not None)
+        x = x + cfg.residual_scale * ff
+    return x, aux, new_cache
+
+
+def _mla_layer(p, x, positions, cfg, kind, cache=None):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(x, p["norm1"].value, cfg.norm)
+    if cache is None:
+        attn_out = mla_lib.mla_attention(
+            p["attn"], h, positions, cfg.mla, cfg.rope_theta,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        new_cache = None
+    else:
+        t = cache["ckv"].shape[1]
+        pos = positions[0, 0]
+        ckv_new, kr_new = mla_lib._latents(p["attn"], h, positions,
+                                           cfg.mla, cfg.rope_theta)
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, 1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new[:, :, 0, :], pos, 1)
+        kv_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["kv_pos"], jnp.broadcast_to(pos, (x.shape[0], 1)).astype(jnp.int32),
+            pos, 1)
+        attn_out = mla_lib.mla_decode(p["attn"], h, ckv, kr, kv_pos, pos,
+                                      cfg.mla, cfg.rope_theta)
+        new_cache = {"ckv": ckv, "kr": kr, "kv_pos": kv_pos}
+    x = x + attn_out
+    h2 = apply_norm(x, p["norm2"].value, cfg.norm)
+    if kind == "mla_moe":
+        ff, aux = moe_lib.moe_ffn(h2, p["ffn"], cfg.moe)
+    else:
+        ff = _mlp(p["ffn"], h2, pin=cache is not None)
+    return x + ff, aux, new_cache
+
+
+def _griffin_layer(p, x, positions, cfg, kind, cache=None):
+    """One griffin group element: pattern sub-layers, each mixer + MLP."""
+    sub_kinds = cfg.recurrent.pattern if kind == "griffin" \
+        else (kind.removeprefix("griffin_tail_"),)
+    new_caches = []
+    aux = jnp.zeros((), jnp.float32)
+    for i, (sk, sp) in enumerate(zip(sub_kinds, p["subs"])):
+        h = apply_norm(x, sp["norm1"].value, cfg.norm)
+        c_i = None if cache is None else cache[i]
+        if sk == "rglru":
+            mix, new_c = rec_lib.recurrent_block(sp["rec"], h, state=c_i)
+        else:
+            mix, new_c = _attn_sublayer(sp["attn"], h, positions, cfg,
+                                        window=cfg.recurrent.local_window,
+                                        cache=c_i)
+        x = x + mix
+        x = x + _mlp(sp["mlp"], apply_norm(x, sp["norm2"].value, cfg.norm),
+                     pin=cache is not None)
+        new_caches.append(new_c)
+    return x, aux, new_caches
+
+
+def _mlstm_layer(p, x, positions, cfg, kind, cache=None):
+    xc = cfg.xlstm
+    b, s, d = x.shape
+    di = p["w_up"].value.shape[1]
+    hh = xc.num_heads
+    h = apply_norm(x, p["norm1"].value, cfg.norm)
+    u = jnp.einsum("bsd,de->bse", h, p["w_up"].value)
+    z = jnp.einsum("bsd,de->bse", h, p["w_z"].value)
+    conv_tail = None if cache is None else cache["conv"]
+    c, new_tail = rec_lib._causal_conv(u, p["conv_w"].value, tail=conv_tail)
+    c = jax.nn.silu(c)
+    to_heads = lambda t: t.reshape(b, s, hh, di // hh)
+    q = to_heads(jnp.einsum("bse,ef->bsf", c, p["w_q"].value))
+    k = to_heads(jnp.einsum("bse,ef->bsf", c, p["w_k"].value))
+    v = to_heads(jnp.einsum("bse,ef->bsf", u, p["w_v"].value))
+    ig = jnp.einsum("bse,eh->bsh", c, p["w_i"].value)
+    fg = jnp.einsum("bse,eh->bsh", c, p["w_f"].value)
+    st = None if cache is None else cache["cell"]
+    if cache is None or s > 1:
+        y, new_st = xlstm_lib.mlstm_chunked(q, k, v, ig, fg, state=st,
+                                            chunk=xc.chunk_size)
+    else:
+        y1, new_st = xlstm_lib.mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                          ig[:, 0], fg[:, 0],
+                                          st or xlstm_lib.mlstm_state(
+                                              b, hh, di // hh, di // hh))
+        y = y1[:, None]
+    y = y.reshape(b, s, di)
+    from repro.models.common import rmsnorm
+    y = rmsnorm(y, p["out_norm"].value)
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z), p["w_down"].value)
+    new_cache = {"conv": new_tail, "cell": new_st}
+    return x + out, jnp.zeros((), jnp.float32), new_cache
+
+
+def _slstm_layer(p, x, positions, cfg, kind, cache=None):
+    xc = cfg.xlstm
+    b, s, d = x.shape
+    hh = xc.num_heads
+    dh = d // hh
+    h = apply_norm(x, p["norm1"].value, cfg.norm)
+    conv_tail = None if cache is None else cache["conv"]
+    c, new_tail = rec_lib._causal_conv(h, p["conv_w"].value, tail=conv_tail)
+    c = jax.nn.silu(c)
+    w = p["w_gates"].value                                  # (d,4,H,dh)
+    gx = {g: jnp.einsum("bsd,dhe->bshe", src, w[:, gi])
+          for gi, (g, src) in enumerate(
+              (("i", c), ("f", c), ("z", h), ("o", h)))}
+    st = cache["cell"] if cache is not None else xlstm_lib.slstm_state(b, hh, dh)
+    r = {"i": p["r_i"], "f": p["r_f"], "z": p["r_z"], "o": p["r_o"]}
+    y, new_st = xlstm_lib.slstm_scan(gx, r, st)       # (B,S,H,dh)
+    y = y.reshape(b, s, d)
+    from repro.models.common import rmsnorm
+    y = rmsnorm(y, p["out_norm"].value)
+    x = x + y
+    # GeGLU FFN (proj factor 4/3)
+    h2 = apply_norm(x, p["norm2"].value, cfg.norm)
+    up = jnp.einsum("bsd,df->bsf", h2, p["ffn_up"].value)
+    g, u = jnp.split(up, 2, axis=-1)
+    x = x + jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["ffn_down"].value)
+    return x, jnp.zeros((), jnp.float32), {"conv": new_tail, "cell": new_st}
+
+
+def _remat_policy(cfg: ModelConfig):
+    """'full' -> recompute everything; 'dots' -> save dot outputs;
+    'save_moe' -> recompute everything EXCEPT the routed-MoE output, whose
+    recompute would repeat the dispatch/return all_to_alls (§Perf A4)."""
+    if cfg.remat == "full":
+        return None
+    if cfg.remat == "save_moe":
+        return jax.checkpoint_policies.save_only_these_names("moe_out")
+    return jax.checkpoint_policies.checkpoint_dots
+
+
+_LAYER_FNS = {
+    "dense": _dense_layer, "moe": _dense_layer,
+    "mla_dense": _mla_layer, "mla_moe": _mla_layer,
+    "griffin": _griffin_layer,
+    "mlstm": _mlstm_layer, "slstm": _slstm_layer,
+}
+
+
+def _layer_fn(kind):
+    if kind.startswith("griffin_tail"):
+        return _griffin_layer
+    return _LAYER_FNS[kind]
+
+
+def forward(params, tokens, cfg: ModelConfig, *, embeds=None,
+            positions=None, caches=None, decode=False):
+    """Full forward.  tokens (B,S) i32 (or ``embeds`` (B,S,d) for frontend
+    stubs).  With ``decode=True``/caches, runs a cached single-token step.
+
+    Returns (logits (B,S,V), aux_loss, new_caches).
+    """
+    if embeds is not None:
+        x = embeds.astype(_dtype(cfg))
+    else:
+        x = params["embed"].value[tokens] * cfg.embed_scale
+        x = x.astype(_dtype(cfg))
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = shard(x, ("pod", "data"), None, None)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    groups = layer_groups(cfg)
+    for gi, (kind, count) in enumerate(groups):
+        gp = params["groups"][gi]
+        fn = _layer_fn(kind)
+        cache_g = None if caches is None else caches[gi]
+        if count == 1:
+            call = lambda gp_, x_: fn(gp_, x_, positions, cfg, kind,
+                                      cache=cache_g)
+            if cfg.remat != "none" and not decode:
+                call = jax.checkpoint(call, policy=_remat_policy(cfg),
+                                      prevent_cse=False)
+            x, aux, nc = call(gp, x)
+            aux_total += aux
+            new_caches.append(nc)
+        else:
+            def body(carry, xs):
+                x, aux = carry
+                lp, lc = xs
+                x, a, nc = fn(lp, x, positions, cfg, kind, cache=lc)
+                return (x, aux + a), nc
+
+            body_fn = body
+            if cfg.remat != "none" and not decode:
+                body_fn = jax.checkpoint(body, policy=_remat_policy(cfg),
+                                         prevent_cse=False)
+            (x, aux_total), ncs = jax.lax.scan(
+                body_fn, (x, aux_total), (gp, cache_g))
+            new_caches.append(ncs)
+
+    x = apply_norm(x, params["final_norm"].value, cfg.norm)
+    head = (params["embed"].value.T if cfg.tie_embeddings
+            else params["lm_head"].value)
+    logits = jnp.einsum("bsd,dv->bsv", x, head) * cfg.logit_scale
+    logits = shard(logits, ("pod", "data"), None, "model")
+    return logits, aux_total, new_caches
+
+
+def loss_fn(params, batch, cfg: ModelConfig, aux_weight=0.01):
+    logits, aux, _ = forward(params, batch.get("tokens"), cfg,
+                             embeds=batch.get("embeds"))
+    ce = cross_entropy_loss(logits, batch["labels"], batch["mask"])
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------- decode
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Zeroed cache pytree matching ``forward``'s caches argument.
+
+    Sliding-window attention uses ring caches of window size; recurrent
+    blocks keep O(1) state; full attention allocates (B, max_len, ...).
+    """
+    dt = _dtype(cfg)
+    hk, dh = cfg.num_kv_heads, cfg.head_dim_
+
+    def attn_cache(window):
+        t = min(window, max_len) if window else max_len
+        return {"k": jnp.zeros((batch, t, hk, dh), dt),
+                "v": jnp.zeros((batch, t, hk, dh), dt),
+                "kv_pos": jnp.full((batch, t), -1, jnp.int32)}
+
+    def one(kind):
+        if kind in ("dense", "moe"):
+            return attn_cache(cfg.window if cfg.attention == "sliding" else None)
+        if kind in ("mla_dense", "mla_moe"):
+            return {"ckv": jnp.zeros((batch, max_len, cfg.mla.kv_lora_rank), dt),
+                    "kr": jnp.zeros((batch, max_len, cfg.mla.qk_rope_head_dim), dt),
+                    "kv_pos": jnp.full((batch, max_len), -1, jnp.int32)}
+        if kind == "griffin" or kind.startswith("griffin_tail"):
+            sub = cfg.recurrent.pattern if kind == "griffin" \
+                else (kind.removeprefix("griffin_tail_"),)
+            return [rec_lib.init_state(batch, cfg.d_model, cfg.recurrent, dt)
+                    if s == "rglru" else attn_cache(cfg.recurrent.local_window)
+                    for s in sub]
+        if kind == "mlstm":
+            di = int(cfg.xlstm.proj_factor * cfg.d_model)
+            hh = cfg.xlstm.num_heads
+            return {"conv": jnp.zeros((batch, 3, di), dt),
+                    "cell": xlstm_lib.mlstm_state(batch, hh, di // hh, di // hh)}
+        if kind == "slstm":
+            hh = cfg.xlstm.num_heads
+            return {"conv": jnp.zeros((batch, 3, cfg.d_model), dt),
+                    "cell": xlstm_lib.slstm_state(batch, hh, cfg.d_model // hh)}
+        raise ValueError(kind)
+
+    caches = []
+    for kind, count in layer_groups(cfg):
+        c = one(kind)
+        if count > 1:
+            c = jax.tree.map(lambda a: jnp.broadcast_to(
+                a[None], (count,) + a.shape).copy(), c)
+        caches.append(c)
+    return caches
+
+
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
+    """One token for every sequence.  tokens (B,1), pos () i32 current
+    position.  Returns (logits (B,1,V), new_caches)."""
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+    logits, _, new_caches = forward(params, tokens, cfg,
+                                    positions=positions, caches=caches,
+                                    decode=True)
+    return logits, new_caches

@@ -1,0 +1,171 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM recurrence (per head, exponential gating, log-space stabilized):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T      n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+Linear in (C, n), so we use the *chunkwise-parallel* form: quadratic
+attention-style math inside chunks (MXU work) + an O(S/chunk) sequential
+carry of the stabilized state across chunks.  ``mlstm_recurrent`` is the
+step-by-step oracle; tests assert chunked == recurrent.  The O(1)-size state
+is why xlstm runs the long_500k decode cell.
+
+sLSTM keeps per-head scalar memories with recurrent (block-diagonal) gate
+mixing — inherently sequential, implemented as a ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.models.common import param, rmsnorm, split_keys
+
+
+def _logsig(x):
+    return jax.nn.log_sigmoid(x.astype(jnp.float32))
+
+
+# ----------------------------- mLSTM cell -----------------------------
+
+def mlstm_state(batch, heads, dk, dv):
+    return {"C": jnp.zeros((batch, heads, dk, dv), jnp.float32),
+            "n": jnp.zeros((batch, heads, dk), jnp.float32),
+            "m": jnp.full((batch, heads), -1e30, jnp.float32)}
+
+
+def mlstm_step(q, k, v, i_gate, f_gate, state):
+    """One token.  q/k/v (B,H,dk|dv); i_gate/f_gate (B,H) pre-activations."""
+    lf = _logsig(f_gate)
+    li = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(lf + state["m"], li)
+    c_scale = jnp.exp(lf + state["m"] - m_new)[..., None, None]
+    i_scale = jnp.exp(li - m_new)[..., None]
+    qf = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = c_scale * state["C"] + i_scale[..., None] * (kf[..., :, None] * vf[..., None, :])
+    n = c_scale[..., 0] * state["n"] + i_scale * kf
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_recurrent(q, k, v, i_gate, f_gate, state=None):
+    """Oracle: scan tokens one by one.  q/k (B,S,H,dk), v (B,S,H,dv),
+    gates (B,S,H).  Returns (h (B,S,H,dv), final state)."""
+    b, s, h_, dk = q.shape
+    dv = v.shape[-1]
+    st = state or mlstm_state(b, h_, dk, dv)
+
+    def body(st, xs):
+        qt, kt, vt, it, ft = xs
+        ht, st = mlstm_step(qt, kt, vt, it, ft, st)
+        return st, ht
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_gate, f_gate))
+    st, hs = jax.lax.scan(body, st, xs)
+    return jnp.moveaxis(hs, 0, 1), st
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, state=None, chunk=64):
+    """Chunkwise-parallel mLSTM, matching ``mlstm_recurrent``.
+
+    Within a chunk of length L (positions 1..L, log-forget lf, log-input li):
+      b_t   = sum_{s<=t} lf_s                      (inclusive cumsum)
+      w_ts  = b_t - b_s + li_s   for s <= t        (intra weights)
+      inter weight for query t = b_t + m_prev
+    stabilized by m_t = max(max_s w_ts, b_t + m_prev) per position.
+    """
+    b, s, h_, dk = q.shape
+    dv = v.shape[-1]
+    st0 = state or mlstm_state(b, h_, dk, dv)
+    L = min(chunk, s)
+    s_pad = -(-s // L) * L
+    pad = lambda t: jnp.pad(t, ((0, 0), (0, s_pad - s)) + ((0, 0),) * (t.ndim - 2))
+    qp, kp, vp = pad(q), pad(k), pad(v)
+    # pad forget pre-activation with +inf -> lf = 0, li with -inf -> no input
+    ip = jnp.pad(i_gate, ((0, 0), (0, s_pad - s), (0, 0)),
+                 constant_values=-1e30)
+    fp = jnp.pad(f_gate, ((0, 0), (0, s_pad - s), (0, 0)),
+                 constant_values=1e30)
+    nc = s_pad // L
+    resh = lambda t: t.reshape((b, nc, L) + t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, ic, fc = map(resh, (qp, kp, vp, ip, fp))    # (nc, b, L, ...)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_body(st, xs):
+        qt, kt, vt, it, ft = xs                      # (b, L, H, *)
+        lf = _logsig(ft)                             # (b, L, H)
+        li = it.astype(jnp.float32)
+        bcum = jnp.cumsum(lf, axis=1)                # (b, L, H) inclusive
+        btot = bcum[:, -1]                           # (b, H)
+        # intra-chunk log-weights w[t, s] = b_t - b_s + li_s (s <= t)
+        wts = (bcum[:, :, None, :] - bcum[:, None, :, :]
+               + li[:, None, :, :])                  # (b, t, s, H)
+        wts = jnp.where(causal[None, :, :, None], wts, -jnp.inf)
+        inter = bcum + st["m"][:, None, :]           # (b, t, H)
+        m_t = jnp.maximum(jnp.max(wts, axis=2), inter)   # (b, t, H)
+        m_t = jnp.maximum(m_t, -1e30)
+        dmat = jnp.exp(wts - m_t[:, :, None, :])     # (b, t, s, H)
+        qf = qt.astype(jnp.float32) * (dk ** -0.5)
+        kf, vf = kt.astype(jnp.float32), vt.astype(jnp.float32)
+        scores = jnp.einsum("bthk,bshk->btsh", qf, kf) * dmat
+        inter_w = jnp.exp(inter - m_t)               # (b, t, H)
+        num = (jnp.einsum("btsh,bshv->bthv", scores, vf)
+               + inter_w[..., None]
+               * jnp.einsum("bhkv,bthk->bthv", st["C"], qf))
+        # scores already contain q.k, so the denominator (n_t . q_t) is the
+        # row-sum of scores plus the carried-state term
+        den = jnp.sum(scores, axis=2) + inter_w * jnp.einsum(
+            "bhk,bthk->bth", st["n"], qf)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state update to end of chunk ----
+        dec = btot[:, None, :] - bcum + li           # (b, s, H) weights
+        m_new = jnp.maximum(btot + st["m"], jnp.max(dec, axis=1))
+        m_new = jnp.maximum(m_new, -1e30)
+        carry_scale = jnp.exp(btot + st["m"] - m_new)            # (b, H)
+        in_scale = jnp.exp(dec - m_new[:, None, :])              # (b, s, H)
+        C = (carry_scale[..., None, None] * st["C"]
+             + jnp.einsum("bsh,bshk,bshv->bhkv", in_scale, kf, vf))
+        n = (carry_scale[..., None] * st["n"]
+             + jnp.einsum("bsh,bshk->bhk", in_scale, kf))
+        return {"C": C, "n": n, "m": m_new}, h
+
+    st, hs = jax.lax.scan(chunk_body, st0, (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(b, s_pad, h_, dv)[:, :s]
+    return h.astype(q.dtype), st
+
+
+# ----------------------------- sLSTM cell -----------------------------
+
+def slstm_state(batch, heads, dh):
+    return {"c": jnp.zeros((batch, heads, dh), jnp.float32),
+            "n": jnp.zeros((batch, heads, dh), jnp.float32),
+            "h": jnp.zeros((batch, heads, dh), jnp.float32),
+            "m": jnp.full((batch, heads, dh), -1e30, jnp.float32)}
+
+
+def slstm_scan(gates_x, r_kernels, state):
+    """gates_x: dict i/f/z/o of (B,S,H,dh) input pre-activations;
+    r_kernels: dict of (H,dh,dh) recurrent block-diagonal kernels.
+    Sequential over S (inherent to sLSTM)."""
+    def step(st, xs):
+        xi, xf, xz, xo = xs
+        rec = {g: jnp.einsum("bhd,hde->bhe", st["h"], r_kernels[g].value)
+               for g in ("i", "f", "z", "o")}
+        it = (xi + rec["i"]).astype(jnp.float32)
+        ft = (xf + rec["f"]).astype(jnp.float32)
+        zt = jnp.tanh((xz + rec["z"]).astype(jnp.float32))
+        ot = jax.nn.sigmoid((xo + rec["o"]).astype(jnp.float32))
+        lf = _logsig(ft)
+        m_new = jnp.maximum(lf + st["m"], it)
+        c = jnp.exp(lf + st["m"] - m_new) * st["c"] + jnp.exp(it - m_new) * zt
+        n = jnp.exp(lf + st["m"] - m_new) * st["n"] + jnp.exp(it - m_new)
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    xs = tuple(jnp.moveaxis(gates_x[g], 1, 0) for g in ("i", "f", "z", "o"))
+    st, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), st

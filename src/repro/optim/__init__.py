@@ -1,0 +1,4 @@
+from repro.optim import schedules
+from repro.optim.adamw import AdamWConfig, AdamWState, init, update
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "update", "schedules"]

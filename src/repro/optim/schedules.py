@@ -1,0 +1,32 @@
+"""LR schedules: cosine, linear, and MiniCPM's WSD (warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr, warmup, total, final_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr \
+        * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr, warmup, stable, decay, final_frac=0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup, long
+    flat stage, then a short exponential-ish (here linear-log) decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    dec = peak_lr * jnp.exp(jnp.log(final_frac) * t)
+    return jnp.where(step < warmup, warm,
+                     jnp.where(step < warmup + stable, peak_lr, dec))
+
+
+def linear(step, *, peak_lr, warmup, total, final_frac=0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    return jnp.where(step < warmup, warm,
+                     peak_lr * (1 - (1 - final_frac) * t))

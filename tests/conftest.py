@@ -1,0 +1,9 @@
+import os
+
+# tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); keep any inherited flag from leaking in
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,145 @@
+"""Attention paths: chunked/windowed/decode vs dense oracle; MoE dispatch
+equivalence; recurrent cell equivalences (the fast CI versions of the
+development-time sweeps)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, MoEConfig, RecurrentConfig
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    dense_attention)
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    B, S, H, Hk, Dq, Dv = 2, 257, 8, 2, 32, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dq), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, Dq), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, Dv), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("cq,ck", [(64, 96), (96, 64), (128, 128)])
+@pytest.mark.parametrize("window", [None, 48, 200])
+def test_chunked_matches_dense(qkv, cq, ck, window):
+    q, k, v = qkv
+    ref = dense_attention(q, k, v, causal=True, window=window)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            q_chunk=cq, kv_chunk=ck)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_noncausal_matches_dense(qkv):
+    q, k, v = qkv
+    ref = dense_attention(q, k, v, causal=False)
+    out = chunked_attention(q, k, v, causal=False, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 48])
+def test_decode_matches_dense_last_row(qkv, window):
+    q, k, v = qkv
+    B, S = q.shape[:2]
+    kvpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    ref = dense_attention(q, k, v, causal=True, window=window)[:, -1:]
+    out = decode_attention(q[:, -1:], k, v, kvpos, S - 1, window=window)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ring_cache_decode():
+    """A wrapped ring cache (window smaller than history) still attends to
+    exactly the last-window tokens."""
+    B, H, Hk, D, W = 1, 4, 2, 16, 8
+    ks = jax.random.split(jax.random.key(3), 3)
+    S = 20
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hk, D))
+    v = jax.random.normal(ks[2], (B, S, Hk, D))
+    # simulate ring cache at pos = S-1
+    ring_k = jnp.zeros((B, W, Hk, D))
+    ring_v = jnp.zeros((B, W, Hk, D))
+    ring_pos = jnp.full((B, W), -1, jnp.int32)
+    for t in range(S):
+        slot = t % W
+        ring_k = ring_k.at[:, slot].set(k[:, t])
+        ring_v = ring_v.at[:, slot].set(v[:, t])
+        ring_pos = ring_pos.at[:, slot].set(t)
+    ref = dense_attention(q, k, v, causal=True, window=W)[:, -1:]
+    out = decode_attention(q[:, -1:], ring_k, ring_v, ring_pos, S - 1,
+                           window=W)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_moe_dispatch_equivalence():
+    d, E, ff = 32, 8, 64
+    mcfg = MoEConfig(num_experts=E, top_k=2, d_ff_expert=ff,
+                     dispatch="dense", capacity_factor=8.0)
+    p = moe_lib.init_moe(jax.random.key(1), d, mcfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(0), (2, 16, d))
+    ref, _ = moe_lib.moe_ffn(x, p, mcfg)
+    for disp in ("gather", "einsum"):
+        out, _ = moe_lib.moe_ffn(x, p, dataclasses.replace(mcfg,
+                                                           dispatch=disp))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    mla = MLAConfig(q_lora_rank=24, kv_lora_rank=16, qk_nope_head_dim=8,
+                    qk_rope_head_dim=4, v_head_dim=8)
+    d, H, B, S = 32, 4, 2, 40
+    p = mla_lib.init_mla(jax.random.key(0), d, H, mla, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (B, S, d)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = mla_lib.mla_attention(p, x, pos, mla, dense_below=8,
+                                 q_chunk=16, kv_chunk=16)
+    ckv, kr = mla_lib._latents(p, x, pos, mla, 10_000.0)
+    dec = mla_lib.mla_decode(p, x[:, -1:], ckv, kr[:, :, 0, :], pos, S - 1,
+                             mla)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_matches_steps():
+    rcfg = RecurrentConfig(conv_width=4)
+    p = rec_lib.init_recurrent_block(jax.random.key(2), 16, rcfg,
+                                     jnp.float32)
+    x = jax.random.normal(jax.random.key(3), (2, 12, 16)) * 0.5
+    y_scan, st_scan = rec_lib.recurrent_block(p, x)
+    st = rec_lib.init_state(2, 16, rcfg, jnp.float32)
+    outs = []
+    for t in range(12):
+        o, st = rec_lib.recurrent_block(p, x[:, t:t + 1], st)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(y_scan),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 37, 64])
+def test_mlstm_chunked_matches_recurrent(chunk):
+    B, S, H, dk, dv = 2, 37, 3, 8, 10
+    ks = jax.random.split(jax.random.key(0), 5)
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v = jax.random.normal(ks[2], (B, S, H, dv))
+    ig = jax.random.normal(ks[3], (B, S, H)) * 2
+    fg = jax.random.normal(ks[4], (B, S, H)) * 2 + 2
+    h_ref, st_ref = xlstm_lib.mlstm_recurrent(q, k, v, ig, fg)
+    h, st = xlstm_lib.mlstm_chunked(q, k, v, ig, fg, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_ref["n"]), np.asarray(st["n"]),
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,60 @@
+"""Hadoop I/O cost model: the quantities behind Fig 5 / Fig 6."""
+import numpy as np
+
+from repro.core import io_model
+
+
+def test_shuffle_calibration_matches_cited_measurements():
+    m = io_model.HadoopCostModel()
+    # the paper cites [2]: 4s@50k, 30s@500k, 207s@5M — the linear fit must
+    # pass near those points
+    assert abs(m.shuffle_sec(50_000) - 4) < 4
+    assert abs(m.shuffle_sec(500_000) - 30) < 10
+    assert abs(m.shuffle_sec(5_000_000) - 207) < 10
+
+
+def test_pkmeans_bytes_scale_with_iterations():
+    m = io_model.HadoopCostModel()
+    b10 = m.pkmeans_bytes(3000, 2, 5, 10)
+    b20 = m.pkmeans_bytes(3000, 2, 5, 20)
+    assert b20["read"] == 2 * b10["read"]
+    assert b20["jobs"] == 20
+
+
+def test_ipkmeans_beats_pkmeans_on_paper_config():
+    """Dataset 1 geometry: 3000 pts, K=5, M=6 subsets, ~30 Lloyd iters
+    (the measured regime on the Fig-4-overlap dataset)."""
+    m = io_model.HadoopCostModel()
+    pk = m.pkmeans_bytes(3000, 2, 5, 30)
+    ipk = m.ipkmeans_bytes(3000, 2, 5, 6, kd_depth=9)
+    total_pk = pk["read"] + pk["write"]
+    total_ipk = ipk["read"] + ipk["write"]
+    assert total_ipk < total_pk
+    # the paper reports "up to 2/3 lower" — our model lands in that regime
+    assert total_ipk / total_pk < 0.85
+
+
+def test_io_crossover_matches_paper_caveat():
+    """Paper Fig 6, experiments 2-3: when PKMeans converges in 5-8
+    iterations it beats IPKMeans — the model reproduces the crossover."""
+    m = io_model.HadoopCostModel()
+    ipk = m.ipkmeans_bytes(3000, 2, 5, 6, kd_depth=9)
+    t_ipk = ipk["read"] + ipk["write"]
+    few = m.pkmeans_bytes(3000, 2, 5, 6)
+    many = m.pkmeans_bytes(3000, 2, 5, 60)
+    assert t_ipk > few["read"] + few["write"]      # PKMeans wins at T=6
+    assert t_ipk < (many["read"] + many["write"]) * 0.45   # loses badly at 60
+
+
+def test_tpu_collective_bytes_gap_is_structural():
+    """TPU restatement: PKMeans all-reduces every iteration, IPKMeans's S2
+    moves zero bytes — the gap grows with iteration count."""
+    pk = io_model.tpu_collective_bytes_pkmeans(2, 5, iters=100,
+                                               n_devices=256)
+    ipk = io_model.tpu_collective_bytes_ipkmeans(3000, 2, 5, 256, 9,
+                                                 n_devices=256)
+    pk_long = io_model.tpu_collective_bytes_pkmeans(2, 5, iters=10_000,
+                                                    n_devices=256)
+    assert pk_long == 100 * pk
+    assert ipk == io_model.tpu_collective_bytes_ipkmeans(
+        3000, 2, 5, 256, 9, n_devices=512)   # independent of device count

@@ -1,0 +1,109 @@
+"""Integration tests: IPKMeans pipeline vs PKMeans — the paper's claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (IPKMeansConfig, ipkmeans, ipkmeans_distributed,
+                        io_model, pkmeans)
+from repro.data import (gaussian_mixture, initial_centroid_groups,
+                        paper_dataset_3000)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    pts, _ = paper_dataset_3000(0)
+    inits = initial_centroid_groups(pts, 5, groups=3)
+    return pts, inits
+
+
+def test_sse_parity_with_pkmeans(dataset):
+    """Table 1: IPKMeans SSE within a fraction of a percent of PKMeans."""
+    pts, inits = dataset
+    for init in inits:
+        ref = pkmeans(pts, init)
+        res = ipkmeans(pts, init, jax.random.key(0),
+                       IPKMeansConfig(num_clusters=5, num_subsets=6))
+        gap = (float(res.sse) - float(ref.sse)) / float(ref.sse)
+        assert gap < 0.02, f"SSE gap {gap:.4f} exceeds 2%"
+
+
+def test_fewer_parallel_rounds_than_pkmeans(dataset):
+    """The O(log n + 1) vs per-iteration-job claim: kd_depth+2 'jobs' vs
+    PKMeans' Lloyd-iteration count, with I/O bytes to match (Fig 5)."""
+    pts, inits = dataset
+    ref = pkmeans(pts, inits[0])
+    res = ipkmeans(pts, inits[0], jax.random.key(0),
+                   IPKMeansConfig(num_clusters=5, num_subsets=6))
+    model = io_model.HadoopCostModel()
+    pk = model.pkmeans_bytes(3000, 2, 5, int(ref.iters))
+    ipk = model.ipkmeans_bytes(3000, 2, 5, 6, res.kd_depth)
+    assert ipk["jobs"] == res.kd_depth + 2
+    # paper: "up to 2/3 lower I/O overheads"
+    total_pk = pk["read"] + pk["write"]
+    total_ipk = ipk["read"] + ipk["write"]
+    assert total_ipk < total_pk
+
+
+def test_variant_ranking(dataset):
+    """Fig 8 directionality: kd+axis+minASSE beats global random partition
+    on average over seeds/inits."""
+    pts, inits = dataset
+    gaps = {"kd_axis": [], "random": []}
+    for s, init in enumerate(inits):
+        ref = float(pkmeans(pts, init).sse)
+        for variant in gaps:
+            cfg = IPKMeansConfig(num_clusters=5, num_subsets=12,
+                                 partition=variant)
+            r = ipkmeans(pts, init, jax.random.key(s), cfg)
+            gaps[variant].append(float(r.sse) / ref - 1.0)
+    assert np.mean(gaps["kd_axis"]) <= np.mean(gaps["random"]) + 1e-4
+
+
+def test_more_subsets_trade_accuracy(dataset):
+    """Table 2 trend: more reducers => SSE non-decreasing (roughly)."""
+    pts, inits = dataset
+    sses = []
+    for m in (6, 24, 96):
+        cfg = IPKMeansConfig(num_clusters=5, num_subsets=m)
+        r = ipkmeans(pts, inits[0], jax.random.key(0), cfg)
+        sses.append(float(r.sse))
+    assert sses[-1] >= sses[0] * 0.999
+
+
+def test_merge_variants_agree_roughly(dataset):
+    """min-ASSE tracks PKMeans closely; hierarchical merging is looser —
+    the paper's own Section 3(v) finding ('good centroids may be merged by
+    bad centroids, so the result is not stable')."""
+    pts, inits = dataset
+    ref = float(pkmeans(pts, inits[0]).sse)
+    bounds = {"min_asse": 1.05, "hierarchical": 1.60}
+    for merge, bound in bounds.items():
+        cfg = IPKMeansConfig(num_clusters=5, num_subsets=6, merge=merge)
+        r = ipkmeans(pts, inits[0], jax.random.key(0), cfg)
+        assert float(r.sse) / ref < bound, (merge, float(r.sse) / ref)
+
+
+def test_distributed_matches_reference(dataset):
+    """shard_map S2 on a 1-device mesh == pure vmap pipeline (the multi-
+    device equivalence is covered by the dry-run + the 8-device CI run)."""
+    pts, inits = dataset
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    r_d = ipkmeans_distributed(pts, inits[0], jax.random.key(0), cfg,
+                               mesh, ("data",))
+    r_s = ipkmeans(pts, inits[0], jax.random.key(0), cfg)
+    np.testing.assert_allclose(np.asarray(r_d.centroids),
+                               np.asarray(r_s.centroids), rtol=1e-5)
+
+
+def test_subset_iterations_are_independent(dataset):
+    """Reducers converge at different iteration counts — proof the solvers
+    are not lock-stepped (the paper's core scheduling property)."""
+    pts, inits = dataset
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=12)
+    r = ipkmeans(pts, inits[0], jax.random.key(0), cfg)
+    iters = np.asarray(r.subset_iters)
+    assert iters.min() >= 1
+    assert len(np.unique(iters)) > 1

@@ -1,0 +1,75 @@
+"""k-d tree partitioning invariants (paper Algorithms 2-3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kdtree
+
+
+@pytest.fixture(scope="module")
+def pts():
+    return jax.random.normal(jax.random.key(1), (1000, 2)) * 5
+
+
+def test_median_split_balance(pts):
+    region = kdtree.build_kdtree(pts, depth=4)
+    counts = np.bincount(np.asarray(region), minlength=16)
+    # exact median splits keep every leaf within +-1 of n/2^d at each level
+    assert counts.min() >= 62 and counts.max() <= 63, counts
+
+
+def test_leaves_are_spatial_boxes(pts):
+    """Points in the same leaf after 2 levels share the x-median side and
+    their region's y-median side (i.e., splits really are spatial)."""
+    region = kdtree.build_kdtree(pts, depth=1)
+    x = np.asarray(pts[:, 0])
+    r = np.asarray(region)
+    assert x[r == 0].max() <= x[r == 1].min() + 1e-6
+
+
+def test_required_depth():
+    assert kdtree.required_depth(3000, 6) == 9     # 3000/2^9 = 5.86 <= 6
+    assert kdtree.required_depth(64, 8) == 3
+    assert kdtree.required_depth(5, 6) == 0
+
+
+@pytest.mark.parametrize("strategy", ["kd_axis", "kd_random", "random"])
+def test_partition_is_exhaustive(pts, strategy):
+    part = kdtree.partition_dataset(pts, jax.random.key(2), 8,
+                                    strategy=strategy)
+    ids = np.asarray(part.subset_ids)
+    assert ids.min() >= 0 and ids.max() < 8
+    counts = np.bincount(ids, minlength=8)
+    assert counts.sum() == 1000
+    # balanced to within one point per leaf
+    assert counts.max() - counts.min() <= (2 ** part.depth if part.depth
+                                           else 1)
+
+
+def test_axis_labeling_is_stratified(pts):
+    """Every leaf contributes at most ceil(leaf/M) points to each subset —
+    the representativeness guarantee random partitioning lacks."""
+    m = 8
+    part = kdtree.partition_dataset(pts, jax.random.key(3), m)
+    region = np.asarray(part.region_ids)
+    ids = np.asarray(part.subset_ids)
+    for r in np.unique(region):
+        sel = ids[region == r]
+        per = np.bincount(sel, minlength=m)
+        assert per.max() <= -(-len(sel) // m)
+
+
+def test_pack_subsets_roundtrip(pts):
+    m = 8
+    part = kdtree.partition_dataset(pts, jax.random.key(4), m)
+    cap = 2 ** part.depth
+    packed, mask = kdtree.pack_subsets(pts, part.subset_ids, m, cap)
+    assert packed.shape == (m, cap, 2)
+    # every original point appears exactly once among masked entries
+    got = np.asarray(packed[np.asarray(mask)])
+    orig = np.asarray(pts)
+    got_sorted = got[np.lexsort(got.T)]
+    orig_sorted = orig[np.lexsort(orig.T)]
+    np.testing.assert_allclose(got_sorted, orig_sorted, rtol=1e-6)
+    assert int(mask.sum()) == 1000

@@ -1,0 +1,79 @@
+"""Pallas kernel sweeps: shapes x dtypes against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (64, 2, 3),        # tiny, d < lane
+    (300, 2, 5),       # the paper's own geometry
+    (1000, 17, 7),     # odd everything
+    (513, 64, 130),    # k crosses one block boundary
+    (2048, 128, 256),  # aligned, multi-block in n and k
+    (96, 160, 9),      # d > 128 (two lane groups)
+]
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_assign_matches_ref(n, d, k, dtype):
+    kx, kc = jax.random.split(jax.random.key(n * d * k))
+    x = (jax.random.normal(kx, (n, d)) * 3).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * 3).astype(dtype)
+    l_ref, m_ref = ref.assign_ref(x, c)
+    l_pl, m_pl = ops.assign(x, c, interpret=True)
+    # labels must agree except where two centroids tie within fp noise
+    d2 = np.asarray(jax.vmap(
+        lambda xi: jnp.sum((c.astype(jnp.float32) - xi) ** 2, -1))(
+            x.astype(jnp.float32)))
+    ref_l, pl_l = np.asarray(l_ref), np.asarray(l_pl)
+    diff = ref_l != pl_l
+    if diff.any():
+        a = d2[np.arange(n)[diff], ref_l[diff]]
+        b = d2[np.arange(n)[diff], pl_l[diff]]
+        np.testing.assert_allclose(a, b, rtol=5e-2)
+    tol = 1e-4 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(np.asarray(m_ref), np.asarray(m_pl),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES[:4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_centroid_update_matches_ref(n, d, k, dtype):
+    kx, kw = jax.random.split(jax.random.key(n + d + k))
+    x = (jax.random.normal(kx, (n, d)) * 2).astype(dtype)
+    labels = jax.random.randint(jax.random.key(5), (n,), 0, k)
+    w = (jax.random.uniform(kw, (n,)) > 0.2).astype(jnp.float32)
+    s_ref, c_ref = ref.centroid_update_ref(x, labels, w, k)
+    s_pl, c_pl = ops.centroid_update(x, labels, w, k, interpret=True)
+    tol = 1e-3 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_pl),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(c_ref), np.asarray(c_pl),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_n,block_k", [(128, 128), (256, 64), (64, 256)])
+def test_assign_block_shape_invariance(block_n, block_k):
+    x = jax.random.normal(jax.random.key(0), (700, 16))
+    c = jax.random.normal(jax.random.key(1), (200, 16))
+    l0, m0 = ref.assign_ref(x, c)
+    l1, m1 = ops.assign(x, c, block_n=block_n, block_k=block_k,
+                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    np.testing.assert_allclose(np.asarray(m0), np.asarray(m1), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_assign_weak_type_and_jit_cache():
+    """wrapper is jit-stable across python float inputs (no weak-type
+    recompiles) and supports vmap."""
+    x = jnp.ones((32, 4))
+    c = jnp.zeros((3, 4))
+    l, m = ops.assign(x, c, interpret=True)
+    assert l.dtype == jnp.int32 and m.dtype == jnp.float32
+    batched = jax.vmap(lambda xx: ref.assign_ref(xx, c)[0])(
+        jnp.stack([x, x + 1]))
+    assert batched.shape == (2, 32)

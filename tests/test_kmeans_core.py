@@ -1,0 +1,89 @@
+"""Unit tests: Lloyd solver, PKMeans reference, masking, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KMeansParams, ipkmeans, IPKMeansConfig, kmeans,
+                        kmeans_batched, metrics, pkmeans)
+from repro.core.kmeans import lloyd_step
+from repro.data import gaussian_mixture, initial_centroid_groups
+
+
+@pytest.fixture(scope="module")
+def data():
+    pts, centers, _ = gaussian_mixture(jax.random.key(0), 600, 4)
+    inits = initial_centroid_groups(pts, 4, groups=2)
+    return pts, centers, inits
+
+
+def test_lloyd_step_decreases_sse(data):
+    pts, _, inits = data
+    c = inits[0]
+    prev = float(metrics.sse(pts, c))
+    for _ in range(5):
+        c, _ = lloyd_step(pts, c)
+        cur = float(metrics.sse(pts, c))
+        assert cur <= prev + 1e-3
+        prev = cur
+
+
+def test_kmeans_converges(data):
+    pts, _, inits = data
+    res = kmeans(pts, inits[0])
+    assert bool(res.converged)
+    # converged => one more Lloyd step barely moves centroids
+    c2, _ = lloyd_step(pts, res.centroids)
+    assert float(metrics.centroid_shift(c2, res.centroids)) < 1e-3
+
+
+def test_kmeans_masked_equals_subset(data):
+    pts, _, inits = data
+    n = 400
+    mask = jnp.arange(pts.shape[0]) < n
+    r_masked = kmeans(pts, inits[0], mask=mask)
+    r_subset = kmeans(pts[:n], inits[0])
+    np.testing.assert_allclose(np.asarray(r_masked.centroids),
+                               np.asarray(r_subset.centroids), rtol=1e-5)
+    np.testing.assert_allclose(float(r_masked.sse), float(r_subset.sse),
+                               rtol=1e-5)
+
+
+def test_empty_cluster_keeps_centroid():
+    pts = jnp.array([[0.0, 0.0], [0.1, 0.0], [0.0, 0.1]])
+    # third centroid far away never wins a point
+    init = jnp.array([[0.0, 0.0], [0.1, 0.1], [100.0, 100.0]])
+    res = kmeans(pts, init, params=KMeansParams(max_iters=5))
+    np.testing.assert_allclose(np.asarray(res.centroids[2]),
+                               [100.0, 100.0], rtol=1e-6)
+    assert np.isfinite(np.asarray(res.centroids)).all()
+
+
+def test_pkmeans_matches_kmeans(data):
+    pts, _, inits = data
+    r1 = pkmeans(pts, inits[0])
+    r2 = kmeans(pts, inits[0])
+    np.testing.assert_allclose(np.asarray(r1.centroids),
+                               np.asarray(r2.centroids), rtol=1e-5)
+    assert int(r1.iters) == int(r2.iters)
+
+
+def test_batched_matches_loop(data):
+    pts, _, inits = data
+    subsets = jnp.stack([pts[:300], pts[300:]])
+    masks = jnp.ones((2, 300), bool)
+    rb = kmeans_batched(subsets, masks, inits[0])
+    for i in range(2):
+        ri = kmeans(subsets[i], inits[0])
+        np.testing.assert_allclose(np.asarray(rb.centroids[i]),
+                                   np.asarray(ri.centroids), rtol=1e-5)
+
+
+def test_pallas_backend_matches_jnp(data):
+    pts, _, inits = data
+    r_j = kmeans(pts, inits[0], params=KMeansParams(backend="jnp"))
+    r_p = kmeans(pts, inits[0], params=KMeansParams(backend="pallas"))
+    assert int(r_j.iters) == int(r_p.iters)
+    np.testing.assert_allclose(np.asarray(r_j.centroids),
+                               np.asarray(r_p.centroids), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,34 @@
+"""Merging stage unit tests (paper Section 2.iii)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import merge
+
+
+def test_hierarchical_merges_closest_pair():
+    pts = jnp.array([[0.0, 0.0], [0.1, 0.0], [5.0, 5.0], [9.0, 9.0]])
+    out = np.asarray(merge.hierarchical_merge(pts, 3))
+    # the two closest points collapse to their midpoint
+    assert out.shape == (3, 2)
+    assert any(np.allclose(row, [0.05, 0.0]) for row in out)
+    assert any(np.allclose(row, [5.0, 5.0]) for row in out)
+    assert any(np.allclose(row, [9.0, 9.0]) for row in out)
+
+
+def test_hierarchical_merge_counts():
+    pts = jnp.arange(20, dtype=jnp.float32).reshape(10, 2)
+    for k in (1, 3, 9, 10):
+        assert merge.hierarchical_merge(pts, k).shape == (k, 2)
+
+
+def test_hierarchical_merge_noop():
+    pts = jnp.ones((4, 2))
+    out = merge.hierarchical_merge(pts, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pts))
+
+
+def test_min_asse_picks_best():
+    sets = jnp.stack([jnp.full((3, 2), i, jnp.float32) for i in range(4)])
+    asses = jnp.array([3.0, 0.5, 2.0, 1.0])
+    out = np.asarray(merge.min_asse_merge(sets, asses))
+    np.testing.assert_allclose(out, np.full((3, 2), 1.0))

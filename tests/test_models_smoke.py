@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs.  (Full configs are exercised abstractly by the
+dry-run only.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import ARCHS, SMOKE_ARCHS
+from repro.launch.train import make_train_step
+from repro.models import registry, transformer
+from repro.models.common import Box, unbox
+
+ARCH_NAMES = sorted(SMOKE_ARCHS)
+
+
+def _batch(cfg, b=2, s=32, key=0):
+    k = jax.random.key(key)
+    batch = {
+        "tokens": jax.random.randint(k, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k, (b, s), 0, cfg.vocab_size),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.is_encdec or cfg.frontend == "audio_frames":
+        batch["embeds"] = jax.random.normal(k, (b, 16, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch):
+    cfg = SMOKE_ARCHS[arch]
+    params = registry.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    loss, metrics = registry.loss_fn(cfg)(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_updates_params(arch):
+    cfg = SMOKE_ARCHS[arch]
+    params = registry.init_params(jax.random.key(0), cfg)
+    opt_state = optim.init(params)
+    step = make_train_step(cfg)
+    batch = _batch(cfg)
+    # step 1, not 0: the warmup schedule gives lr=0 at step 0 by design
+    new_params, new_opt, metrics = step(params, opt_state, batch,
+                                        jnp.int32(1))
+    assert np.isfinite(float(metrics["loss"]))
+    # at least one leaf moved and none became NaN
+    moved = False
+    for old, new in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        assert np.isfinite(np.asarray(new)).all()
+        moved |= bool(jnp.any(old != new))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_axes_cover_every_leaf(arch):
+    """Every param leaf carries logical axes of matching rank (the dry-run
+    sharding machinery depends on this)."""
+    cfg = SMOKE_ARCHS[arch]
+    boxed = registry.abstract_params(cfg)
+    values, axes = unbox(boxed)
+    flat_v = jax.tree.leaves(values)
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_v) == len(flat_a)
+    for v, a in zip(flat_v, flat_a):
+        assert len(v.shape) == len(a), (v.shape, a)
+
+    # stacked (scanned) groups must carry the 'layers' axis first — a
+    # regression here silently shifts every sharding spec by one dim
+    from repro.models.common import Box
+
+    def check(node):
+        if isinstance(node, Box) and node.value.ndim >= 2 \
+                and len(node.axes) == node.value.ndim \
+                and node.axes and node.axes[0] == "layers":
+            assert node.value.shape[0] <= cfg.num_layers + cfg.encoder_layers
+    jax.tree.map(check, boxed, is_leaf=lambda x: isinstance(x, Box))
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-v3-671b",
+                                  "recurrentgemma-9b", "xlstm-125m"])
+def test_short_decode_matches_forward(arch):
+    """Cheap decode-parity check for the stateful families (the full 10-arch
+    24-token sweep runs in CI via tests/test_system.py)."""
+    cfg = SMOKE_ARCHS[arch]
+    params = registry.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
+    logits_tf, _, _ = transformer.forward(params, toks, cfg)
+    caches = transformer.init_decode_caches(cfg, 2, 8)
+    outs = []
+    for t in range(8):
+        lg, caches = transformer.decode_step(params, caches, toks[:, t:t + 1],
+                                             jnp.int32(t), cfg)
+        outs.append(lg)
+    err = float(jnp.abs(logits_tf - jnp.concatenate(outs, 1)).max())
+    assert err < 2e-2, err
+
+
+def test_full_configs_match_assignment():
+    """The exact published dims from the assignment table."""
+    c = ARCHS["command-r-35b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (40, 8192, 64, 8, 22528, 256000)
+    c = ARCHS["deepseek-67b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (95, 8192, 64, 8, 22016, 102400)
+    c = ARCHS["deepseek-v3-671b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.vocab_size) \
+        == (61, 7168, 128, 129280)
+    assert c.moe.num_experts == 256 and c.moe.top_k == 8
+    c = ARCHS["mixtral-8x7b"]
+    assert c.moe.num_experts == 8 and c.moe.top_k == 2 and c.window == 4096
+    c = ARCHS["recurrentgemma-9b"]
+    assert c.recurrent.pattern == ("rglru", "rglru", "attn")
+    c = ARCHS["xlstm-125m"]
+    assert c.num_layers == 12 and c.d_model == 768
+    c = ARCHS["seamless-m4t-large-v2"]
+    assert c.encoder_layers == 24 and c.vocab_size == 256206
+    c = ARCHS["chameleon-34b"]
+    assert c.qk_norm and c.vocab_size == 65536
+    c = ARCHS["minicpm-2b"]
+    assert c.d_model == 2304 and c.vocab_size == 122753
+
+
+def test_param_counts_in_published_range():
+    expected = {
+        "command-r-35b": (28e9, 40e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "deepseek-67b": (60e9, 72e9),
+        "minicpm-2b": (2.2e9, 3.2e9),
+        "deepseek-v3-671b": (640e9, 700e9),
+        "mixtral-8x7b": (43e9, 50e9),
+        "recurrentgemma-9b": (8.5e9, 12e9),
+        "xlstm-125m": (0.1e9, 0.2e9),
+        "chameleon-34b": (30e9, 38e9),
+        "seamless-m4t-large-v2": (1.4e9, 2.5e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = registry.count_params_abstract(ARCHS[arch])
+        assert lo <= n <= hi, (arch, n)
+    # MoE active counts
+    a = registry.count_params_abstract(ARCHS["deepseek-v3-671b"],
+                                       active_only=True)
+    assert 34e9 <= a <= 41e9
+    a = registry.count_params_abstract(ARCHS["mixtral-8x7b"],
+                                       active_only=True)
+    assert 11e9 <= a <= 15e9

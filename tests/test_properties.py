@@ -1,0 +1,103 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kdtree, merge, metrics
+from repro.core.kmeans import lloyd_step
+from repro.distributed import compress
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def point_sets(draw, max_n=200, max_d=4):
+    n = draw(st.integers(8, max_n))
+    d = draw(st.integers(1, max_d))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return np.asarray(jax.random.normal(jax.random.key(seed), (n, d)) * 3)
+
+
+@given(point_sets(), st.integers(2, 6), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_lloyd_step_never_increases_sse(pts, k, seed):
+    pts = jnp.asarray(pts)
+    idx = jax.random.choice(jax.random.key(seed), pts.shape[0], (k,),
+                            replace=False)
+    c = pts[idx]
+    before = float(metrics.sse(pts, c))
+    c2, _ = lloyd_step(pts, c)
+    after = float(metrics.sse(pts, c2))
+    assert after <= before + 1e-3 + 1e-5 * abs(before)
+
+
+@given(point_sets(), st.integers(1, 5))
+@settings(**SET)
+def test_kdtree_is_a_partition(pts, depth):
+    pts = jnp.asarray(pts)
+    region = np.asarray(kdtree.build_kdtree(pts, depth))
+    assert region.shape == (pts.shape[0],)
+    assert region.min() >= 0 and region.max() < 2 ** depth
+    counts = np.bincount(region, minlength=2 ** depth)
+    # exact median splits: leaf sizes differ by at most 1 from each other
+    assert counts.max() - counts.min() <= depth   # ceil-split drift bound
+    assert counts.sum() == pts.shape[0]
+
+
+@given(point_sets(max_n=120), st.integers(2, 8),
+       st.sampled_from(["kd_axis", "kd_random", "random"]),
+       st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_partition_pack_preserves_points(pts, m, strategy, seed):
+    pts = jnp.asarray(pts)
+    part = kdtree.partition_dataset(pts, jax.random.key(seed), m,
+                                    strategy=strategy)
+    if strategy == "random":
+        cap = -(-pts.shape[0] // m)
+    else:
+        # leaves hold up to ceil(n / 2^depth) points (can slightly exceed
+        # m by design — depth targets leaf size CLOSEST to m)
+        max_leaf = -(-pts.shape[0] // (2 ** part.depth))
+        cap = (2 ** part.depth) * (-(-max_leaf // m))
+    packed, mask = kdtree.pack_subsets(pts, part.subset_ids, m, cap)
+    assert int(mask.sum()) == pts.shape[0]
+    total = float(jnp.sum(jnp.where(mask[..., None], packed, 0.0)))
+    np.testing.assert_allclose(total, float(jnp.sum(pts)), rtol=1e-4,
+                               atol=1e-3)
+
+
+@given(st.integers(2, 20), st.integers(1, 19), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_hierarchical_merge_count_and_hull(n, k, seed):
+    k = min(k, n)
+    pts = jax.random.normal(jax.random.key(seed), (n, 3)) * 2
+    out = np.asarray(merge.hierarchical_merge(pts, k))
+    assert out.shape == (k, 3)
+    # midpoints stay inside the bounding box of the inputs
+    lo, hi = np.asarray(pts).min(0) - 1e-5, np.asarray(pts).max(0) + 1e-5
+    assert (out >= lo).all() and (out <= hi).all()
+
+
+@given(point_sets(max_n=100), st.integers(2, 5), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_assignment_is_nearest(pts, k, seed):
+    from repro.kernels import ref
+    pts = jnp.asarray(pts)
+    idx = jax.random.choice(jax.random.key(seed), pts.shape[0], (k,),
+                            replace=False)
+    c = pts[idx]
+    labels, mind = ref.assign_ref(pts, c)
+    d2 = np.asarray(metrics.pairwise_sq_dists(pts, c))
+    np.testing.assert_allclose(np.asarray(mind), d2.min(-1), rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(st.integers(1, 512), st.floats(1e-4, 10.0),
+       st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_int8_quantization_error_bound(n, scale, seed):
+    x = jax.random.normal(jax.random.key(seed), (n,)) * scale
+    q, s = compress.quantize_int8(x)
+    err = np.abs(np.asarray(compress.dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-7
