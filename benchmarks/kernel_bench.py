@@ -1,10 +1,13 @@
-"""Kernel micro-bench: Pallas assignment / update vs jnp reference.
+"""Kernel micro-bench: Pallas assignment / update / fused-Lloyd vs jnp ref.
 
 On this CPU container the Pallas kernels execute under interpret=True (a
 Python interpreter — not meaningful for wall-clock), so the timed comparison
 is jnp-reference vs jnp-reference-at-scale; the Pallas numbers reported are
 correctness-path timings only.  The real target is the TPU lowering, whose
-tiling is validated structurally (block shapes, VMEM footprint) here."""
+tiling is validated structurally here: block shapes, VMEM footprints, and the
+HBM-traffic model that quantifies why the fused single-pass kernel wins —
+one sweep over the points per Lloyd iteration instead of two, with no
+``(n,)`` label/distance round-trip in between."""
 from __future__ import annotations
 
 import jax
@@ -12,13 +15,40 @@ import jax.numpy as jnp
 
 from benchmarks.common import record, timeit
 from repro.kernels import ops, ref
+from repro.kernels.fused import fused_tile_shapes
 
 SIZES = [(10_000, 2, 5), (100_000, 16, 64), (500_000, 64, 256)]
+F32 = 4  # bytes
 
 
-def vmem_footprint(bn, bk, d_pad, dtype_bytes=4):
+def vmem_footprint(bn, bk, d_pad, dtype_bytes=F32):
     """Bytes of VMEM the assign kernel's working set claims per grid step."""
     return (bn * d_pad + bk * d_pad + bk + 2 * bn) * dtype_bytes
+
+
+def fused_vmem_footprint(bn, bk, k_pad, d_pad, dtype_bytes=F32):
+    """Fused kernel working set: x/c/cn/w tiles + resident (sums, counts,
+    sse) output blocks + the (best, idx) scratch pair."""
+    return (bn * d_pad + bk * d_pad + bk + bn          # inputs
+            + k_pad * d_pad + k_pad + 1                # resident outputs
+            + 2 * bn) * dtype_bytes                    # argmin scratch
+
+
+def lloyd_hbm_bytes(n, d, k, fused: bool):
+    """Analytic HBM traffic of ONE Lloyd iteration (f32).
+
+    two-kernel: assign reads the points and writes (labels, mind); the
+    update kernel re-reads the points plus (labels, weights) — the n*d
+    stream happens twice and 4 (n,) vectors round-trip in between.
+    fused: the points stream once, weights ride along, and only the
+    (k,d)+(k,)+() accumulators come back.
+    """
+    small = k * d * F32 * 2 + k * F32          # centroids in, sums/counts out
+    if fused:
+        return n * d * F32 + n * F32 + small
+    return (2 * n * d * F32                    # points read twice
+            + 4 * n * F32                      # labels+mind out, labels+w in
+            + small)
 
 
 def run():
@@ -29,20 +59,62 @@ def run():
         c = jax.random.normal(kc, (k, d), jnp.float32)
         fn = jax.jit(lambda x, c: ref.assign_ref(x, c))
         t = timeit(fn, x, c)
-        bn, bk = 256, 128
-        d_pad = max(-(-d // 128) * 128, 128)
+        # the kernels' actual tiling (block sizes clamp on small shapes)
+        bn, bk, _, k_pad, d_pad = fused_tile_shapes(n, d, k)
+        # fused vs two-kernel: one HBM sweep per iteration instead of two
+        two_pass = lloyd_hbm_bytes(n, d, k, fused=False)
+        fused = lloyd_hbm_bytes(n, d, k, fused=True)
+        t_lloyd = timeit(jax.jit(lambda x, c: ref.lloyd_step_ref(x, c)), x, c)
         rows.append({
             "n": n, "d": d, "k": k,
             "jnp_ref_us": t * 1e6,
+            "jnp_lloyd_step_us": t_lloyd * 1e6,
             "flops": 2.0 * n * k * d,
             "gflops_per_s": 2.0 * n * k * d / t / 1e9,
             "pallas_block": [bn, bk, d_pad],
             "pallas_vmem_bytes": vmem_footprint(bn, bk, d_pad),
             "vmem_ok": vmem_footprint(bn, bk, d_pad) < 16 * 2 ** 20,
+            "fused_vmem_bytes": fused_vmem_footprint(bn, bk, k_pad, d_pad),
+            "fused_vmem_ok":
+                fused_vmem_footprint(bn, bk, k_pad, d_pad) < 16 * 2 ** 20,
+            "hbm_bytes_two_pass": two_pass,
+            "hbm_bytes_fused": fused,
+            "fused_hbm_ratio": two_pass / fused,
         })
+
+    # correctness-path comparison row (interpret mode, smallest size only —
+    # wall-clock of the Python interpreter is NOT the TPU story, the row
+    # exists so CI exercises the fused path end-to-end inside the harness)
+    n, d, k = SIZES[0]
+    kx, kc = jax.random.split(jax.random.key(n))
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    c = jax.random.normal(kc, (k, d), jnp.float32)
+    w = jnp.ones((n,), jnp.float32)
+
+    def two_kernel(x, c):
+        labels, mind = ops.assign(x, c, interpret=True)
+        sums, counts = ops.centroid_update(x, labels, w, k, interpret=True)
+        return sums, counts, jnp.sum(mind)
+
+    t_two = timeit(jax.jit(two_kernel), x, c)
+    t_fus = timeit(jax.jit(
+        lambda x, c: ops.lloyd_step_fused(x, c, interpret=True)), x, c)
+    rows.append({
+        "n": n, "d": d, "k": k, "mode": "interpret-correctness-path",
+        "pallas_two_kernel_us": t_two * 1e6,
+        "pallas_fused_us": t_fus * 1e6,
+        "hbm_bytes_two_pass": lloyd_hbm_bytes(n, d, k, fused=False),
+        "hbm_bytes_fused": lloyd_hbm_bytes(n, d, k, fused=True),
+        "fused_hbm_ratio": (lloyd_hbm_bytes(n, d, k, fused=False)
+                            / lloyd_hbm_bytes(n, d, k, fused=True)),
+    })
+
     record("kernel_bench", rows,
-           ("kernel_assign", f"{rows[-1]['jnp_ref_us']:.0f}",
-            f"gflops={rows[-1]['gflops_per_s']:.1f}"))
+           ("kernel_assign", f"{rows[-2]['jnp_ref_us']:.0f}",
+            f"gflops={rows[-2]['gflops_per_s']:.1f}"))
+    record("kernel_bench", rows,
+           ("kernel_fused_vs_two", f"{rows[-1]['pallas_fused_us']:.0f}",
+            f"hbm_ratio={rows[-1]['fused_hbm_ratio']:.2f}"))
     return rows
 
 

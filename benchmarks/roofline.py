@@ -1,19 +1,57 @@
-"""§Roofline: render the three-term roofline table from the dry-run JSONs."""
+"""§Roofline: render the three-term roofline table from the dry-run JSONs.
+
+For the kmeans Lloyd cells the table also carries a *fused-kernel memory
+projection*: ``memory_s_fused`` is the analytic per-device HBM time of one
+fused-kernel iteration (``kernel_bench.lloyd_hbm_bytes(..., fused=True)``
+over the device's shard), and ``fused_hbm_ratio`` is how much less traffic
+that is than the two-kernel path's model (roughly 2x for the production
+d=64 problem).  Both columns are analytic — the measured ``memory_s`` comes
+from the jnp lowering's HLO, which materializes the (n, k) distance matrix
+and is not comparable to either kernel model; lowering with
+``--backend fused`` on a TPU target replaces the model with measurement
+(ROADMAP open item).
+"""
 from __future__ import annotations
 
 import json
+import re
 from pathlib import Path
 
 from benchmarks.common import record
+from benchmarks.kernel_bench import lloyd_hbm_bytes
 
 DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
 
 def load(mesh="16x16"):
-    recs = []
-    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
-        recs.append(json.loads(p.read_text()))
-    return recs
+    paths = set(DRYRUN.glob(f"*__{mesh}.json"))
+    for backend in ("pallas", "fused"):        # kmeans_dryrun --backend ...
+        paths |= set(DRYRUN.glob(f"*__{mesh}__{backend}.json"))
+    return [json.loads(p.read_text()) for p in sorted(paths)]
+
+
+def fused_projection(rec):
+    """For a kmeans dry-run record, the analytic per-device memory time of
+    one fused-kernel Lloyd iteration over the device's shard.  Returns
+    (ratio, memory_s_fused) or None when the record is not a Lloyd-loop
+    cell (S1 has no assign/update phase) or was already lowered with the
+    fused backend."""
+    if not rec["arch"].startswith("kmeans-") or "-s1" in rec["arch"]:
+        return None
+    if rec.get("backend", "jnp") == "fused":
+        return None
+    m = re.match(r"n(\d+)_d(\d+)_k(\d+)", rec.get("shape", ""))
+    if not m:
+        return None
+    n, d, k = map(int, m.groups())
+    n_dev = 1
+    for s in rec.get("mesh", "1").split("x"):
+        n_dev *= int(s)
+    n_local = -(-n // n_dev)
+    ratio = lloyd_hbm_bytes(n_local, d, k, fused=False) \
+        / lloyd_hbm_bytes(n_local, d, k, fused=True)
+    from repro.launch.dryrun import HBM_BW
+    return ratio, lloyd_hbm_bytes(n_local, d, k, fused=True) / HBM_BW
 
 
 def run(mesh="16x16"):
@@ -27,7 +65,7 @@ def run(mesh="16x16"):
         rf = r.get("roofline_expanded", r["roofline"])
         bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
         flops = r.get("flops_expanded", r.get("flops", 0))
-        rows.append({
+        row = {
             "arch": r["arch"], "shape": r["shape"], "status": "ok",
             "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
             "collective_s": rf["collective_s"],
@@ -37,7 +75,13 @@ def run(mesh="16x16"):
                 r.get("model_flops_per_device", 0) / flops if flops else 0,
             "hbm_args_gb": r.get("argument_size_in_bytes", 0) / 2**30,
             "hbm_temp_gb": r.get("temp_size_in_bytes", 0) / 2**30,
-        })
+        }
+        if "backend" in r:
+            row["backend"] = r["backend"]
+        proj = fused_projection(r)
+        if proj is not None:
+            row["fused_hbm_ratio"], row["memory_s_fused"] = proj
+        rows.append(row)
     ok = [r for r in rows if r.get("status") == "ok"]
     worst = min(ok, key=lambda r: r["roofline_fraction"]) if ok else None
     record(f"roofline_{mesh}", rows,

@@ -5,11 +5,18 @@ experiments/bench/*.json.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: per-bench failures become warnings and "
+                         "the exit code stays 0 — only a harness crash "
+                         "(anything escaping the per-bench guard) fails")
+    args = ap.parse_args()
     from benchmarks import (fig5_io, fig6_time, fig8_variants, kernel_bench,
                             roofline, table1_sse, table2_reducers,
                             table3_large)
@@ -32,7 +39,10 @@ def main() -> None:
             failed += 1
             print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}",
                   flush=True)
-    if failed:
+            if args.smoke:
+                print(f"::warning::benchmark {name} failed (tolerated in "
+                      f"--smoke mode)", flush=True)
+    if failed and not args.smoke:
         sys.exit(1)
 
 

@@ -36,7 +36,8 @@ def main():
     _, _, history = train_loop(
         cfg, steps=args.steps, global_batch=args.batch, seq_len=args.seq,
         ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=10,
-        adamw_cfg=optim.AdamWConfig(weight_decay=0.01))
+        adamw_cfg=optim.AdamWConfig(weight_decay=0.01),
+        schedule=schedule)
     first, last = history[0][1], history[-1][1]
     print(f"loss: {first:.3f} -> {last:.3f} "
           f"({'improved' if last < first else 'NO IMPROVEMENT'})")

@@ -1,0 +1,64 @@
+"""Version shims for the JAX API surface this repo targets.
+
+The codebase is written against the modern ``jax.shard_map`` entry point
+(with its ``check_vma`` argument).  Older jaxlibs (<0.5) only ship
+``jax.experimental.shard_map.shard_map`` whose equivalent knob is named
+``check_rep``.  Everything routes through :func:`shard_map` here so the
+solvers, the MoE layers, and the dry-run launchers run unmodified on both —
+which is what lets the CI kernel/tier-1 jobs execute on whatever jax the
+runner has.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):                          # jax >= 0.5
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:                                                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit-Auto axis types where the installed
+    jax knows about them (``jax.sharding.AxisType`` appeared after 0.4)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh:
+    ``jax.set_mesh`` where it exists, else the legacy ``with mesh:`` form
+    (Mesh is its own context manager on jax 0.4.x)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh (``jax.sharding.get_abstract_mesh`` on modern jax);
+    on 0.4.x, the physical mesh installed by the legacy ``with mesh:`` form.
+    Both expose ``.axis_names`` and a dict-like ``.shape``."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+    return thread_resources.env.physical_mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict on every jax: 0.4.x returns a
+    one-element list of per-device dicts, newer jax returns the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import kdtree, merge, metrics
 from repro.core.kmeans import KMeansParams, KMeansResult, kmeans_batched
 
@@ -34,6 +35,15 @@ class IPKMeansConfig:
     leaf_capacity: int | None = None        # default: num_subsets (paper)
     label_axis: int = 0
     kmeans: KMeansParams = KMeansParams()
+
+    def with_backend(self, backend: str) -> "IPKMeansConfig":
+        """Same config, different Lloyd backend ('jnp' | 'pallas' | 'fused').
+
+        The backend is the hot-path choice every S2 reducer executes; this
+        helper keeps it switchable without re-spelling the whole config.
+        """
+        return dataclasses.replace(
+            self, kmeans=self.kmeans._replace(backend=backend))
 
     def subset_capacity(self, n: int) -> int:
         """Static bound on points per subset (tensor packing size)."""
@@ -121,7 +131,7 @@ def ipkmeans_distributed(points: jnp.ndarray,
         return kmeans_batched(sub, msk, init_centroids, cfg.kmeans)
 
     spec = P(axis_names)
-    s2 = jax.shard_map(
+    s2 = shard_map(
         s2_body, mesh=mesh, in_specs=(spec, spec),
         out_specs=KMeansResult(spec, spec, spec, spec, spec),
         check_vma=False)

@@ -19,6 +19,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 
 class Partition(NamedTuple):
     subset_ids: jnp.ndarray      # (n,) int32 in [0, num_subsets)
@@ -290,7 +292,7 @@ def pack_subsets_a2a(points: jnp.ndarray,
         return out, msk
 
     spec = P(axis_names)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(spec, spec),
         out_specs=(P(axis_names, None, None), P(axis_names, None)),

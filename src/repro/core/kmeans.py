@@ -5,9 +5,14 @@ collectives — so under ``shard_map`` every device iterates *independently* to
 convergence, which is exactly the paper's "each reducer runs one complete
 k-means" semantics (Algorithm 4).
 
-The assignment step can route through the Pallas kernel (``backend='pallas'``)
-or the pure-jnp reference (``backend='jnp'``, default — also the oracle the
-kernel is tested against).
+Three interchangeable backends drive the Lloyd iteration:
+
+  * ``'jnp'``   — pure-jnp reference (default; also the test oracle),
+  * ``'pallas'``— two Pallas kernels (assign, then centroid update): the
+    points stream from HBM twice per iteration,
+  * ``'fused'`` — single-pass Pallas kernel (``kernels/fused.py``): assign
+    and accumulate in one grid sweep, labels/distances never leave VMEM —
+    the paper's one-job argument applied to the memory hierarchy.
 """
 from __future__ import annotations
 
@@ -20,10 +25,13 @@ import jax.numpy as jnp
 from repro.core import metrics
 
 
+BACKENDS = ("jnp", "pallas", "fused")
+
+
 class KMeansParams(NamedTuple):
     max_iters: int = 300
     tol: float = 1e-6             # paper: "until centroids stop moving"
-    backend: str = "jnp"          # 'jnp' | 'pallas'
+    backend: str = "jnp"          # 'jnp' | 'pallas' | 'fused'
 
 
 class KMeansResult(NamedTuple):
@@ -36,7 +44,10 @@ class KMeansResult(NamedTuple):
 
 def _assign(points, centroids, backend: str):
     """Nearest-centroid labels + squared distances, (n,) i32 and (n,) f32."""
-    if backend == "pallas":
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend: {backend!r} "
+                         f"(expected one of {BACKENDS})")
+    if backend in ("pallas", "fused"):
         from repro.kernels import ops
         return ops.assign(points, centroids)
     d2 = metrics.pairwise_sq_dists(points, centroids)
@@ -59,13 +70,26 @@ def _update(points, labels, mind, mask, k: int, old_centroids, backend: str):
     new_c = jnp.where(counts[:, None] > 0.0,
                       sums / jnp.maximum(counts[:, None], 1.0),
                       old_centroids)
-    shard_sse = jnp.sum(jnp.where(w > 0.0, mind, 0.0))
+    # weight-scaled, matching the fused kernel (identical for 0/1 masks)
+    shard_sse = jnp.sum(w * mind)
     return new_c, shard_sse
 
 
 def lloyd_step(points, centroids, mask=None, backend: str = "jnp"):
     """One Lloyd iteration: assign + update. Returns (new_centroids, sse)."""
     k = centroids.shape[0]
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend: {backend!r} "
+                         f"(expected one of {BACKENDS})")
+    if backend == "fused":
+        from repro.kernels import ops
+        w = None if mask is None else mask.astype(points.dtype)
+        sums, counts, shard_sse = ops.lloyd_step_fused(points, centroids, w)
+        new_c = jnp.where(counts[:, None] > 0.0,
+                          sums / jnp.maximum(counts[:, None], 1.0),
+                          centroids.astype(jnp.float32))
+        # f32 accumulators; cast back so while_loop carries keep their dtype
+        return new_c.astype(centroids.dtype), shard_sse
     labels, mind = _assign(points, centroids, backend)
     return _update(points, labels, mind, mask, k, centroids, backend)
 
@@ -102,7 +126,7 @@ def kmeans(points: jnp.ndarray,
     labels, mind = _assign(points, final_c, params.backend)
     w = jnp.ones(points.shape[0], points.dtype) if mask is None \
         else mask.astype(points.dtype)
-    total_sse = jnp.sum(jnp.where(w > 0.0, mind, 0.0))
+    total_sse = jnp.sum(w * mind)
     cnt = jnp.sum(w)
     # empty shards must never win the min-ASSE merge: ASSE = +inf
     asse = jnp.where(cnt > 0.0, total_sse / jnp.maximum(cnt, 1.0), jnp.inf)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import metrics
 from repro.core.kmeans import KMeansParams, _assign
 
@@ -30,13 +31,18 @@ class PKMeansResult(NamedTuple):
 def _local_stats(points, centroids, mask, backend):
     """Mapper + combiner: local label assignment and partial (sums, counts)."""
     k = centroids.shape[0]
+    if backend == "fused":
+        from repro.kernels import ops
+        w = None if mask is None else mask.astype(points.dtype)
+        return ops.lloyd_step_fused(points, centroids, w)
     labels, mind = _assign(points, centroids, backend)
     w = jnp.ones(points.shape[0], points.dtype) if mask is None \
         else mask.astype(points.dtype)
     onehot = jax.nn.one_hot(labels, k, dtype=points.dtype) * w[:, None]
     sums = onehot.T @ points
     counts = jnp.sum(onehot, axis=0)
-    local_sse = jnp.sum(jnp.where(w > 0.0, mind, 0.0))
+    # weight-scaled, matching the fused kernel (identical for 0/1 masks)
+    local_sse = jnp.sum(w * mind)
     return sums, counts, local_sse
 
 
@@ -59,7 +65,8 @@ def pkmeans(points: jnp.ndarray,
         c, _, it, _ = carry
         sums, counts, _ = _local_stats(points, c, mask, params.backend)
         new_c = jnp.where(counts[:, None] > 0.0,
-                          sums / jnp.maximum(counts[:, None], 1.0), c)
+                          sums / jnp.maximum(counts[:, None], 1.0),
+                          c.astype(sums.dtype)).astype(c.dtype)
         return (new_c, c, it + 1, metrics.centroid_shift(new_c, c))
 
     init = (init_centroids, init_centroids, jnp.int32(0), jnp.asarray(jnp.inf))
@@ -89,7 +96,8 @@ def pkmeans_sharded(mesh,
             sums = jax.lax.psum(sums, axis_names)      # <- the "MapReduce job"
             counts = jax.lax.psum(counts, axis_names)
             new_c = jnp.where(counts[:, None] > 0.0,
-                              sums / jnp.maximum(counts[:, None], 1.0), c)
+                              sums / jnp.maximum(counts[:, None], 1.0),
+                              c.astype(sums.dtype)).astype(c.dtype)
             return (new_c, c, it + 1, metrics.centroid_shift(new_c, c))
 
         init = (init_centroids, init_centroids, jnp.int32(0),
@@ -100,7 +108,7 @@ def pkmeans_sharded(mesh,
         return PKMeansResult(final_c, total, iters, shift <= params.tol)
 
     shard_axes = P(axis_names)
-    return jax.shard_map(
+    return shard_map(
         solve, mesh=mesh,
         in_specs=(shard_axes, P(), shard_axes),
         out_specs=PKMeansResult(P(), P(), P(), P()),

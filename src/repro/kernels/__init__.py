@@ -1,6 +1,31 @@
-"""Pallas TPU kernels for the k-means hot-spots (assignment + update)."""
+"""Pallas TPU kernels for the k-means hot-spots.
+
+Backends (selected via ``KMeansParams.backend`` / ``IPKMeansConfig``):
+
+  * ``jnp``    — pure-jnp reference (``ref.py``).  Ground truth for every
+    kernel test, and the default on hosts without a TPU where wall-clock of
+    the interpreted kernels is meaningless.  Use it for debugging and as the
+    oracle in CI.
+  * ``pallas`` — the two-kernel path: ``assign.py`` (online min/argmin over
+    centroid tiles) then ``centroid_update.py`` (MXU one-hot segment-sum).
+    Streams all ``n`` points from HBM twice per Lloyd iteration and
+    round-trips the ``(n,)`` labels/distances through HBM in between.  Use
+    it when the labels themselves are needed (e.g. final assignment dumps).
+  * ``fused``  — ``fused.py``: one grid sweep does assignment *and*
+    accumulates per-cluster sums/counts/SSE, so points are read once per
+    iteration and labels never leave VMEM (~half the HBM traffic of
+    ``pallas``).  The preferred TPU backend for the Lloyd inner loop.
+
+CI exercises all three: the kernel-correctness job sweeps ``pallas`` and
+``fused`` in interpret mode against ``ref.py`` (tests/test_kernels.py,
+tests/test_fused.py), and the tier-1 gate runs the solvers on the ``jnp``
+backend.  On non-TPU hosts ``ops.py`` transparently falls back to
+``interpret=True``.
+"""
 from repro.kernels import ops, ref
 from repro.kernels.assign import assign_pallas
 from repro.kernels.centroid_update import centroid_update_pallas
+from repro.kernels.fused import lloyd_step_fused
 
-__all__ = ["ops", "ref", "assign_pallas", "centroid_update_pallas"]
+__all__ = ["ops", "ref", "assign_pallas", "centroid_update_pallas",
+           "lloyd_step_fused"]

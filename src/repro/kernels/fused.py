@@ -1,0 +1,175 @@
+"""Pallas TPU kernel: fused single-pass Lloyd iteration.
+
+The two-kernel path (``assign_pallas`` then ``centroid_update_pallas``)
+streams all ``n`` points from HBM twice per Lloyd iteration and round-trips
+the ``(n,)`` labels and distances through HBM in between.  That is the
+kernel-level analogue of PKMeans' cascaded MapReduce jobs; this kernel is the
+paper's "one job" argument applied to the memory hierarchy: assignment and
+accumulation happen in a *single* grid sweep, so each point tile is read from
+HBM exactly once per iteration and the labels/distances never leave VMEM.
+
+TPU mapping (grid = ``(n_blocks, k_blocks)``, k minor):
+
+  * phase 1 (every ``j``): the same flash-attention-style online
+    (best_score, best_index) reduction as ``assign.py`` — a ``(bn x d) @
+    (d x bk)`` MXU matmul per step — except the running pair is carried in
+    VMEM *scratch* instead of an output block, because it is iteration-local
+    state, not a kernel result;
+  * phase 2 (``j == k_blocks-1`` only): with the argmin now complete for this
+    x-tile, build the one-hot matrix from the scratch indices and fire the
+    MXU segment-sum of ``centroid_update.py`` — accumulating partial
+    ``sums (k, d)``, ``counts (k,)`` and shard SSE into revisited output
+    blocks that stay resident in VMEM for the whole sweep.
+
+Padding follows the other kernels: d zero-padded to the 128-lane boundary
+(exact for squared euclidean), n/k padded to block multiples; padded
+centroids are masked to +inf scores, padded points carry weight 0, so neither
+can contaminate the accumulators.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
+                  sums_ref, counts_ref, sse_ref,
+                  best_scr, idx_scr, *,
+                  block_k: int, k_actual: int, last_j: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)                    # (bn, d)
+    c = c_ref[...].astype(jnp.float32)                    # (bk, d)
+    cn = cn_ref[...].astype(jnp.float32)                  # (1, bk)
+
+    # --- phase 1: online argmin over centroid tiles (same as assign.py) ---
+    # score = ||c||^2 - 2 x.c   (row-constant ||x||^2 omitted)
+    s = cn - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col < k_actual, s, jnp.inf)             # mask padded centroids
+
+    local_best = jnp.min(s, axis=1)                       # (bn,)
+    local_idx = (jnp.argmin(s, axis=1).astype(jnp.int32) + j * block_k)
+
+    @pl.when(j == 0)
+    def _init_scratch():
+        best_scr[...] = local_best
+        idx_scr[...] = local_idx
+
+    @pl.when(j > 0)
+    def _accumulate_scratch():
+        prev_best = best_scr[...]
+        prev_idx = idx_scr[...]
+        take = local_best < prev_best                     # strict: low-index ties win
+        best_scr[...] = jnp.where(take, local_best, prev_best)
+        idx_scr[...] = jnp.where(take, local_idx, prev_idx)
+
+    # --- phase 2: the argmin is final — accumulate sums/counts/SSE without
+    # the labels ever touching HBM (same MXU one-hot matmul as
+    # centroid_update.py) ---
+    @pl.when(j == last_j)
+    def _flush():
+        w = w_ref[...].astype(jnp.float32)                # (bn,)
+        idx = idx_scr[...]
+        k_pad = sums_ref.shape[0]
+        onehot = (idx[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (idx.shape[0], k_pad), 1)).astype(jnp.float32)
+        onehot = onehot * w[:, None]
+
+        local_sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+        local_counts = jnp.sum(onehot, axis=0)[None, :]   # (1, k_pad)
+        # add the row-constant ||x||^2 back to recover true distances
+        x2 = jnp.sum(x * x, axis=1)
+        mind = jnp.maximum(best_scr[...] + x2, 0.0)
+        local_sse = jnp.sum(w * mind)[None, None]         # (1, 1)
+
+        @pl.when(i == 0)
+        def _init_out():
+            sums_ref[...] = local_sums
+            counts_ref[...] = local_counts
+            sse_ref[...] = local_sse
+
+        @pl.when(i > 0)
+        def _accumulate_out():
+            sums_ref[...] += local_sums
+            counts_ref[...] += local_counts
+            sse_ref[...] += local_sse
+
+
+def fused_tile_shapes(n: int, d: int, k: int,
+                      block_n: int = 256, block_k: int = 128):
+    """The kernel's tiling policy: (bn, bk, n_pad, k_pad, d_pad).
+
+    Single source of truth — the wrapper below and the VMEM-footprint
+    accounting in benchmarks/kernel_bench.py both read it, so the reported
+    working sets always match what the kernel actually allocates."""
+    bn = min(block_n, max(8, n))
+    bk = min(block_k, max(8, k))
+    n_pad = -(-n // bn) * bn
+    k_pad = -(-k // bk) * bk
+    d_pad = max(-(-d // 128) * 128, 128)
+    return bn, bk, n_pad, k_pad, d_pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def lloyd_step_fused(points: jnp.ndarray,
+                     centroids: jnp.ndarray,
+                     weights: jnp.ndarray | None = None,
+                     *,
+                     block_n: int = 256,
+                     block_k: int = 128,
+                     interpret: bool = False):
+    """One fused Lloyd pass: (n,d),(k,d)[,(n,)] ->
+    sums (k,d) f32, counts (k,) f32, sse () f32.
+
+    ``weights`` defaults to all-ones; pass a 0/1 mask (or arbitrary
+    non-negative weights) to ignore padded rows.  Callers divide
+    ``sums / counts`` (guarding empty clusters) to get the new centroids —
+    kept outside the kernel so the division policy stays in one place
+    (``core.kmeans``).
+    """
+    n, d = points.shape
+    k = centroids.shape[0]
+    bn, bk, n_pad, k_pad, d_pad = fused_tile_shapes(n, d, k, block_n, block_k)
+
+    x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
+    c = jnp.zeros((k_pad, d_pad), centroids.dtype).at[:k, :d].set(centroids)
+    cn = jnp.sum(c.astype(jnp.float32) ** 2, axis=-1)[None, :]   # (1, k_pad)
+    w = jnp.zeros((n_pad,), jnp.float32)
+    w = w.at[:n].set(1.0 if weights is None
+                     else weights.astype(jnp.float32))
+
+    grid = (n_pad // bn, k_pad // bk)
+    sums, counts, sse = pl.pallas_call(
+        functools.partial(_fused_kernel, block_k=bk, k_actual=k,
+                          last_j=grid[1] - 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k_pad, d_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, k_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),               # running best score
+            pltpu.VMEM((bn,), jnp.int32),                 # running best index
+        ],
+        interpret=interpret,
+    )(x, c, cn, w)
+
+    return sums[:k, :d], counts[0, :k], sse[0, 0]

@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels.assign import assign_pallas
 from repro.kernels.centroid_update import centroid_update_pallas
+from repro.kernels.fused import lloyd_step_fused as _lloyd_step_fused
 from repro.kernels import ref
 
 
@@ -35,6 +36,18 @@ def centroid_update(points, labels, weights, k: int, *, block_n: int = 512,
                                   block_n=block_n, interpret=interpret)
 
 
+def lloyd_step_fused(points, centroids, weights=None, *, block_n: int = 256,
+                     block_k: int = 128, interpret: bool | None = None):
+    """One fused Lloyd pass -> (sums (k,d), counts (k,), sse ()) — the
+    single-sweep kernel; points are read from HBM once per iteration."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _lloyd_step_fused(points, centroids, weights,
+                             block_n=block_n, block_k=block_k,
+                             interpret=interpret)
+
+
 # re-export oracles so callers can switch implementations uniformly
 assign_ref = ref.assign_ref
 centroid_update_ref = ref.centroid_update_ref
+lloyd_step_ref = ref.lloyd_step_ref

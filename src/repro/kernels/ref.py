@@ -25,3 +25,18 @@ def centroid_update_ref(points: jnp.ndarray, labels: jnp.ndarray,
     sums = onehot.T @ points.astype(jnp.float32)
     counts = jnp.sum(onehot, axis=0)
     return sums, counts
+
+
+def lloyd_step_ref(points: jnp.ndarray, centroids: jnp.ndarray,
+                   weights: jnp.ndarray | None = None):
+    """Oracle for the fused kernel: one Lloyd pass over the data ->
+    sums (k,d) f32, counts (k,) f32, sse () f32.  Composes the two
+    single-phase oracles, so the fused kernel is tested against exactly the
+    semantics the two-kernel path implements."""
+    k = centroids.shape[0]
+    w = (jnp.ones(points.shape[0], jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    labels, mind = assign_ref(points, centroids)
+    sums, counts = centroid_update_ref(points, labels, w, k)
+    sse = jnp.sum(w * mind)
+    return sums, counts, sse

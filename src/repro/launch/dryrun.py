@@ -28,6 +28,8 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
@@ -238,7 +240,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         record["compile_s"] = round(time.time() - t1, 1)
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     record["flops"] = float(cost.get("flops", 0.0))
     record["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
     mem = compiled.memory_analysis()

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.core import IPKMeansConfig, KMeansParams, kdtree
 from repro.core.kmeans import KMeansResult, kmeans_batched
 from repro.core.merge import min_asse_merge
@@ -64,7 +66,7 @@ def count_collectives_in_while_bodies(hlo: str) -> int:
 
 
 def _record(name, mesh_tag, lowered, compiled, extra=None):
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     txt = compiled.as_text()
     coll = collective_bytes(txt)
     counts = coll.pop("_counts", {})
@@ -96,9 +98,15 @@ def _record(name, mesh_tag, lowered, compiled, extra=None):
     return rec
 
 
-def lower_all(multi_pod: bool):
+def lower_all(multi_pod: bool, backend: str = "jnp"):
+    """Lower the dry-run cells.  ``backend`` picks the Lloyd kernel path for
+    pkmeans-iter and s2s3 ('jnp' | 'pallas' | 'fused'); non-default backends
+    skip the backend-independent S1 cells and write records suffixed
+    ``__<backend>`` so perf_variants can diff them against the jnp
+    baselines."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "x".join(map(str, mesh.devices.shape))
+    file_tag = mesh_tag if backend == "jnp" else f"{mesh_tag}__{backend}"
     axes = tuple(mesh.axis_names)
     flat = P(axes)
     n_dev = 512 if multi_pod else 256
@@ -112,12 +120,12 @@ def lower_all(multi_pod: bool):
     # ---- PKMeans: one Lloyd iteration with its global psum ----
     def pk_step(points, centroids):
         def body(p, c):
-            sums, counts, _ = _local_stats(p, c, None, "jnp")
+            sums, counts, _ = _local_stats(p, c, None, backend)
             sums = jax.lax.psum(sums, axes)
             counts = jax.lax.psum(counts, axes)
             return jnp.where(counts[:, None] > 0,
                              sums / jnp.maximum(counts[:, None], 1.0), c)
-        return jax.shard_map(body, mesh=mesh, in_specs=(P(axes, None), P()),
+        return shard_map(body, mesh=mesh, in_specs=(P(axes, None), P()),
                              out_specs=P(), check_vma=False)(points, centroids)
 
     t0 = time.time()
@@ -145,7 +153,9 @@ def lower_all(multi_pod: bool):
         return s1
 
     key_abs = jax.eval_shape(lambda: jax.random.key(0))
-    for builder, pack_mode, name, note in (
+    # S1 has no Lloyd phase, so its cells are backend-independent — lower
+    # them only for the jnp baseline (the slowest compiles of the sweep)
+    s1_cells = () if backend != "jnp" else (
             ("sort", "scatter", "ipkmeans-s1",
              "one-off preprocessing: O(log n) sort rounds (paper-faithful)"),
             ("histogram", "scatter", "ipkmeans-s1-hist",
@@ -153,7 +163,8 @@ def lower_all(multi_pod: bool):
             ("histogram", "sorted", "ipkmeans-s1-opt",
              "perf C2: C1 + sort+reshape pack (kills dataset all-reduce)"),
             ("histogram", "a2a", "ipkmeans-s1-a2a",
-             "perf C3: C1 + explicit shard_map all_to_all shuffle")):
+             "perf C3: C1 + explicit shard_map all_to_all shuffle"))
+    for builder, pack_mode, name, note in s1_cells:
         t0 = time.time()
         low = jax.jit(make_s1(builder, pack_mode),
                       in_shardings=(shard_pts, repl)).lower(pts, key_abs)
@@ -168,13 +179,13 @@ def lower_all(multi_pod: bool):
     msk_shape = jax.ShapeDtypeStruct((M, 2 ** depth), bool)
     shard_m = NamedSharding(mesh, P(axes, None, None))
     shard_mm = NamedSharding(mesh, P(axes, None))
-    params = KMeansParams(max_iters=MAX_ITERS)
+    params = KMeansParams(max_iters=MAX_ITERS, backend=backend)
 
     def s2s3(subsets, masks, init_centroids):
         def body(sub, msk):
             return kmeans_batched(sub, msk, init_centroids, params)
         spec = P(axes)
-        res = jax.shard_map(
+        res = shard_map(
             body, mesh=mesh, in_specs=(spec, spec),
             out_specs=KMeansResult(spec, spec, spec, spec, spec),
             check_vma=False)(subsets, masks)
@@ -197,7 +208,8 @@ def lower_all(multi_pod: bool):
 
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     for rec in results:
-        path = OUT_DIR / f"{rec['arch']}__{mesh_tag}.json"
+        rec["backend"] = backend
+        path = OUT_DIR / f"{rec['arch']}__{file_tag}.json"
         path.write_text(json.dumps(rec, indent=2))
         rf = rec["roofline"]
         print(f"{rec['arch']:22s} {mesh_tag}: dom={rf['dominant']:12s} "
@@ -210,8 +222,11 @@ def lower_all(multi_pod: bool):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--backend", default="jnp",
+                    choices=["jnp", "pallas", "fused"],
+                    help="Lloyd kernel path lowered into the programs")
     args = ap.parse_args()
-    lower_all(args.multi_pod)
+    lower_all(args.multi_pod, backend=args.backend)
 
 
 if __name__ == "__main__":

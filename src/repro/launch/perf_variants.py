@@ -69,11 +69,58 @@ VARIANTS = {
                    ARCHS["mixtral-8x7b"].moe, dispatch="local"),
                    "remat": "save_moe"},
                note="local dispatch + save-moe remat, train shape"),
-    # --- Cell C is driven by kmeans_dryrun.py (paper's own technique) ---
+    # --- Cell C is driven by kmeans_dryrun.py (paper's own technique);
+    #     its kernel-backend variants live in KMEANS_VARIANTS below ---
+}
+
+# Cell C: the paper's own technique.  Variants swap the Lloyd kernel path
+# every S2 reducer executes (see src/repro/kernels/__init__.py for the
+# backend taxonomy); kmeans_dryrun lowers the full production problem with
+# the chosen backend and we diff its roofline against the jnp baseline.
+KMEANS_VARIANTS = {
+    "C1": dict(backend="pallas",
+               note="two-kernel Pallas Lloyd (assign + update: points "
+                    "stream HBM twice per iteration)"),
+    "C2": dict(backend="fused",
+               note="fused single-pass Lloyd kernel (one HBM sweep per "
+                    "iteration; labels/distances never leave VMEM)"),
 }
 
 
+def run_kmeans(tag: str, force: bool = False):
+    """Lower the kmeans dry-run with a non-default kernel backend and diff
+    its roofline terms against the jnp baseline records."""
+    from repro.launch import kmeans_dryrun
+
+    v = KMEANS_VARIANTS[tag]
+    backend = v["backend"]
+    mesh_tag = "16x16"
+    stages = ("kmeans-pkmeans-iter", "kmeans-ipkmeans-s2s3")
+
+    if force or not all((OUT_DIR / f"{s}__{mesh_tag}__{backend}.json").exists()
+                        for s in stages):
+        kmeans_dryrun.lower_all(multi_pod=False, backend=backend)
+    if not all((OUT_DIR / f"{s}__{mesh_tag}.json").exists() for s in stages):
+        kmeans_dryrun.lower_all(multi_pod=False, backend="jnp")
+
+    print(f"[{tag}] {v['note']}")
+    out = []
+    for stage in stages:
+        base = json.loads((OUT_DIR / f"{stage}__{mesh_tag}.json").read_text())
+        rec = json.loads(
+            (OUT_DIR / f"{stage}__{mesh_tag}__{backend}.json").read_text())
+        print(f"  {stage}:")
+        for term in ("compute_s", "memory_s", "collective_s"):
+            b, n = base["roofline"][term], rec["roofline"][term]
+            print(f"    {term:13s}: {b:.3e} -> {n:.3e}"
+                  + (f"  ({b / n:.2f}x)" if n > 0 else ""))
+        out.append(rec)
+    return out
+
+
 def run(tag: str, force: bool = False):
+    if tag in KMEANS_VARIANTS:
+        return run_kmeans(tag, force)
     v = VARIANTS[tag]
     mesh_tag = "16x16"
     name = f"{v['arch']}__{v['shape']}__{mesh_tag}__{tag}.json"
@@ -119,10 +166,11 @@ def run(tag: str, force: bool = False):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", required=True,
-                    choices=list(VARIANTS) + ["all"])
+                    choices=list(VARIANTS) + list(KMEANS_VARIANTS) + ["all"])
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
-    tags = list(VARIANTS) if args.cell == "all" else [args.cell]
+    tags = (list(VARIANTS) + list(KMEANS_VARIANTS)
+            if args.cell == "all" else [args.cell])
     for t in tags:
         run(t, force=args.force)
 

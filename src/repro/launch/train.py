@@ -44,6 +44,7 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
                seed: int = 0, ckpt_dir: str | None = None,
                ckpt_every: int = 100, log_every: int = 10,
                adamw_cfg: optim.AdamWConfig | None = None,
+               schedule=None,
                resume: bool = True):
     """Single-host training loop with checkpoint/restart (used by the
     end-to-end example and the fault-tolerance tests)."""
@@ -62,7 +63,8 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
             start_step, (params, opt_state) = restored
             print(f"[train] resumed from step {start_step}")
 
-    step_fn = jax.jit(make_train_step(cfg, adamw_cfg), donate_argnums=(0, 1))
+    step_fn = jax.jit(make_train_step(cfg, adamw_cfg, schedule),
+                      donate_argnums=(0, 1))
     writer = ckpt.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
     history = []
     for step in range(start_step, steps):

@@ -19,6 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.models import common
 from repro.models.common import Box, param, split_keys
@@ -210,7 +212,7 @@ def _moe_a2a(x, p, mcfg: MoEConfig):
     Falls back to gather dispatch when no mesh is active or the expert count
     does not divide the expert-parallel rank count.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     names = dict(zip(mesh.axis_names, mesh.shape.values())) if mesh.shape else {}
     ep_axes = tuple(a for a in ("data", "model") if names.get(a, 1) > 1)
     r = 1
@@ -241,7 +243,7 @@ def _moe_a2a(x, p, mcfg: MoEConfig):
         aux = jax.lax.pmean(aux, ep_axes)
         return out.reshape(bl, sl, d), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, P(None, None), ep_spec, ep_spec, ep_spec),
         out_specs=(x_spec, P()),
@@ -264,7 +266,7 @@ def _moe_local(x, p, mcfg: MoEConfig):
     all-reduce, while here the only collective is one (T_loc, d) psum per
     layer from the ff-sharded down-projection (§Perf mixtral-prefill cell).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     names = dict(zip(mesh.axis_names, mesh.shape.values())) if mesh.shape else {}
     batch_axes = tuple(a for a in ("pod", "data") if names.get(a, 1) > 1)
     model = names.get("model", 1)
@@ -293,7 +295,7 @@ def _moe_local(x, p, mcfg: MoEConfig):
             aux = jax.lax.pmean(aux, batch_axes)
         return out.reshape(bl, sl, d), aux
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, P(None, None), P(None, None, "model"),
                   P(None, None, "model"), P(None, "model", None)),

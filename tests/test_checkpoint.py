@@ -6,6 +6,8 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import compat
 import pytest
 
 from repro.checkpoint import manager as ckpt
@@ -67,12 +69,10 @@ def test_elastic_resharding(tmp_path, tree):
     """A checkpoint written under one sharding restores under another
     (mesh-shape change) — leaves are stored logically."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh1 = jax.make_mesh((1,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh1 = compat.make_mesh((1,), ("data",))
     sharded = jax.device_put(tree, NamedSharding(mesh1, P()))
     ckpt.save(tmp_path, 1, sharded)
-    mesh2 = jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = compat.make_mesh((1, 1), ("data", "model"))
     shardings = jax.tree.map(
         lambda _: NamedSharding(mesh2, P()), tree)
     got = ckpt.restore(tmp_path, 1, tree, shardings=shardings)

@@ -1,0 +1,166 @@
+"""Fused single-pass Lloyd kernel: parity sweeps against the jnp oracle and
+the two-kernel Pallas path, in interpret mode (the CI kernel gate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import KMeansParams, kmeans, kmeans_batched, lloyd_step
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (64, 2, 3),        # tiny, d < lane
+    (300, 2, 5),       # the paper's own geometry
+    (1000, 17, 7),     # odd everything (n, k, d all unpadded)
+    (513, 64, 130),    # k crosses one block boundary
+    (2048, 128, 256),  # aligned, multi-block in n and k
+    (96, 160, 9),      # d > 128 (two lane groups)
+]
+
+
+def _data(n, d, k, dtype=jnp.float32, scale=3.0):
+    kx, kc = jax.random.split(jax.random.key(n * d * k + 1))
+    x = (jax.random.normal(kx, (n, d)) * scale).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * scale).astype(dtype)
+    return x, c
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_matches_ref(n, d, k, dtype):
+    x, c = _data(n, d, k, dtype)
+    s_f, cnt_f, sse_f = ops.lloyd_step_fused(x, c, interpret=True)
+    s_r, cnt_r, sse_r = ref.lloyd_step_ref(x, c)
+    # counts exact => labels agree point-for-point (random data, no ties)
+    np.testing.assert_allclose(np.asarray(cnt_f), np.asarray(cnt_r),
+                               rtol=1e-6)
+    tol = 1e-3 if dtype == jnp.float32 else 0.2
+    np.testing.assert_allclose(np.asarray(s_f), np.asarray(s_r),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(sse_f), float(sse_r), rtol=tol)
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES[:4])
+def test_fused_matches_two_kernel_path(n, d, k):
+    """The fused sweep must reproduce assign_pallas + centroid_update_pallas
+    exactly (same tile math, one pass instead of two)."""
+    x, c = _data(n, d, k)
+    w = jnp.ones((n,), jnp.float32)
+    labels, mind = ops.assign(x, c, interpret=True)
+    s2, cnt2 = ops.centroid_update(x, labels, w, k, interpret=True)
+    sse2 = jnp.sum(mind)
+    s_f, cnt_f, sse_f = ops.lloyd_step_fused(x, c, interpret=True)
+    np.testing.assert_allclose(np.asarray(cnt_f), np.asarray(cnt2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_f), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(sse_f), float(sse2), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,d,k", [(300, 5, 7), (513, 64, 130)])
+def test_fused_masked_points(n, d, k):
+    """Packed-subset semantics: weight-0 rows contribute nothing."""
+    x, c = _data(n, d, k)
+    w = (jax.random.uniform(jax.random.key(9), (n,)) > 0.3).astype(
+        jnp.float32)
+    s_f, cnt_f, sse_f = ops.lloyd_step_fused(x, c, w, interpret=True)
+    s_r, cnt_r, sse_r = ref.lloyd_step_ref(x, c, w)
+    np.testing.assert_allclose(np.asarray(cnt_f), np.asarray(cnt_r),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_f), np.asarray(s_r),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(sse_f), float(sse_r), rtol=1e-4)
+    # sanity: masked total count is the number of surviving points
+    assert float(cnt_f.sum()) == pytest.approx(float(w.sum()))
+
+
+def test_fused_empty_clusters():
+    """A centroid nothing maps to must come back with zero sum and count,
+    and the solver step must then keep the old centroid."""
+    x, c = _data(200, 4, 6)
+    c = c.at[2].set(1e6)                       # unreachable centroid
+    s_f, cnt_f, _ = ops.lloyd_step_fused(x, c, interpret=True)
+    assert float(cnt_f[2]) == 0.0
+    assert float(jnp.abs(s_f[2]).sum()) == 0.0
+    new_c, _ = lloyd_step(x, c, backend="fused")
+    np.testing.assert_allclose(np.asarray(new_c[2]), np.asarray(c[2]))
+
+
+@pytest.mark.parametrize("block_n,block_k", [(128, 128), (256, 64), (64, 256)])
+def test_fused_block_shape_invariance(block_n, block_k):
+    x, c = _data(700, 16, 200)
+    s0, cnt0, sse0 = ref.lloyd_step_ref(x, c)
+    s1, cnt1, sse1 = ops.lloyd_step_fused(x, c, block_n=block_n,
+                                          block_k=block_k, interpret=True)
+    np.testing.assert_allclose(np.asarray(cnt0), np.asarray(cnt1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(sse0), float(sse1), rtol=1e-4)
+
+
+def test_lloyd_step_backend_parity():
+    """One full solver step: fused backend == jnp backend (new centroids and
+    shard SSE), with and without a mask."""
+    x, c = _data(400, 6, 8)
+    mask = jax.random.uniform(jax.random.key(3), (400,)) > 0.25
+    for m in (None, mask):
+        c_jnp, sse_jnp = lloyd_step(x, c, m, backend="jnp")
+        c_fus, sse_fus = lloyd_step(x, c, m, backend="fused")
+        np.testing.assert_allclose(np.asarray(c_jnp), np.asarray(c_fus),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(sse_jnp), float(sse_fus), rtol=1e-4)
+
+
+def test_kmeans_solver_fused_backend():
+    """Lloyd-to-convergence with backend='fused' tracks the jnp solver."""
+    x, _ = _data(512, 6, 8)
+    init = x[:8]
+    r_jnp = kmeans(x, init, params=KMeansParams(max_iters=25))
+    r_fus = kmeans(x, init, params=KMeansParams(max_iters=25,
+                                                backend="fused"))
+    assert int(r_jnp.iters) == int(r_fus.iters)
+    np.testing.assert_allclose(np.asarray(r_jnp.centroids),
+                               np.asarray(r_fus.centroids),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(r_jnp.sse), float(r_fus.sse), rtol=1e-4)
+
+
+def test_ipkmeans_with_backend_parity():
+    """The full three-stage pipeline is backend-invariant, switched via
+    IPKMeansConfig.with_backend (the knob benchmarks and launchers use)."""
+    from repro.core.ipkmeans import IPKMeansConfig, ipkmeans
+    x, _ = _data(512, 6, 8)
+    init = x[:8]
+    cfg = IPKMeansConfig(num_clusters=8, num_subsets=4,
+                         kmeans=KMeansParams(max_iters=15))
+    base = ipkmeans(x, init, jax.random.key(0), cfg)
+    for backend in ("pallas", "fused"):
+        res = ipkmeans(x, init, jax.random.key(0), cfg.with_backend(backend))
+        np.testing.assert_allclose(float(res.sse), float(base.sse),
+                                   rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(res.centroids),
+                                   np.asarray(base.centroids),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_unknown_backend_raises():
+    x, c = _data(64, 2, 3)
+    with pytest.raises(ValueError, match="unknown backend"):
+        lloyd_step(x, c, backend="fussed")
+
+
+def test_kmeans_batched_fused_backend():
+    """The fused kernel composes under vmap — the S2 per-device reducer
+    stack runs it unchanged."""
+    x, _ = _data(256, 4, 4)
+    subsets = jnp.stack([x[:128], x[128:]])
+    masks = jnp.ones((2, 128), bool).at[1, 100:].set(False)
+    init = x[:4]
+    p = KMeansParams(max_iters=10)
+    r_jnp = kmeans_batched(subsets, masks, init, p)
+    r_fus = kmeans_batched(subsets, masks, init,
+                           p._replace(backend="fused"))
+    np.testing.assert_allclose(np.asarray(r_jnp.centroids),
+                               np.asarray(r_fus.centroids),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(r_jnp.asse),
+                               np.asarray(r_fus.asse), rtol=1e-4)

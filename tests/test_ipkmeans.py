@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import (IPKMeansConfig, ipkmeans, ipkmeans_distributed,
                         io_model, pkmeans)
 from repro.data import (gaussian_mixture, initial_centroid_groups,
@@ -88,8 +89,7 @@ def test_distributed_matches_reference(dataset):
     """shard_map S2 on a 1-device mesh == pure vmap pipeline (the multi-
     device equivalence is covered by the dry-run + the 8-device CI run)."""
     pts, inits = dataset
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
     r_d = ipkmeans_distributed(pts, inits[0], jax.random.key(0), cfg,
                                mesh, ("data",))

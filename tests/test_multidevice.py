@@ -17,6 +17,7 @@ def run_script(body: str, devices: int = 8):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
         import jax, jax.numpy as jnp, numpy as np, dataclasses
         from jax.sharding import PartitionSpec as P
+        from repro import compat
     """) + textwrap.dedent(body)
     res = subprocess.run([sys.executable, "-c", code],
                          capture_output=True, text=True, timeout=560,
@@ -33,8 +34,7 @@ def test_ipkmeans_distributed_8dev_matches_reference():
         from repro.data import paper_dataset_3000, initial_centroid_groups
         pts, _ = paper_dataset_3000(0)
         init = initial_centroid_groups(pts, 5, groups=1)[0]
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("data",))
         cfg = IPKMeansConfig(num_clusters=5, num_subsets=24)
         r_d = ipkmeans_distributed(pts, init, jax.random.key(0), cfg,
                                    mesh, ("data",))
@@ -49,8 +49,7 @@ def test_moe_a2a_and_local_dispatch_match_dense_2x2():
     run_script("""
         from repro.configs.base import MoEConfig
         from repro.models import moe
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 2), ("data", "model"))
         d, E, ff, B, S = 32, 8, 64, 4, 16
         base = MoEConfig(num_experts=E, top_k=2, d_ff_expert=ff,
                          dispatch="dense", capacity_factor=8.0)
@@ -58,7 +57,7 @@ def test_moe_a2a_and_local_dispatch_match_dense_2x2():
         x = jax.random.normal(jax.random.key(0), (B, S, d), jnp.float32)
         ref, _ = moe.moe_ffn(x, p, base)
         for disp in ("a2a", "local"):
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 out, _ = jax.jit(lambda x, p: moe.moe_ffn(
                     x, p, dataclasses.replace(base, dispatch=disp)))(x, p)
             np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
@@ -70,8 +69,7 @@ def test_moe_a2a_and_local_dispatch_match_dense_2x2():
 def test_pack_subsets_a2a_matches_reference_8dev():
     run_script("""
         from repro.core import kdtree
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("data",))
         n, d, M = 2048, 4, 32
         pts = jax.random.normal(jax.random.key(0), (n, d))
         part = kdtree.partition_dataset(pts, jax.random.key(1), M)

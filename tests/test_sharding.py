@@ -3,6 +3,7 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCHS
 from repro.distributed import sharding as sh
 from repro.models import registry
@@ -12,8 +13,7 @@ from repro.models import registry
 def mesh():
     # logical stand-in for 16x16: a (1,1) mesh named like production; the
     # spec logic only reads names+sizes, actual placement runs in the dryrun
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 class FakeMesh:
