@@ -1,13 +1,16 @@
-"""Kernel micro-bench: Pallas assignment / update / fused-Lloyd vs jnp ref.
+"""Kernel micro-bench: Pallas assignment / update / fused / resident Lloyd
+engines vs jnp ref.
 
 On this CPU container the Pallas kernels execute under interpret=True (a
 Python interpreter — not meaningful for wall-clock), so the timed comparison
 is jnp-reference vs jnp-reference-at-scale; the Pallas numbers reported are
 correctness-path timings only.  The real target is the TPU lowering, whose
 tiling is validated structurally here: block shapes, VMEM footprints, and the
-HBM-traffic model that quantifies why the fused single-pass kernel wins —
-one sweep over the points per Lloyd iteration instead of two, with no
-``(n,)`` label/distance round-trip in between."""
+HBM-traffic models that quantify the two wins — per *iteration*, the fused
+single-pass kernel reads the points once instead of twice with no ``(n,)``
+label/distance round-trip; per *solve*, the VMEM-resident engine reads the
+points ONCE TOTAL, so its projected per-solve traffic is ~1/iters of the
+fused engine's (which pays one sweep every iteration)."""
 from __future__ import annotations
 
 import jax
@@ -16,9 +19,11 @@ import jax.numpy as jnp
 from benchmarks.common import record, timeit
 from repro.kernels import ops, ref
 from repro.kernels.fused import fused_tile_shapes
+from repro.kernels.resident import resident_feasible, resident_vmem_bytes
 
 SIZES = [(10_000, 2, 5), (100_000, 16, 64), (500_000, 64, 256)]
 F32 = 4  # bytes
+NOMINAL_ITERS = 20  # typical Lloyd iterations-to-convergence for the models
 
 
 def vmem_footprint(bn, bk, d_pad, dtype_bytes=F32):
@@ -51,6 +56,22 @@ def lloyd_hbm_bytes(n, d, k, fused: bool):
             + small)
 
 
+def lloyd_solve_hbm_bytes(n, d, k, iters, engine: str):
+    """Analytic HBM traffic of a WHOLE Lloyd solve (f32) for an engine.
+
+    Per-step engines ('pallas', 'fused') re-stream the points every
+    iteration, so per-solve cost is ``iters x`` the per-iteration model.
+    The 'resident' engine streams the points (and weights) across the HBM
+    boundary once per solve — init centroids in, converged centroids and
+    the (sse, iters, converged) scalars out — so its per-solve bytes sit at
+    ~1/iters of the fused engine's for VMEM-feasible shapes.
+    """
+    if engine == "resident":
+        return (n * d * F32 + n * F32          # points + weights, ONCE
+                + 2 * k * d * F32 + 3 * F32)   # init in, final out, scalars
+    return iters * lloyd_hbm_bytes(n, d, k, fused=(engine == "fused"))
+
+
 def run():
     rows = []
     for n, d, k in SIZES:
@@ -80,6 +101,16 @@ def run():
             "hbm_bytes_two_pass": two_pass,
             "hbm_bytes_fused": fused,
             "fused_hbm_ratio": two_pass / fused,
+            # per-SOLVE: resident streams points once, fused once per iter
+            "resident_vmem_bytes": resident_vmem_bytes(n, d, k),
+            "resident_vmem_ok": resident_feasible(n, d, k),
+            "hbm_bytes_solve_fused":
+                lloyd_solve_hbm_bytes(n, d, k, NOMINAL_ITERS, "fused"),
+            "hbm_bytes_solve_resident":
+                lloyd_solve_hbm_bytes(n, d, k, NOMINAL_ITERS, "resident"),
+            "resident_solve_hbm_ratio":
+                lloyd_solve_hbm_bytes(n, d, k, NOMINAL_ITERS, "fused")
+                / lloyd_solve_hbm_bytes(n, d, k, NOMINAL_ITERS, "resident"),
         })
 
     # correctness-path comparison row (interpret mode, smallest size only —
@@ -96,10 +127,11 @@ def run():
         sums, counts = ops.centroid_update(x, labels, w, k, interpret=True)
         return sums, counts, jnp.sum(mind)
 
+    assign_row = rows[-1]                      # largest size's assign timing
     t_two = timeit(jax.jit(two_kernel), x, c)
     t_fus = timeit(jax.jit(
         lambda x, c: ops.lloyd_step_fused(x, c, interpret=True)), x, c)
-    rows.append({
+    fused_row = {
         "n": n, "d": d, "k": k, "mode": "interpret-correctness-path",
         "pallas_two_kernel_us": t_two * 1e6,
         "pallas_fused_us": t_fus * 1e6,
@@ -107,14 +139,49 @@ def run():
         "hbm_bytes_fused": lloyd_hbm_bytes(n, d, k, fused=True),
         "fused_hbm_ratio": (lloyd_hbm_bytes(n, d, k, fused=False)
                             / lloyd_hbm_bytes(n, d, k, fused=True)),
-    })
+    }
+    rows.append(fused_row)
+
+    # resident vs fused: a whole 8-iteration solve, one kernel launch vs a
+    # host loop of per-step launches.  Both sides use ops' default interpret
+    # policy (interpreted on CPU, compiled on TPU) so the comparison is
+    # always mode-matched; the row exists so CI exercises engine.solve
+    # through the real kernel, and to report the per-solve HBM model
+    # head-to-head.
+    n, d, k = SIZES[0]
+    solve_iters = 8
+    init_c = x[:k]
+    t_res = timeit(jax.jit(lambda x, c: ops.lloyd_solve_resident(
+        x, c, max_iters=solve_iters, tol=0.0)[0]), x, init_c)
+    from repro.kernels.engine import get_engine
+    t_fus_solve = timeit(jax.jit(lambda x, c: get_engine("fused").solve(
+        x, c, max_iters=solve_iters, tol=0.0)[0]), x, init_c)
+    resident_row = {
+        "n": n, "d": d, "k": k, "mode": "interpret-resident-vs-fused-solve",
+        "solve_iters": solve_iters,
+        "resident_solve_us": t_res * 1e6,
+        "fused_stepwise_solve_us": t_fus_solve * 1e6,
+        "resident_vmem_ok": resident_feasible(n, d, k),
+        "hbm_bytes_solve_fused":
+            lloyd_solve_hbm_bytes(n, d, k, solve_iters, "fused"),
+        "hbm_bytes_solve_resident":
+            lloyd_solve_hbm_bytes(n, d, k, solve_iters, "resident"),
+        "resident_solve_hbm_ratio":
+            lloyd_solve_hbm_bytes(n, d, k, solve_iters, "fused")
+            / lloyd_solve_hbm_bytes(n, d, k, solve_iters, "resident"),
+    }
+    rows.append(resident_row)
 
     record("kernel_bench", rows,
-           ("kernel_assign", f"{rows[-2]['jnp_ref_us']:.0f}",
-            f"gflops={rows[-2]['gflops_per_s']:.1f}"))
+           ("kernel_assign", f"{assign_row['jnp_ref_us']:.0f}",
+            f"gflops={assign_row['gflops_per_s']:.1f}"))
     record("kernel_bench", rows,
-           ("kernel_fused_vs_two", f"{rows[-1]['pallas_fused_us']:.0f}",
-            f"hbm_ratio={rows[-1]['fused_hbm_ratio']:.2f}"))
+           ("kernel_fused_vs_two", f"{fused_row['pallas_fused_us']:.0f}",
+            f"hbm_ratio={fused_row['fused_hbm_ratio']:.2f}"))
+    record("kernel_bench", rows,
+           ("kernel_resident_vs_fused",
+            f"{resident_row['resident_solve_us']:.0f}",
+            f"solve_hbm_ratio={resident_row['resident_solve_hbm_ratio']:.2f}"))
     return rows
 
 

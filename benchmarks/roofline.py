@@ -1,14 +1,22 @@
 """§Roofline: render the three-term roofline table from the dry-run JSONs.
 
-For the kmeans Lloyd cells the table also carries a *fused-kernel memory
-projection*: ``memory_s_fused`` is the analytic per-device HBM time of one
-fused-kernel iteration (``kernel_bench.lloyd_hbm_bytes(..., fused=True)``
-over the device's shard), and ``fused_hbm_ratio`` is how much less traffic
-that is than the two-kernel path's model (roughly 2x for the production
-d=64 problem).  Both columns are analytic — the measured ``memory_s`` comes
-from the jnp lowering's HLO, which materializes the (n, k) distance matrix
-and is not comparable to either kernel model; lowering with
-``--backend fused`` on a TPU target replaces the model with measurement
+For the kmeans Lloyd cells the table also carries kernel memory projections
+at two granularities:
+
+  * per-ITERATION — ``memory_s_fused`` is the analytic per-device HBM time
+    of one fused-kernel iteration (``kernel_bench.lloyd_hbm_bytes(...,
+    fused=True)`` over the device's shard) and ``fused_hbm_ratio`` how much
+    less traffic that is than the two-kernel path (~2x at d=64);
+  * per-SOLVE — ``memory_s_resident_solve`` is the VMEM-resident engine's
+    whole-solve HBM time (``kernel_bench.lloyd_solve_hbm_bytes``: the points
+    cross HBM once per solve) and ``resident_solve_hbm_ratio`` its advantage
+    over a fused per-step solve at ``NOMINAL_ITERS`` iterations — ~iters x
+    for VMEM-feasible shards, 1x (fallback) otherwise.
+
+All projection columns are analytic — the measured ``memory_s`` comes from
+the jnp lowering's HLO, which materializes the (n, k) distance matrix and is
+not comparable to any kernel model; lowering with ``--backend fused`` /
+``--backend resident`` on a TPU target replaces the models with measurement
 (ROADMAP open item).
 """
 from __future__ import annotations
@@ -18,27 +26,24 @@ import re
 from pathlib import Path
 
 from benchmarks.common import record
-from benchmarks.kernel_bench import lloyd_hbm_bytes
+from benchmarks.kernel_bench import (NOMINAL_ITERS, lloyd_hbm_bytes,
+                                     lloyd_solve_hbm_bytes)
+from repro.kernels.resident import resident_feasible
 
 DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
 
 def load(mesh="16x16"):
     paths = set(DRYRUN.glob(f"*__{mesh}.json"))
-    for backend in ("pallas", "fused"):        # kmeans_dryrun --backend ...
+    for backend in ("pallas", "fused", "resident"):  # kmeans_dryrun --backend
         paths |= set(DRYRUN.glob(f"*__{mesh}__{backend}.json"))
     return [json.loads(p.read_text()) for p in sorted(paths)]
 
 
-def fused_projection(rec):
-    """For a kmeans dry-run record, the analytic per-device memory time of
-    one fused-kernel Lloyd iteration over the device's shard.  Returns
-    (ratio, memory_s_fused) or None when the record is not a Lloyd-loop
-    cell (S1 has no assign/update phase) or was already lowered with the
-    fused backend."""
+def _local_shape(rec):
+    """Per-device (n_local, d, k) of a kmeans Lloyd-loop dry-run record, or
+    None for non-Lloyd cells (S1 has no assign/update phase)."""
     if not rec["arch"].startswith("kmeans-") or "-s1" in rec["arch"]:
-        return None
-    if rec.get("backend", "jnp") == "fused":
         return None
     m = re.match(r"n(\d+)_d(\d+)_k(\d+)", rec.get("shape", ""))
     if not m:
@@ -47,11 +52,45 @@ def fused_projection(rec):
     n_dev = 1
     for s in rec.get("mesh", "1").split("x"):
         n_dev *= int(s)
-    n_local = -(-n // n_dev)
+    return -(-n // n_dev), d, k
+
+
+def fused_projection(rec):
+    """For a kmeans dry-run record, the analytic per-device memory time of
+    one fused-kernel Lloyd iteration over the device's shard.  Returns
+    (ratio, memory_s_fused) or None when the record is not a Lloyd-loop
+    cell or was already lowered with the fused backend."""
+    if rec.get("backend", "jnp") == "fused":
+        return None
+    shape = _local_shape(rec)
+    if shape is None:
+        return None
+    n_local, d, k = shape
     ratio = lloyd_hbm_bytes(n_local, d, k, fused=False) \
         / lloyd_hbm_bytes(n_local, d, k, fused=True)
     from repro.launch.dryrun import HBM_BW
     return ratio, lloyd_hbm_bytes(n_local, d, k, fused=True) / HBM_BW
+
+
+def resident_projection(rec):
+    """Per-SOLVE memory projection: the resident engine's whole-solve HBM
+    time over the device's shard, and its advantage over a fused per-step
+    solve at NOMINAL_ITERS iterations.  Infeasible (n, d, k) fall back to
+    the fused per-step engine, so their ratio is pinned at 1.0."""
+    if rec.get("backend", "jnp") == "resident":
+        return None                            # already measured, not a projection
+    shape = _local_shape(rec)
+    if shape is None:
+        return None
+    n_local, d, k = shape
+    fused_solve = lloyd_solve_hbm_bytes(n_local, d, k, NOMINAL_ITERS, "fused")
+    if resident_feasible(n_local, d, k):
+        res_solve = lloyd_solve_hbm_bytes(n_local, d, k, NOMINAL_ITERS,
+                                          "resident")
+    else:
+        res_solve = fused_solve                # feasibility-guard fallback
+    from repro.launch.dryrun import HBM_BW
+    return fused_solve / res_solve, res_solve / HBM_BW
 
 
 def run(mesh="16x16"):
@@ -81,6 +120,10 @@ def run(mesh="16x16"):
         proj = fused_projection(r)
         if proj is not None:
             row["fused_hbm_ratio"], row["memory_s_fused"] = proj
+        proj = resident_projection(r)
+        if proj is not None:
+            (row["resident_solve_hbm_ratio"],
+             row["memory_s_resident_solve"]) = proj
         rows.append(row)
     ok = [r for r in rows if r.get("status") == "ok"]
     worst = min(ok, key=lambda r: r["roofline_fraction"]) if ok else None

@@ -13,8 +13,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import IPKMeansConfig, ipkmeans, metrics, pkmeans
+from repro.core import IPKMeansConfig, KMeansParams, ipkmeans, pkmeans
 from repro.data import gaussian_mixture, initial_centroid_groups
+from repro.kernels import engine as engines
 
 
 def main():
@@ -23,28 +24,35 @@ def main():
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--codebook", type=int, default=64)
     ap.add_argument("--reducers", type=int, default=16)
+    ap.add_argument("--backend", default="jnp",
+                    choices=list(engines.available()),
+                    help="Lloyd engine for the solves AND the final "
+                         "patch->code assignment (on TPU, 'fused' gets the "
+                         "codes from the kernel's labels output instead of "
+                         "materializing the (n, k) distance matrix)")
     args = ap.parse_args()
 
     embeds, _, _ = gaussian_mixture(jax.random.key(0), args.patches,
                                     args.codebook, d=args.dim)
     init = initial_centroid_groups(embeds, args.codebook, groups=1)[0]
+    eng = engines.get_engine(args.backend)
 
     t0 = time.time()
-    ref = pkmeans(embeds, init)
+    ref = pkmeans(embeds, init,
+                  params=KMeansParams(backend=args.backend))
     t_pk = time.time() - t0
 
     cfg = IPKMeansConfig(num_clusters=args.codebook,
-                         num_subsets=args.reducers)
+                         num_subsets=args.reducers).with_backend(args.backend)
     t0 = time.time()
     res = ipkmeans(embeds, init, jax.random.key(1), cfg)
     t_ipk = time.time() - t0
 
     for name, codebook, t in (("PKMeans ", ref.centroids, t_pk),
                               ("IPKMeans", res.centroids, t_ipk)):
-        d2 = metrics.pairwise_sq_dists(embeds, codebook)
-        codes = jnp.argmin(d2, axis=-1)
+        codes, mind = eng.assign(embeds, codebook)
         used = len(jnp.unique(codes))
-        mse = float(jnp.mean(jnp.min(d2, axis=-1)))
+        mse = float(jnp.mean(mind))
         print(f"{name}: quantization MSE={mse:.4f}  "
               f"codebook use={used}/{args.codebook}  ({t:.2f}s)")
 

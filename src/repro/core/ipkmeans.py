@@ -37,10 +37,14 @@ class IPKMeansConfig:
     kmeans: KMeansParams = KMeansParams()
 
     def with_backend(self, backend: str) -> "IPKMeansConfig":
-        """Same config, different Lloyd backend ('jnp' | 'pallas' | 'fused').
+        """Same config, different Lloyd engine ('jnp' | 'pallas' | 'fused' |
+        'resident' — any name in the ``kernels.engine`` registry).
 
-        The backend is the hot-path choice every S2 reducer executes; this
+        The engine is the hot-path choice every S2 reducer executes; this
         helper keeps it switchable without re-spelling the whole config.
+        ``resident`` is the intended S2 engine on TPU: subsets are sized to
+        fit VMEM, so each reducer's entire convergence loop is one kernel
+        launch (points cross HBM once per solve).
         """
         return dataclasses.replace(
             self, kmeans=self.kmeans._replace(backend=backend))

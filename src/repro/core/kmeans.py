@@ -1,18 +1,22 @@
 """Single-shard Lloyd's k-means, the unit of work each IPKMeans "reducer" runs.
 
-The whole solver is a single ``lax.while_loop`` — no host round-trips, no
-collectives — so under ``shard_map`` every device iterates *independently* to
-convergence, which is exactly the paper's "each reducer runs one complete
-k-means" semantics (Algorithm 4).
+The solver delegates the WHOLE solve to a :class:`repro.kernels.engine
+.LloydEngine` looked up from ``params.backend`` — engines that only implement
+``step`` get the generic host-side ``lax.while_loop`` (no host round-trips,
+no collectives, so under ``shard_map`` every device iterates *independently*
+to convergence, exactly the paper's "each reducer runs one complete k-means"
+semantics, Algorithm 4); engines that own their convergence loop
+(``resident``) run it entirely on-chip, one kernel launch per solve.
 
-Three interchangeable backends drive the Lloyd iteration:
+Registered engines (see ``src/repro/kernels/__init__.py`` for the taxonomy):
+``jnp`` (reference/oracle) | ``pallas`` (two-kernel, labels as product) |
+``fused`` (one HBM sweep per iteration) | ``resident`` (one HBM sweep per
+*solve* — VMEM-resident loop with automatic fused fallback).
 
-  * ``'jnp'``   — pure-jnp reference (default; also the test oracle),
-  * ``'pallas'``— two Pallas kernels (assign, then centroid update): the
-    points stream from HBM twice per iteration,
-  * ``'fused'`` — single-pass Pallas kernel (``kernels/fused.py``): assign
-    and accumulate in one grid sweep, labels/distances never leave VMEM —
-    the paper's one-job argument applied to the memory hierarchy.
+``reseed_empty`` re-seeds zero-count centroids at the farthest in-subset
+point (k-means++-style, Bahmani et al.): with small subsets a centroid frozen
+at a bad init is a degenerate seed that keep-old-centroid semantics never
+repairs — this flag repairs it in every engine.
 """
 from __future__ import annotations
 
@@ -23,15 +27,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import metrics
+from repro.kernels import engine as engines
+from repro.kernels import ref
 
 
-BACKENDS = ("jnp", "pallas", "fused")
+# registered engine names at import time (the historical public constant;
+# late registrations are visible via engines.available())
+BACKENDS = engines.available()
 
 
 class KMeansParams(NamedTuple):
     max_iters: int = 300
     tol: float = 1e-6             # paper: "until centroids stop moving"
-    backend: str = "jnp"          # 'jnp' | 'pallas' | 'fused'
+    backend: str = "jnp"          # 'jnp' | 'pallas' | 'fused' | 'resident'
+    reseed_empty: bool = False    # re-seed empty clusters at farthest points
 
 
 class KMeansResult(NamedTuple):
@@ -42,56 +51,14 @@ class KMeansResult(NamedTuple):
     converged: jnp.ndarray        # () bool
 
 
-def _assign(points, centroids, backend: str):
-    """Nearest-centroid labels + squared distances, (n,) i32 and (n,) f32."""
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend: {backend!r} "
-                         f"(expected one of {BACKENDS})")
-    if backend in ("pallas", "fused"):
-        from repro.kernels import ops
-        return ops.assign(points, centroids)
-    d2 = metrics.pairwise_sq_dists(points, centroids)
-    labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)
-    mind = jnp.take_along_axis(d2, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
-    return labels, mind
-
-
-def _update(points, labels, mind, mask, k: int, old_centroids, backend: str):
-    """Weighted centroid recomputation; empty clusters keep their centroid."""
-    w = jnp.ones(points.shape[0], points.dtype) if mask is None \
-        else mask.astype(points.dtype)
-    if backend == "pallas":
-        from repro.kernels import ops
-        sums, counts = ops.centroid_update(points, labels, w, k)
-    else:
-        onehot = jax.nn.one_hot(labels, k, dtype=points.dtype) * w[:, None]
-        sums = onehot.T @ points                                    # (k, d)
-        counts = jnp.sum(onehot, axis=0)                            # (k,)
-    new_c = jnp.where(counts[:, None] > 0.0,
-                      sums / jnp.maximum(counts[:, None], 1.0),
-                      old_centroids)
-    # weight-scaled, matching the fused kernel (identical for 0/1 masks)
-    shard_sse = jnp.sum(w * mind)
-    return new_c, shard_sse
-
-
 def lloyd_step(points, centroids, mask=None, backend: str = "jnp"):
     """One Lloyd iteration: assign + update. Returns (new_centroids, sse)."""
-    k = centroids.shape[0]
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend: {backend!r} "
-                         f"(expected one of {BACKENDS})")
-    if backend == "fused":
-        from repro.kernels import ops
-        w = None if mask is None else mask.astype(points.dtype)
-        sums, counts, shard_sse = ops.lloyd_step_fused(points, centroids, w)
-        new_c = jnp.where(counts[:, None] > 0.0,
-                          sums / jnp.maximum(counts[:, None], 1.0),
-                          centroids.astype(jnp.float32))
-        # f32 accumulators; cast back so while_loop carries keep their dtype
-        return new_c.astype(centroids.dtype), shard_sse
-    labels, mind = _assign(points, centroids, backend)
-    return _update(points, labels, mind, mask, k, centroids, backend)
+    engine = engines.get_engine(backend)
+    w = None if mask is None else mask.astype(points.dtype)
+    sums, counts, shard_sse = engine.step(points, centroids, w)
+    new_c = ref.divide_or_keep(sums, counts, centroids.astype(jnp.float32))
+    # f32 accumulators; cast back so while_loop carries keep their dtype
+    return new_c.astype(centroids.dtype), shard_sse
 
 
 @partial(jax.jit, static_argnames=("params",))
@@ -106,35 +73,23 @@ def kmeans(points: jnp.ndarray,
       init_centroids: (k, d) initial centroids (the paper uses the *same*
         initial centroids for every reducer, so callers broadcast these).
       mask: optional (n,) bool — False rows are padding and fully ignored.
-      params: loop controls + assignment backend.
+      params: loop controls + Lloyd engine selection.
     """
-    k = init_centroids.shape[0]
+    engine = engines.get_engine(params.backend)
+    w = None if mask is None else mask.astype(points.dtype)
+    final_c, total_sse, iters, converged = engine.solve(
+        points, init_centroids, w,
+        max_iters=params.max_iters, tol=params.tol,
+        reseed_empty=params.reseed_empty)
 
-    def cond(carry):
-        c, prev_c, it, shift = carry
-        return jnp.logical_and(it < params.max_iters, shift > params.tol)
-
-    def body(carry):
-        c, _, it, _ = carry
-        new_c, _ = lloyd_step(points, c, mask, params.backend)
-        return (new_c, c, it + 1, metrics.centroid_shift(new_c, c))
-
-    init = (init_centroids, init_centroids, jnp.int32(0), jnp.asarray(jnp.inf))
-    final_c, _, iters, shift = jax.lax.while_loop(cond, body, init)
-
-    # final statistics with the converged centroids
-    labels, mind = _assign(points, final_c, params.backend)
-    w = jnp.ones(points.shape[0], points.dtype) if mask is None \
-        else mask.astype(points.dtype)
-    total_sse = jnp.sum(w * mind)
-    cnt = jnp.sum(w)
+    cnt = metrics.masked_count(mask, points.shape[0])
     # empty shards must never win the min-ASSE merge: ASSE = +inf
     asse = jnp.where(cnt > 0.0, total_sse / jnp.maximum(cnt, 1.0), jnp.inf)
-    return KMeansResult(centroids=final_c,
+    return KMeansResult(centroids=final_c.astype(init_centroids.dtype),
                         sse=total_sse,
                         asse=asse,
                         iters=iters,
-                        converged=shift <= params.tol)
+                        converged=converged)
 
 
 def kmeans_batched(subsets: jnp.ndarray,
@@ -145,7 +100,8 @@ def kmeans_batched(subsets: jnp.ndarray,
 
     This is the per-device body of IPKMeans stage 2: when more subsets than
     devices exist, each device runs a stack of complete k-means instances
-    (Hadoop would queue reducers the same way).
+    (Hadoop would queue reducers the same way).  Engine solves vmap cleanly —
+    including the resident kernel, which maps to a batched single-launch.
     """
     fn = lambda p, m: kmeans(p, init_centroids, m, params)
     return jax.vmap(fn)(subsets, masks)

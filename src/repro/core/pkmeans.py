@@ -18,7 +18,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import metrics
-from repro.core.kmeans import KMeansParams, _assign
+from repro.core.kmeans import KMeansParams
+from repro.kernels import engine as engines
+from repro.kernels import ref
 
 
 class PKMeansResult(NamedTuple):
@@ -29,21 +31,12 @@ class PKMeansResult(NamedTuple):
 
 
 def _local_stats(points, centroids, mask, backend):
-    """Mapper + combiner: local label assignment and partial (sums, counts)."""
-    k = centroids.shape[0]
-    if backend == "fused":
-        from repro.kernels import ops
-        w = None if mask is None else mask.astype(points.dtype)
-        return ops.lloyd_step_fused(points, centroids, w)
-    labels, mind = _assign(points, centroids, backend)
-    w = jnp.ones(points.shape[0], points.dtype) if mask is None \
-        else mask.astype(points.dtype)
-    onehot = jax.nn.one_hot(labels, k, dtype=points.dtype) * w[:, None]
-    sums = onehot.T @ points
-    counts = jnp.sum(onehot, axis=0)
-    # weight-scaled, matching the fused kernel (identical for 0/1 masks)
-    local_sse = jnp.sum(w * mind)
-    return sums, counts, local_sse
+    """Mapper + combiner: local partial (sums, counts, sse) — one
+    ``engine.step`` of the selected Lloyd engine.  PKMeans is structurally
+    per-iteration (the psum between steps IS the baseline's overhead), so it
+    always drives engines stepwise, never ``engine.solve``."""
+    w = None if mask is None else mask.astype(points.dtype)
+    return engines.get_engine(backend).step(points, centroids, w)
 
 
 @partial(jax.jit, static_argnames=("params",))
@@ -64,9 +57,12 @@ def pkmeans(points: jnp.ndarray,
     def body(carry):
         c, _, it, _ = carry
         sums, counts, _ = _local_stats(points, c, mask, params.backend)
-        new_c = jnp.where(counts[:, None] > 0.0,
-                          sums / jnp.maximum(counts[:, None], 1.0),
-                          c.astype(sums.dtype)).astype(c.dtype)
+        new_c = ref.divide_or_keep(sums, counts,
+                                   c.astype(sums.dtype)).astype(c.dtype)
+        if params.reseed_empty:
+            w = None if mask is None else mask.astype(points.dtype)
+            new_c = engines.reseed_empty_clusters(
+                engines.get_engine(params.backend), points, w, new_c, counts)
         return (new_c, c, it + 1, metrics.centroid_shift(new_c, c))
 
     init = (init_centroids, init_centroids, jnp.int32(0), jnp.asarray(jnp.inf))
@@ -85,6 +81,14 @@ def pkmeans_sharded(mesh,
     Returns a function (points_sharded, init_centroids, mask) -> PKMeansResult
     with centroids replicated.
     """
+    if params.reseed_empty:
+        # the farthest in-subset point is shard-local state; the global
+        # reseed would need a cross-shard argmax collective (not worth the
+        # extra per-iteration all-reduce in the baseline we are measuring)
+        raise NotImplementedError(
+            "reseed_empty is not supported in pkmeans_sharded; reseeding "
+            "targets the per-subset solvers (kmeans/ipkmeans)")
+
     def solve(points, init_centroids, mask):
         def cond(carry):
             c, _, it, shift = carry
@@ -95,9 +99,8 @@ def pkmeans_sharded(mesh,
             sums, counts, _ = _local_stats(points, c, mask, params.backend)
             sums = jax.lax.psum(sums, axis_names)      # <- the "MapReduce job"
             counts = jax.lax.psum(counts, axis_names)
-            new_c = jnp.where(counts[:, None] > 0.0,
-                              sums / jnp.maximum(counts[:, None], 1.0),
-                              c.astype(sums.dtype)).astype(c.dtype)
+            new_c = ref.divide_or_keep(sums, counts,
+                                       c.astype(sums.dtype)).astype(c.dtype)
             return (new_c, c, it + 1, metrics.centroid_shift(new_c, c))
 
         init = (init_centroids, init_centroids, jnp.int32(0),

@@ -1,31 +1,53 @@
-"""Pallas TPU kernels for the k-means hot-spots.
+"""Pallas TPU kernels for the k-means hot-spots, behind the LloydEngine
+registry.
 
-Backends (selected via ``KMeansParams.backend`` / ``IPKMeansConfig``):
+Backend selection is no longer string-dispatch scattered across core/ — every
+backend is a :class:`~repro.kernels.engine.LloydEngine` registered by name in
+``engine.py``; ``KMeansParams.backend`` / ``IPKMeansConfig.with_backend`` pick
+one and the solvers call ``engine.step`` / ``engine.solve``:
 
-  * ``jnp``    — pure-jnp reference (``ref.py``).  Ground truth for every
+  * ``jnp``      — pure-jnp reference (``ref.py``).  Ground truth for every
     kernel test, and the default on hosts without a TPU where wall-clock of
     the interpreted kernels is meaningless.  Use it for debugging and as the
     oracle in CI.
-  * ``pallas`` — the two-kernel path: ``assign.py`` (online min/argmin over
+  * ``pallas``   — the two-kernel path: ``assign.py`` (online min/argmin over
     centroid tiles) then ``centroid_update.py`` (MXU one-hot segment-sum).
     Streams all ``n`` points from HBM twice per Lloyd iteration and
     round-trips the ``(n,)`` labels/distances through HBM in between.  Use
-    it when the labels themselves are needed (e.g. final assignment dumps).
-  * ``fused``  — ``fused.py``: one grid sweep does assignment *and*
+    it when the per-point labels are the product of every iteration.
+  * ``fused``    — ``fused.py``: one grid sweep does assignment *and*
     accumulates per-cluster sums/counts/SSE, so points are read once per
     iteration and labels never leave VMEM (~half the HBM traffic of
-    ``pallas``).  The preferred TPU backend for the Lloyd inner loop.
+    ``pallas``); an optional final-pass labels output serves cluster dumps
+    without a second kernel.  The preferred per-step TPU engine, and the
+    fallback for ``resident``.
+  * ``resident`` — ``resident.py``: the whole convergence loop in ONE kernel
+    launch.  Centroids and the (k, d) accumulators stay resident in VMEM,
+    iteration/convergence state sits in SMEM, and the points stream from HBM
+    once per *solve* instead of once per iteration — the paper's
+    one-job-instead-of-one-job-per-iteration argument finished at the memory
+    hierarchy.  Only engine that overrides ``engine.solve``; gated by a
+    VMEM-feasibility check with automatic fallback to ``fused`` when
+    (n, d, k) does not fit on-chip.  The preferred TPU engine for the
+    IPKMeans S2 reducers, whose subsets are sized to fit.
 
-CI exercises all three: the kernel-correctness job sweeps ``pallas`` and
-``fused`` in interpret mode against ``ref.py`` (tests/test_kernels.py,
-tests/test_fused.py), and the tier-1 gate runs the solvers on the ``jnp``
-backend.  On non-TPU hosts ``ops.py`` transparently falls back to
+CI exercises all four: the kernel-correctness job sweeps ``pallas``,
+``fused`` and ``resident`` in interpret mode against the oracles in
+``ref.py`` (tests/test_kernels.py, tests/test_fused.py, tests/test_engines.py
+— the last adds a hypothesis property test that all registered engines agree
+on (sums, counts, sse)), and the tier-1 gate runs the solvers on the ``jnp``
+engine.  On non-TPU hosts ``ops.py`` transparently falls back to
 ``interpret=True``.
 """
-from repro.kernels import ops, ref
+from repro.kernels import engine, ops, ref
 from repro.kernels.assign import assign_pallas
 from repro.kernels.centroid_update import centroid_update_pallas
+from repro.kernels.engine import LloydEngine, available, get_engine, register
 from repro.kernels.fused import lloyd_step_fused
+from repro.kernels.resident import (lloyd_solve_resident, resident_feasible,
+                                    resident_vmem_bytes)
 
-__all__ = ["ops", "ref", "assign_pallas", "centroid_update_pallas",
-           "lloyd_step_fused"]
+__all__ = ["engine", "ops", "ref", "assign_pallas", "centroid_update_pallas",
+           "lloyd_step_fused", "lloyd_solve_resident", "resident_feasible",
+           "resident_vmem_bytes", "LloydEngine", "available", "get_engine",
+           "register"]

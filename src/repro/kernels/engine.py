@@ -1,0 +1,227 @@
+"""LloydEngine: the one place backend selection happens.
+
+Every Lloyd backend is an engine registered in a name -> engine registry;
+``core/kmeans.py``, ``core/pkmeans.py`` and the launch/benchmark drivers look
+engines up by name instead of carrying ``if backend == ...`` chains.  The
+protocol:
+
+  * ``step(points, centroids, weights) -> (sums, counts, sse)`` — one Lloyd
+    pass.  Mandatory; this is what PKMeans' per-iteration mapper calls.
+  * ``assign(points, centroids) -> (labels, mind)`` — nearest-centroid
+    labels, for callers that need the assignment itself (cluster dumps,
+    reseeding).
+  * ``sse(points, centroids, weights) -> ()`` — score a centroid set.
+    Defaults to one ``step`` (so fused-style engines pay one sweep, not two).
+  * ``solve(points, init, weights, max_iters, tol, reseed_empty) ->
+    (centroids, sse, iters, converged)`` — a whole solve.  The default drives
+    ``step`` from a host-side ``lax.while_loop``; engines that own their
+    convergence loop (``resident``) override it, which is how the loop moves
+    from core/ down into the kernel layer.
+
+Engines registered here: ``jnp`` | ``pallas`` | ``fused`` | ``resident`` —
+see ``kernels/__init__`` for when to pick each.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_REGISTRY: dict[str, "LloydEngine"] = {}
+
+
+def register(engine: "LloydEngine") -> "LloydEngine":
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> "LloydEngine":
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown backend: {name!r} "
+                         f"(expected one of {tuple(_REGISTRY)})")
+    return _REGISTRY[name]
+
+
+def available() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def _as_weights(points, weights):
+    return (jnp.ones(points.shape[0], jnp.float32) if weights is None
+            else weights.astype(jnp.float32))
+
+
+def reseed_empty_clusters(engine: "LloydEngine", points, weights,
+                          centroids, counts):
+    """Re-seed zero-count centroids at the farthest in-subset points.
+
+    Bahmani et al.-style re-selection: a centroid no point maps to is a
+    degenerate seed, so move it to the point farthest from the current
+    centroid set (the k-means++ D^2 extreme).  The ``e``-th empty cluster
+    takes the ``e``-th farthest point, so multiple empties land on distinct
+    points.  The whole pass is gated behind ``lax.cond`` on any-empty —
+    solves that never produce an empty cluster pay nothing (outside vmap).
+    """
+    k = centroids.shape[0]
+    w = _as_weights(points, weights)
+    empty = counts <= 0.0
+
+    kk = min(k, points.shape[0])                       # top_k needs kk <= n
+
+    def do_reseed(c):
+        _, mind = engine.assign(points, c)
+        score = jnp.where(w > 0.0, mind.astype(jnp.float32), -jnp.inf)
+        vals, far = jax.lax.top_k(score, kk)           # kk farthest valid points
+        picks = points[far].astype(c.dtype)            # (kk, d)
+        raw = jnp.cumsum(empty.astype(jnp.int32)) - 1
+        slot = jnp.clip(raw, 0, kk - 1)
+        # fewer candidate points than empty clusters (subset smaller than k,
+        # or valid rows exhausted into -inf scores): keep the old centroid
+        # rather than duplicate a pick or leak padding coordinates
+        ok = jnp.logical_and(raw < kk, jnp.isfinite(vals[slot]))
+        return jnp.where((empty & ok)[:, None], picks[slot], c)
+
+    return jax.lax.cond(jnp.any(empty), do_reseed, lambda c: c, centroids)
+
+
+class LloydEngine:
+    """Base engine: subclasses fill in ``step``/``assign``; ``solve`` and
+    ``sse`` have default implementations built on them."""
+
+    name: str = "?"
+
+    def step(self, points, centroids, weights=None):
+        """One Lloyd pass -> (sums (k,d) f32, counts (k,) f32, sse () f32)."""
+        raise NotImplementedError
+
+    def assign(self, points, centroids):
+        """Nearest centroids -> (labels (n,) i32, min sq dists (n,) f32)."""
+        raise NotImplementedError
+
+    def sse(self, points, centroids, weights=None):
+        """Total weighted SSE of ``centroids`` over the subset.
+
+        Default: one ``assign`` pass (the cheapest scoring an engine offers).
+        Engines whose ``step`` already IS one sweep override this to reuse
+        its sse output instead."""
+        _, mind = self.assign(points, centroids)
+        w = _as_weights(points, weights)
+        return jnp.sum(w * mind)
+
+    def solve(self, points, init_centroids, weights=None, *,
+              max_iters: int, tol: float, reseed_empty: bool = False):
+        """Lloyd to convergence -> (centroids, sse, iters, converged).
+
+        The default host-side loop; ``max_iters``/``tol`` are static.
+        """
+        # deferred import (like the lazy ops imports below): core imports
+        # this module at its own import time.  ONE stop criterion everywhere
+        # — pkmeans, the solve oracle and the resident kernel share it.
+        from repro.core.metrics import centroid_shift
+
+        def cond(carry):
+            c, it, shift = carry
+            return jnp.logical_and(it < max_iters, shift > tol)
+
+        def body(carry):
+            c, it, _ = carry
+            sums, counts, _ = self.step(points, c, weights)
+            new_c = ref.divide_or_keep(sums, counts,
+                                       c.astype(jnp.float32)).astype(c.dtype)
+            if reseed_empty:
+                new_c = reseed_empty_clusters(self, points, weights,
+                                              new_c, counts)
+            shift = centroid_shift(new_c.astype(jnp.float32),
+                                   c.astype(jnp.float32))
+            return new_c, it + 1, shift
+
+        init = (init_centroids, jnp.int32(0), jnp.float32(jnp.inf))
+        final_c, iters, shift = jax.lax.while_loop(cond, body, init)
+        total = self.sse(points, final_c, weights)
+        return final_c, total, iters, shift <= tol
+
+
+class JnpEngine(LloydEngine):
+    """Pure-jnp reference — ground truth for every other engine, and the
+    default on hosts without a TPU."""
+
+    name = "jnp"
+
+    def step(self, points, centroids, weights=None):
+        return ref.lloyd_step_ref(points, centroids, weights)
+
+    def assign(self, points, centroids):
+        return ref.assign_ref(points, centroids)
+
+
+class PallasEngine(LloydEngine):
+    """Two-kernel Pallas path (assign, then centroid update): points stream
+    HBM twice per iteration with an (n,) label/distance round-trip between —
+    use it when the per-point labels themselves are the product."""
+
+    name = "pallas"
+
+    def step(self, points, centroids, weights=None):
+        from repro.kernels import ops
+        k = centroids.shape[0]
+        w = _as_weights(points, weights)
+        labels, mind = ops.assign(points, centroids)
+        sums, counts = ops.centroid_update(points, labels, w, k)
+        return sums, counts, jnp.sum(w * mind)
+
+    def assign(self, points, centroids):
+        from repro.kernels import ops
+        return ops.assign(points, centroids)
+
+
+class FusedEngine(LloydEngine):
+    """Single-pass fused kernel: one HBM sweep per iteration, labels never
+    leave VMEM.  The preferred per-step TPU engine."""
+
+    name = "fused"
+
+    def step(self, points, centroids, weights=None):
+        from repro.kernels import ops
+        return ops.lloyd_step_fused(points, centroids, weights)
+
+    def assign(self, points, centroids):
+        # the fused kernel's optional labels output: still one sweep, no
+        # second kernel and no (n,) HBM round-trip mid-pass
+        from repro.kernels import ops
+        return ops.lloyd_assign_fused(points, centroids)
+
+    def sse(self, points, centroids, weights=None):
+        # step IS one sweep here — its sse output is the cheapest scoring
+        return self.step(points, centroids, weights)[2]
+
+
+class ResidentEngine(FusedEngine):
+    """VMEM-resident multi-iteration solver: ONE kernel launch runs the whole
+    convergence loop on-chip, so the points stream from HBM once per *solve*
+    instead of once per iteration.  Per-step behaviour (``step``/``assign``/
+    ``sse``) is inherited from the fused engine; only the solve moves
+    on-chip.  Falls back to the fused per-step loop when (n, d, k) does not
+    fit VMEM, or when empty-cluster reseeding is on (reseeding needs the
+    host-side loop's per-iteration assign pass)."""
+
+    name = "resident"
+
+    def solve(self, points, init_centroids, weights=None, *,
+              max_iters: int, tol: float, reseed_empty: bool = False):
+        from repro.kernels import ops, resident
+        n, d = points.shape
+        k = init_centroids.shape[0]
+        if reseed_empty or not resident.resident_feasible(n, d, k):
+            return super().solve(points, init_centroids, weights,
+                                 max_iters=max_iters, tol=tol,
+                                 reseed_empty=reseed_empty)
+        final_c, total, iters, conv = ops.lloyd_solve_resident(
+            points, init_centroids, weights, max_iters=max_iters, tol=tol)
+        return final_c.astype(init_centroids.dtype), total, iters, conv
+
+
+register(JnpEngine())
+register(PallasEngine())
+register(FusedEngine())
+register(ResidentEngine())

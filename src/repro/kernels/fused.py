@@ -38,8 +38,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
                   sums_ref, counts_ref, sse_ref,
-                  best_scr, idx_scr, *,
-                  block_k: int, k_actual: int, last_j: int):
+                  *rest,
+                  block_k: int, k_actual: int, last_j: int,
+                  with_labels: bool):
+    if with_labels:
+        labels_ref, mind_ref, best_scr, idx_scr = rest
+    else:
+        best_scr, idx_scr = rest
     i = pl.program_id(0)
     j = pl.program_id(1)
     x = x_ref[...].astype(jnp.float32)                    # (bn, d)
@@ -87,6 +92,10 @@ def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
         mind = jnp.maximum(best_scr[...] + x2, 0.0)
         local_sse = jnp.sum(w * mind)[None, None]         # (1, 1)
 
+        if with_labels:                                   # final-pass labels out
+            labels_ref[...] = idx
+            mind_ref[...] = mind
+
         @pl.when(i == 0)
         def _init_out():
             sums_ref[...] = local_sums
@@ -116,14 +125,16 @@ def fused_tile_shapes(n: int, d: int, k: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_n", "block_k", "interpret"))
+                   static_argnames=("block_n", "block_k", "interpret",
+                                    "return_labels"))
 def lloyd_step_fused(points: jnp.ndarray,
                      centroids: jnp.ndarray,
                      weights: jnp.ndarray | None = None,
                      *,
                      block_n: int = 256,
                      block_k: int = 128,
-                     interpret: bool = False):
+                     interpret: bool = False,
+                     return_labels: bool = False):
     """One fused Lloyd pass: (n,d),(k,d)[,(n,)] ->
     sums (k,d) f32, counts (k,) f32, sse () f32.
 
@@ -131,7 +142,13 @@ def lloyd_step_fused(points: jnp.ndarray,
     non-negative weights) to ignore padded rows.  Callers divide
     ``sums / counts`` (guarding empty clusters) to get the new centroids —
     kept outside the kernel so the division policy stays in one place
-    (``core.kmeans``).
+    (``ref.divide_or_keep``).
+
+    With ``return_labels=True`` the flush phase additionally streams out the
+    finished per-point ``labels (n,) i32`` and ``mind (n,) f32`` — meant for
+    the *final* iteration only (cluster dumps, solver final statistics), so
+    callers get the assignment from the same single sweep instead of a
+    second two-kernel assign pass.  Returns a 5-tuple in that case.
     """
     n, d = points.shape
     k = centroids.shape[0]
@@ -145,9 +162,24 @@ def lloyd_step_fused(points: jnp.ndarray,
                      else weights.astype(jnp.float32))
 
     grid = (n_pad // bn, k_pad // bk)
-    sums, counts, sse = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((k_pad, d_pad), lambda i, j: (0, 0)),
+        pl.BlockSpec((1, k_pad), lambda i, j: (0, 0)),
+        pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
+        jax.ShapeDtypeStruct((1, k_pad), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),
+    ]
+    if return_labels:
+        out_specs += [pl.BlockSpec((bn,), lambda i, j: (i,)),
+                      pl.BlockSpec((bn,), lambda i, j: (i,))]
+        out_shape += [jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+                      jax.ShapeDtypeStruct((n_pad,), jnp.float32)]
+    out = pl.pallas_call(
         functools.partial(_fused_kernel, block_k=bk, k_actual=k,
-                          last_j=grid[1] - 1),
+                          last_j=grid[1] - 1, with_labels=return_labels),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, d_pad), lambda i, j: (i, 0)),
@@ -155,16 +187,8 @@ def lloyd_step_fused(points: jnp.ndarray,
             pl.BlockSpec((1, bk), lambda i, j: (0, j)),
             pl.BlockSpec((bn,), lambda i, j: (i,)),
         ],
-        out_specs=[
-            pl.BlockSpec((k_pad, d_pad), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, k_pad), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
-            jax.ShapeDtypeStruct((1, k_pad), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bn,), jnp.float32),               # running best score
             pltpu.VMEM((bn,), jnp.int32),                 # running best index
@@ -172,4 +196,9 @@ def lloyd_step_fused(points: jnp.ndarray,
         interpret=interpret,
     )(x, c, cn, w)
 
+    sums, counts, sse = out[:3]
+    if return_labels:
+        labels, mind = out[3], out[4]
+        return (sums[:k, :d], counts[0, :k], sse[0, 0],
+                labels[:n], mind[:n])
     return sums[:k, :d], counts[0, :k], sse[0, 0]

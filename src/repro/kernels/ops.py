@@ -11,6 +11,7 @@ import jax
 from repro.kernels.assign import assign_pallas
 from repro.kernels.centroid_update import centroid_update_pallas
 from repro.kernels.fused import lloyd_step_fused as _lloyd_step_fused
+from repro.kernels.resident import lloyd_solve_resident as _lloyd_solve_resident
 from repro.kernels import ref
 
 
@@ -47,7 +48,35 @@ def lloyd_step_fused(points, centroids, weights=None, *, block_n: int = 256,
                              interpret=interpret)
 
 
+def lloyd_assign_fused(points, centroids, *, block_n: int = 256,
+                       block_k: int = 128, interpret: bool | None = None):
+    """Labels + min squared distances from the fused kernel's final-pass
+    labels output — one sweep, no second kernel (for cluster dumps and
+    solver final statistics)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    _, _, _, labels, mind = _lloyd_step_fused(
+        points, centroids, None, block_n=block_n, block_k=block_k,
+        interpret=interpret, return_labels=True)
+    return labels, mind
+
+
+def lloyd_solve_resident(points, centroids, weights=None, *,
+                         max_iters: int = 300, tol: float = 1e-6,
+                         interpret: bool | None = None):
+    """Whole Lloyd solve in ONE kernel launch (VMEM-resident loop) ->
+    (centroids (k,d), sse (), iters () i32, converged () bool).  Points
+    stream from HBM once per solve; see kernels/resident.py for the
+    feasibility contract."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _lloyd_solve_resident(points, centroids, weights,
+                                 max_iters=max_iters, tol=tol,
+                                 interpret=interpret)
+
+
 # re-export oracles so callers can switch implementations uniformly
 assign_ref = ref.assign_ref
 centroid_update_ref = ref.centroid_update_ref
 lloyd_step_ref = ref.lloyd_step_ref
+lloyd_solve_ref = ref.lloyd_solve_ref

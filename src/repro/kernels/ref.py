@@ -5,6 +5,17 @@ import jax
 import jax.numpy as jnp
 
 
+def divide_or_keep(sums: jnp.ndarray, counts: jnp.ndarray,
+                   old_centroids: jnp.ndarray) -> jnp.ndarray:
+    """Keep-old-centroid division policy: ``sums / counts`` where a cluster
+    captured points, the previous centroid where it is empty.  The single
+    definition every solver loop and kernel uses (pure jnp, traces on-chip);
+    callers pick the dtypes of ``sums``/``old_centroids``."""
+    return jnp.where(counts[:, None] > 0.0,
+                     sums / jnp.maximum(counts[:, None], 1.0),
+                     old_centroids)
+
+
 def assign_ref(points: jnp.ndarray, centroids: jnp.ndarray):
     """Nearest-centroid assignment: (n,d),(k,d) -> labels (n,) i32, min sq
     distances (n,) f32.  Ties break to the lowest index (argmin semantics)."""
@@ -40,3 +51,37 @@ def lloyd_step_ref(points: jnp.ndarray, centroids: jnp.ndarray,
     sums, counts = centroid_update_ref(points, labels, w, k)
     sse = jnp.sum(w * mind)
     return sums, counts, sse
+
+
+def lloyd_solve_ref(points: jnp.ndarray, centroids: jnp.ndarray,
+                    weights: jnp.ndarray | None = None,
+                    *, max_iters: int = 300, tol: float = 1e-6):
+    """Oracle for the resident kernel: a whole Lloyd solve ->
+    (centroids (k,d) f32, sse () f32, iters () i32, converged () bool).
+
+    Same loop semantics as ``core.kmeans``'s host solver — iterate while
+    ``iters < max_iters and shift > tol`` with keep-old-centroid handling of
+    empty clusters, then score the final centroids with one more assignment
+    pass — composed from the single-step oracles above so the resident
+    kernel's on-chip loop is tested against exactly what the host loop does.
+    """
+    # deferred: core imports the kernels package at its own import time
+    from repro.core.metrics import centroid_shift
+    w = (jnp.ones(points.shape[0], jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+
+    def cond(carry):
+        c, it, shift = carry
+        return jnp.logical_and(it < max_iters, shift > tol)
+
+    def body(carry):
+        c, it, _ = carry
+        sums, counts, _ = lloyd_step_ref(points, c, w)
+        new_c = divide_or_keep(sums, counts, c)
+        return new_c, it + 1, centroid_shift(new_c, c)
+
+    init = (centroids.astype(jnp.float32), jnp.int32(0),
+            jnp.float32(jnp.inf))
+    final_c, iters, shift = jax.lax.while_loop(cond, body, init)
+    _, mind = assign_ref(points, final_c)
+    return final_c, jnp.sum(w * mind), iters, shift <= tol

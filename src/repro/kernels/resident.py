@@ -1,0 +1,205 @@
+"""Pallas TPU kernel: VMEM-resident multi-iteration Lloyd solver.
+
+The fused kernel (``fused.py``) collapsed one Lloyd iteration into one HBM
+sweep — but a *solve* is many iterations, so the points still stream from HBM
+once per iteration, which is the paper's job-per-iteration overhead transposed
+onto the memory hierarchy.  For subsets that fit VMEM this kernel finishes the
+argument: ONE ``pallas_call`` runs the entire convergence loop on-chip, so the
+points cross the HBM boundary exactly once per *solve*.
+
+TPU mapping (no grid — the whole subset is one block):
+
+  * the ``(n, d)`` points tile, the ``(k, d)`` centroids and the ``(k, d)``
+    sum / ``(k,)`` count accumulators all live in VMEM for the whole solve;
+  * the convergence loop is a ``lax.while_loop`` *inside* the kernel; each
+    trip is the same ``||c||^2 - 2 x.c`` MXU assignment + one-hot MXU
+    segment-sum as the fused kernel, just without the HBM round-trip between
+    iterations;
+  * iteration/convergence state — the trip count and the ``shift > tol``
+    predicate — is scalar state, carried through SMEM scratch
+    (``pltpu.SMEM``), not vector registers;
+  * after the loop, one extra on-chip assignment pass scores the converged
+    centroids, matching the host solver's final-statistics pass.
+
+Padding follows the other kernels: d zero-padded to the 128-lane boundary
+(exact for squared euclidean), n to the 8-sublane boundary, k to 8; padded
+centroids are masked to +inf scores and keep-old semantics leaves their rows
+fixed, so they contribute 0 to the shift; padded points carry weight 0.
+
+Feasibility: the working set is ~``n*d + 2*n*k + 3*k*d`` floats (the (n, k)
+score and one-hot matrices are materialized on-chip), so
+:func:`resident_feasible` gates the launch and callers fall back to the
+per-step fused engine when the subset does not fit — see
+``kernels/engine.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = 4  # bytes
+
+# VMEM per TensorCore the feasibility guard budgets against.  Real chips have
+# ~16 MiB; leave headroom for double-buffered input DMA and compiler spills.
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+
+def resident_tile_shapes(n: int, d: int, k: int):
+    """Padded (n_pad, k_pad, d_pad) for the single-block resident kernel."""
+    n_pad = -(-n // 8) * 8
+    k_pad = -(-k // 8) * 8
+    d_pad = max(-(-d // 128) * 128, 128)
+    return n_pad, k_pad, d_pad
+
+
+def resident_vmem_bytes(n: int, d: int, k: int) -> int:
+    """f32 working-set bytes of one resident solve (everything on-chip).
+
+    Counts the points tile, the (n, k) score + one-hot matrices, three (k, d)
+    centroid-sized arrays (current, sums, new), and the (n,)/(k,) vectors
+    (weights, ||x||^2, best, index, counts).
+    """
+    n_pad, k_pad, d_pad = resident_tile_shapes(n, d, k)
+    return (n_pad * d_pad                       # points
+            + 2 * n_pad * k_pad                 # scores + one-hot
+            + 3 * k_pad * d_pad                 # centroids, sums, new centroids
+            + 4 * n_pad + 2 * k_pad) * F32      # w, x2, best, idx / counts, cn
+
+
+def resident_feasible(n: int, d: int, k: int,
+                      budget: int = VMEM_BUDGET_BYTES) -> bool:
+    """Can the whole solve stay resident in VMEM for this (n, d, k)?"""
+    return resident_vmem_bytes(n, d, k) <= budget
+
+
+def max_resident_points(d: int, k: int,
+                        budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest subset size n that keeps a (d, k) solve VMEM-resident.
+
+    This is the sizing knob for IPKMeans S2: the paper's answer to a subset
+    that does not fit is MORE reducers (larger M -> smaller subsets), so
+    partition until ``subset_capacity(n) <= max_resident_points(d, k)`` and
+    every reducer becomes a single kernel launch.
+    """
+    _, k_pad, d_pad = resident_tile_shapes(8, d, k)
+    fixed = (3 * k_pad * d_pad + 2 * k_pad) * F32
+    per_n = (d_pad + 2 * k_pad + 4) * F32
+    if fixed >= budget:
+        return 0
+    n = (budget - fixed) // per_n
+    return max(0, int(n - n % 8))
+
+
+def _resident_kernel(x_ref, c0_ref, w_ref,
+                     c_out_ref, sse_ref, iters_ref, conv_ref,
+                     state_scr, *,
+                     k_actual: int, max_iters: int, tol: float,
+                     carry_dtype):
+    # deferred (trace-time) import: core imports the kernels package at its
+    # own import time.  centroid_shift is pure jnp, so it traces on-chip —
+    # the stop criterion has ONE definition across host loop/oracle/kernel.
+    from repro.core.metrics import centroid_shift
+    from repro.kernels.ref import divide_or_keep
+    x = x_ref[...].astype(jnp.float32)                     # (n_pad, d_pad)
+    w = w_ref[...].astype(jnp.float32)                     # (n_pad,)
+    x2 = jnp.sum(x * x, axis=1)                            # (n_pad,)
+    k_pad = c0_ref.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k_pad), 1)
+
+    def assign_and_reduce(c):
+        """One on-chip Lloyd pass -> (sums, counts, sse) — the fused kernel's
+        phase 1 + phase 2, minus the HBM traffic."""
+        cn = jnp.sum(c * c, axis=1)[None, :]               # (1, k_pad)
+        s = cn - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+        s = jnp.where(col < k_actual, s, jnp.inf)          # mask padded centroids
+        best = jnp.min(s, axis=1)
+        idx = jnp.argmin(s, axis=1).astype(jnp.int32)
+        onehot = (idx[:, None] == col).astype(jnp.float32) * w[:, None]
+        sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+        counts = jnp.sum(onehot, axis=0)
+        mind = jnp.maximum(best + x2, 0.0)                 # row-constant restored
+        return sums, counts, jnp.sum(w * mind)
+
+    def cond(carry):
+        c, it, shift = carry
+        return jnp.logical_and(it < max_iters, shift > tol)
+
+    def body(carry):
+        c, it, _ = carry
+        sums, counts, _ = assign_and_reduce(c)
+        new_c = divide_or_keep(sums, counts, c)
+        # the host loop carries centroids in the caller's dtype; round-trip
+        # through it so feasible and fallback solves are bit-for-bit
+        # consistent (identity for f32)
+        new_c = new_c.astype(carry_dtype).astype(jnp.float32)
+        shift = centroid_shift(new_c, c)
+        # scalar loop state lives in SMEM: trip count + converged predicate
+        state_scr[0] = it + 1
+        state_scr[1] = jnp.where(shift <= tol, 1, 0)
+        return new_c, it + 1, shift
+
+    state_scr[0] = 0                                       # iterations executed
+    state_scr[1] = 0                                       # converged flag
+    final_c, _, _ = jax.lax.while_loop(
+        cond, body,
+        (c0_ref[...].astype(jnp.float32), jnp.int32(0),
+         jnp.float32(jnp.inf)))
+
+    # final statistics with the converged centroids (host solvers do the same
+    # extra assignment pass — here it never leaves VMEM)
+    _, _, final_sse = assign_and_reduce(final_c)
+    c_out_ref[...] = final_c
+    sse_ref[0, 0] = final_sse
+    iters_ref[0, 0] = state_scr[0]
+    conv_ref[0, 0] = state_scr[1]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iters", "tol", "interpret"))
+def lloyd_solve_resident(points: jnp.ndarray,
+                         centroids: jnp.ndarray,
+                         weights: jnp.ndarray | None = None,
+                         *,
+                         max_iters: int = 300,
+                         tol: float = 1e-6,
+                         interpret: bool = False):
+    """Full Lloyd solve in ONE kernel launch: (n,d),(k,d)[,(n,)] ->
+    (centroids (k,d), sse (), iters () i32, converged () bool).
+
+    Semantics match ``core.kmeans``'s host loop exactly: iterate while
+    ``iters < max_iters and shift > tol`` with keep-old-centroid handling of
+    empty clusters, then score the final centroids.  Callers MUST check
+    :func:`resident_feasible` first — the engine layer does, and falls back
+    to the per-step fused path when the subset does not fit VMEM.
+    """
+    n, d = points.shape
+    k = centroids.shape[0]
+    n_pad, k_pad, d_pad = resident_tile_shapes(n, d, k)
+
+    x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
+    c = jnp.zeros((k_pad, d_pad), centroids.dtype).at[:k, :d].set(centroids)
+    w = jnp.zeros((n_pad,), jnp.float32)
+    w = w.at[:n].set(1.0 if weights is None else weights.astype(jnp.float32))
+
+    c_out, sse, iters, conv = pl.pallas_call(
+        functools.partial(_resident_kernel, k_actual=k,
+                          max_iters=max_iters, tol=tol,
+                          carry_dtype=centroids.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((2,), jnp.int32),          # (trip count, converged)
+        ],
+        interpret=interpret,
+    )(x, c, w)
+
+    return (c_out[:k, :d].astype(centroids.dtype), sse[0, 0],
+            iters[0, 0], conv[0, 0].astype(bool))

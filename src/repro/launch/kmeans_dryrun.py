@@ -99,11 +99,14 @@ def _record(name, mesh_tag, lowered, compiled, extra=None):
 
 
 def lower_all(multi_pod: bool, backend: str = "jnp"):
-    """Lower the dry-run cells.  ``backend`` picks the Lloyd kernel path for
-    pkmeans-iter and s2s3 ('jnp' | 'pallas' | 'fused'); non-default backends
-    skip the backend-independent S1 cells and write records suffixed
-    ``__<backend>`` so perf_variants can diff them against the jnp
-    baselines."""
+    """Lower the dry-run cells.  ``backend`` names the Lloyd engine for
+    pkmeans-iter and s2s3 (any name in the ``kernels.engine`` registry —
+    'jnp' | 'pallas' | 'fused' | 'resident'); non-default backends skip the
+    backend-independent S1 cells and write records suffixed ``__<backend>``
+    so perf_variants can diff them against the jnp baselines.  With
+    'resident', each S2 reducer whose subset fits VMEM lowers as ONE kernel
+    launch per solve (the engine's feasibility guard decides — infeasible
+    shapes lower the fused per-step loop instead)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "x".join(map(str, mesh.devices.shape))
     file_tag = mesh_tag if backend == "jnp" else f"{mesh_tag}__{backend}"
@@ -222,9 +225,9 @@ def lower_all(multi_pod: bool, backend: str = "jnp"):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--backend", default="jnp",
-                    choices=["jnp", "pallas", "fused"],
-                    help="Lloyd kernel path lowered into the programs")
+    from repro.kernels.engine import available
+    ap.add_argument("--backend", default="jnp", choices=list(available()),
+                    help="Lloyd engine lowered into the programs")
     args = ap.parse_args()
     lower_all(args.multi_pod, backend=args.backend)
 

@@ -84,6 +84,11 @@ KMEANS_VARIANTS = {
     "C2": dict(backend="fused",
                note="fused single-pass Lloyd kernel (one HBM sweep per "
                     "iteration; labels/distances never leave VMEM)"),
+    "C3": dict(backend="resident",
+               note="VMEM-resident multi-iteration Lloyd: whole solve in "
+                    "one kernel launch where the subset fits VMEM — points "
+                    "stream HBM once per SOLVE, i.e. iters x fewer sweeps "
+                    "than the fused per-step kernel"),
 }
 
 
@@ -115,6 +120,32 @@ def run_kmeans(tag: str, force: bool = False):
             print(f"    {term:13s}: {b:.3e} -> {n:.3e}"
                   + (f"  ({b / n:.2f}x)" if n > 0 else ""))
         out.append(rec)
+
+    if backend == "resident":
+        # iterations-per-launch: the analytic per-solve HBM model for one S2
+        # reducer's subset — fused pays one points sweep per iteration,
+        # resident pays one per solve (benchmarks/kernel_bench.py's model)
+        from benchmarks.kernel_bench import lloyd_solve_hbm_bytes
+        from repro.kernels.resident import (max_resident_points,
+                                            resident_feasible)
+        n_sub = -(-kmeans_dryrun.N // kmeans_dryrun.M)
+        iters = kmeans_dryrun.MAX_ITERS
+        d, k = kmeans_dryrun.D, kmeans_dryrun.K
+        fus = lloyd_solve_hbm_bytes(n_sub, d, k, iters, "fused")
+        res = lloyd_solve_hbm_bytes(n_sub, d, k, iters, "resident")
+        print(f"  per-solve HBM model (subset n={n_sub}, d={d}, k={k}, "
+              f"iters={iters}):")
+        print(f"    fused   : {fus:.3e} B  ({iters} point sweeps/launch x 1)")
+        print(f"    resident: {res:.3e} B  (1 point sweep/solve, "
+              f"{fus / res:.1f}x less; vmem_feasible="
+              f"{resident_feasible(n_sub, d, k)})")
+        if not resident_feasible(n_sub, d, k):
+            n_max = max_resident_points(d, k)
+            m_needed = -(-kmeans_dryrun.N // max(n_max, 1))
+            print(f"    -> subset too big for VMEM (falls back to fused); "
+                  f"resident fits n<={n_max} at this (d, k), i.e. "
+                  f"M>={m_needed} reducers — the paper's more-reducers knob "
+                  f"IS the feasibility knob")
     return out
 
 

@@ -1,0 +1,312 @@
+"""LloydEngine registry: cross-engine parity, the resident solver vs the jnp
+oracle, the VMEM-feasibility fallback, and empty-cluster reseeding — all in
+interpret mode (the CI kernel gate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import KMeansParams, kmeans
+from repro.kernels import engine as engines
+from repro.kernels import ops, ref, resident
+
+
+def _data(n, d, k, dtype=jnp.float32, scale=3.0, seed=1):
+    kx, kc = jax.random.split(jax.random.key(n * d * k + seed))
+    x = (jax.random.normal(kx, (n, d)) * scale).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * scale).astype(dtype)
+    return x, c
+
+
+# ---------------------------------------------------------------- registry --
+
+def test_registry_contents():
+    assert set(engines.available()) >= {"jnp", "pallas", "fused", "resident"}
+    for name in engines.available():
+        assert engines.get_engine(name).name == name
+
+
+def test_registry_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        engines.get_engine("fussed")
+
+
+def test_registry_accepts_new_engine():
+    """The registry is open: a custom engine slots into the same lookup the
+    solvers use (the autotuning path future PRs need)."""
+    class Echo(engines.LloydEngine):
+        name = "_echo_test"
+        def step(self, points, centroids, weights=None):
+            return ref.lloyd_step_ref(points, centroids, weights)
+    engines.register(Echo())
+    try:
+        assert "_echo_test" in engines.available()
+        x, c = _data(64, 2, 3)
+        s, cnt, sse = engines.get_engine("_echo_test").step(x, c)
+        s_r, cnt_r, sse_r = ref.lloyd_step_ref(x, c)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_r))
+    finally:
+        engines._REGISTRY.pop("_echo_test", None)
+
+
+# ------------------------------------------------- cross-engine step parity --
+
+ENGINE_NAMES = ("jnp", "pallas", "fused", "resident")
+
+
+def _step_parity_case(n, d, k, dtype, masked, seed):
+    x, c = _data(n, d, k, dtype, seed=seed)
+    w = None
+    if masked:
+        w = (jax.random.uniform(jax.random.key(seed), (n,)) > 0.3).astype(
+            jnp.float32)
+    s_r, cnt_r, sse_r = ref.lloyd_step_ref(x, c, w)
+    tol = 1e-3 if dtype == jnp.float32 else 0.2
+    for name in ENGINE_NAMES:
+        s, cnt, sse = engines.get_engine(name).step(x, c, w)
+        np.testing.assert_allclose(np.asarray(cnt), np.asarray(cnt_r),
+                                   rtol=1e-6, err_msg=name)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_r),
+                                   rtol=tol, atol=tol, err_msg=name)
+        np.testing.assert_allclose(float(sse), float(sse_r), rtol=tol,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_engines_step_parity_fixed_shapes(dtype):
+    """All registered engines agree with the oracle on (sums, counts, sse),
+    with and without masks."""
+    _step_parity_case(300, 2, 5, dtype, masked=False, seed=3)
+    _step_parity_case(257, 17, 7, dtype, masked=True, seed=4)
+
+
+def test_engines_step_parity_property():
+    """hypothesis sweep: random shapes/masks/dtypes, every engine vs oracle.
+
+    Shapes are drawn from small fixed menus so the jit cache is shared
+    across examples (interpret-mode Pallas recompiles per shape)."""
+    hyp = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the 'dev' extra (pip install -e '.[dev]')")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.sampled_from([(48, 2, 3), (64, 5, 4), (96, 3, 8)]),
+           st.sampled_from([jnp.float32, jnp.bfloat16]),
+           st.booleans(), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=12, deadline=None)
+    def prop(shape, dtype, masked, seed):
+        n, d, k = shape
+        _step_parity_case(n, d, k, dtype, masked, seed)
+
+    prop()
+
+
+# --------------------------------------------------- resident solve parity --
+
+@pytest.mark.parametrize("n,d,k", [(300, 2, 5), (512, 6, 8), (257, 17, 7)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_resident_solve_matches_oracle(n, d, k, masked):
+    """The on-chip convergence loop reproduces the jnp solve oracle exactly:
+    converged centroids, SSE, iteration count, converged flag."""
+    x, _ = _data(n, d, k)
+    init = x[:k]
+    w = None
+    if masked:
+        w = (jax.random.uniform(jax.random.key(7), (n,)) > 0.2).astype(
+            jnp.float32)
+    assert resident.resident_feasible(n, d, k)
+    c_r, sse_r, it_r, conv_r = ref.lloyd_solve_ref(x, init, w,
+                                                   max_iters=50, tol=1e-6)
+    c_p, sse_p, it_p, conv_p = ops.lloyd_solve_resident(x, init, w,
+                                                        max_iters=50,
+                                                        tol=1e-6,
+                                                        interpret=True)
+    assert int(it_r) == int(it_p)
+    assert bool(conv_r) == bool(conv_p)
+    # early convergence must actually exercise the while_loop's exit branch
+    assert int(it_p) < 50
+    np.testing.assert_allclose(np.asarray(c_r), np.asarray(c_p),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(sse_r), float(sse_p), rtol=1e-5)
+
+
+def test_resident_solve_hits_max_iters():
+    """tol=0 can never be met, so the loop must stop at max_iters with
+    converged=False."""
+    x, _ = _data(300, 3, 4)
+    _, _, it, conv = ops.lloyd_solve_resident(x, x[:4], max_iters=3,
+                                              tol=0.0, interpret=True)
+    assert int(it) == 3 and not bool(conv)
+
+
+def test_kmeans_solver_resident_backend():
+    """Lloyd-to-convergence with backend='resident' tracks the jnp solver
+    through the full KMeansResult (the whole-solve delegation path)."""
+    x, _ = _data(512, 6, 8)
+    init = x[:8]
+    r_jnp = kmeans(x, init, params=KMeansParams(max_iters=25))
+    r_res = kmeans(x, init, params=KMeansParams(max_iters=25,
+                                                backend="resident"))
+    assert int(r_jnp.iters) == int(r_res.iters)
+    assert bool(r_jnp.converged) == bool(r_res.converged)
+    np.testing.assert_allclose(np.asarray(r_jnp.centroids),
+                               np.asarray(r_res.centroids),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(r_jnp.sse), float(r_res.sse), rtol=1e-4)
+    np.testing.assert_allclose(float(r_jnp.asse), float(r_res.asse),
+                               rtol=1e-4)
+
+
+# ------------------------------------------------------ feasibility + fall --
+
+def test_resident_feasibility_model():
+    assert resident.resident_feasible(300, 2, 5)
+    # (n, k) score matrix alone blows the budget
+    assert not resident.resident_feasible(4096, 8, 2048)
+    assert resident.resident_vmem_bytes(4096, 8, 2048) \
+        > resident.VMEM_BUDGET_BYTES
+    # max_resident_points inverts the byte model exactly (S2 sizing knob)
+    for d, k in [(2, 5), (16, 64), (64, 1024)]:
+        n_max = resident.max_resident_points(d, k)
+        assert resident.resident_feasible(n_max, d, k)
+        assert not resident.resident_feasible(n_max + 8, d, k)
+
+
+def test_resident_engine_uses_kernel_when_feasible(monkeypatch):
+    calls = {"resident": 0}
+    real = ops.lloyd_solve_resident
+
+    def counting(*args, **kwargs):
+        calls["resident"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lloyd_solve_resident", counting)
+    x, _ = _data(256, 4, 4)
+    engines.get_engine("resident").solve(x, x[:4], max_iters=5, tol=1e-6)
+    assert calls["resident"] == 1
+
+
+def test_resident_solve_bf16_matches_fallback(monkeypatch):
+    """The kernel path and the fused fallback must produce the SAME solve
+    for non-f32 carries too: the kernel rounds its centroid carry back to
+    the caller's dtype every iteration exactly like the host loop, so two
+    S2 subsets straddling the feasibility boundary never get systematically
+    different solvers."""
+    x, _ = _data(256, 8, 6, dtype=jnp.bfloat16)
+    init = x[:6]
+    eng = engines.get_engine("resident")
+    c_k, sse_k, it_k, conv_k = eng.solve(x, init, max_iters=30, tol=1e-3)
+    monkeypatch.setattr(resident, "resident_feasible",
+                        lambda n, d, k, budget=None: False)
+    c_f, sse_f, it_f, conv_f = eng.solve(x, init, max_iters=30, tol=1e-3)
+    assert int(it_k) == int(it_f)
+    assert bool(conv_k) == bool(conv_f)
+    np.testing.assert_allclose(np.asarray(c_k, np.float32),
+                               np.asarray(c_f, np.float32),
+                               rtol=1e-2, atol=1e-2)
+    np.testing.assert_allclose(float(sse_k), float(sse_f), rtol=1e-2)
+
+
+def test_resident_engine_falls_back_when_infeasible(monkeypatch):
+    """When (n, d, k) does not fit VMEM the engine must route the solve
+    through the fused per-step loop — and still match the jnp solver."""
+    def boom(*args, **kwargs):
+        raise AssertionError("resident kernel launched on infeasible shape")
+
+    monkeypatch.setattr(ops, "lloyd_solve_resident", boom)
+    monkeypatch.setattr(resident, "resident_feasible",
+                        lambda n, d, k, budget=None: False)
+    x, _ = _data(256, 4, 4)
+    init = x[:4]
+    c_f, sse_f, it_f, conv_f = engines.get_engine("resident").solve(
+        x, init, max_iters=10, tol=1e-6)
+    c_r, sse_r, it_r, conv_r = ref.lloyd_solve_ref(x, init, max_iters=10,
+                                                   tol=1e-6)
+    assert int(it_f) == int(it_r)
+    np.testing.assert_allclose(np.asarray(c_f), np.asarray(c_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(sse_f), float(sse_r), rtol=1e-4)
+
+
+# -------------------------------------------------------- fused labels out --
+
+@pytest.mark.parametrize("n,d,k", [(300, 2, 5), (513, 64, 130)])
+def test_fused_labels_output_matches_assign(n, d, k):
+    """The fused kernel's final-pass labels output == the dedicated assign
+    path (same argmin, one sweep instead of two kernels)."""
+    x, c = _data(n, d, k)
+    labels, mind = ops.lloyd_assign_fused(x, c, interpret=True)
+    l_ref, m_ref = ref.assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(l_ref))
+    np.testing.assert_allclose(np.asarray(mind), np.asarray(m_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- reseeding ---
+
+@pytest.mark.parametrize("backend", ENGINE_NAMES)
+def test_reseed_empty_rescues_frozen_centroid(backend):
+    """A centroid planted unreachably far away captures nothing; with
+    reseed_empty it must move onto a real point (the farthest one) and the
+    final SSE must beat keep-old-centroid semantics — on every engine."""
+    pts = jnp.concatenate([
+        jax.random.normal(jax.random.key(0), (60, 2)),
+        jax.random.normal(jax.random.key(1), (60, 2)) + 10.0])
+    init = jnp.array([[0.0, 0.0], [0.5, 0.5], [500.0, 500.0]])
+    frozen = kmeans(pts, init, params=KMeansParams(
+        max_iters=20, backend=backend))
+    reseeded = kmeans(pts, init, params=KMeansParams(
+        max_iters=20, backend=backend, reseed_empty=True))
+    # keep-old leaves the far centroid frozen; reseed pulls it into the data
+    np.testing.assert_allclose(np.asarray(frozen.centroids[2]),
+                               [500.0, 500.0], rtol=1e-5)
+    assert float(jnp.abs(reseeded.centroids[2]).max()) < 50.0
+    assert float(reseeded.sse) < float(frozen.sse) * 0.9
+
+
+def test_reseed_never_picks_masked_points():
+    """More empty clusters than valid points: top_k falls through to masked
+    rows — those slots must keep their old centroid, never leak padding
+    coordinates into the output."""
+    pts = jnp.concatenate([jnp.zeros((1, 2)),              # one valid point
+                           jnp.full((5, 2), 7.0)])         # padding rows
+    mask = jnp.array([True] + [False] * 5)
+    init = jnp.array([[0.0, 0.0], [50.0, 50.0],
+                      [60.0, 60.0], [70.0, 70.0]])
+    res = kmeans(pts, init, mask=mask,
+                 params=KMeansParams(max_iters=5, reseed_empty=True))
+    c = np.asarray(res.centroids)
+    assert not np.isclose(c, 7.0).all(axis=1).any(), c
+    # the single valid point may claim one empty slot; the rest keep-old
+    np.testing.assert_allclose(c[2:], np.asarray(init[2:]), rtol=1e-6)
+
+
+def test_reseed_empty_in_pkmeans():
+    """The global PKMeans solver honors the flag too (single-process path);
+    the sharded builder refuses it rather than silently ignoring it."""
+    from repro.core.pkmeans import pkmeans, pkmeans_sharded
+    pts = jnp.concatenate([
+        jax.random.normal(jax.random.key(0), (60, 2)),
+        jax.random.normal(jax.random.key(1), (60, 2)) + 10.0])
+    init = jnp.array([[0.0, 0.0], [0.5, 0.5], [500.0, 500.0]])
+    frozen = pkmeans(pts, init, params=KMeansParams(max_iters=20))
+    reseeded = pkmeans(pts, init, params=KMeansParams(max_iters=20,
+                                                      reseed_empty=True))
+    np.testing.assert_allclose(np.asarray(frozen.centroids[2]),
+                               [500.0, 500.0], rtol=1e-5)
+    assert float(jnp.abs(reseeded.centroids[2]).max()) < 50.0
+    assert float(reseeded.sse) < float(frozen.sse) * 0.9
+    with pytest.raises(NotImplementedError, match="reseed_empty"):
+        pkmeans_sharded(None, ("data",),
+                        KMeansParams(reseed_empty=True))
+
+
+def test_reseed_empty_noop_when_no_empties():
+    """With every cluster populated the flag must not change the solution."""
+    x, _ = _data(400, 3, 4)
+    base = kmeans(x, x[:4], params=KMeansParams(max_iters=25))
+    flagged = kmeans(x, x[:4], params=KMeansParams(max_iters=25,
+                                                   reseed_empty=True))
+    assert int(base.iters) == int(flagged.iters)
+    np.testing.assert_allclose(np.asarray(base.centroids),
+                               np.asarray(flagged.centroids), rtol=1e-6)

@@ -6,24 +6,25 @@ import pytest
 
 from repro.configs import SMOKE_ARCHS
 from repro.core import IPKMeansConfig, ipkmeans, pkmeans
+from repro.core.kmeans import KMeansParams
 from repro.data import gaussian_mixture, initial_centroid_groups
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="known quality gap: with ~500-point subsets a centroid that "
-           "captures no points stays frozen at its init in every reducer "
-           "(empty-cluster keep-old semantics), while full-data PKMeans "
-           "escapes the local minimum — see ROADMAP 'empty-cluster "
-           "reseeding' open item")
 def test_paper_pipeline_end_to_end():
     """Full IPKMeans run on paper-style data recovers the planted clusters
-    about as well as PKMeans does."""
+    about as well as PKMeans does.
+
+    With ~500-point subsets a centroid that captures no points would stay
+    frozen at its init in every reducer (empty-cluster keep-old semantics)
+    and all reducers would converge to the same poor local minimum;
+    ``reseed_empty`` re-seeds those centroids at the farthest in-subset
+    point, which closes the gap (the ROADMAP open item this test gated)."""
     pts, centers, _ = gaussian_mixture(jax.random.key(42), 3000, 5)
     init = initial_centroid_groups(pts, 5, groups=1)[0]
     ref = pkmeans(pts, init)
     res = ipkmeans(pts, init, jax.random.key(0),
-                   IPKMeansConfig(num_clusters=5, num_subsets=6))
+                   IPKMeansConfig(num_clusters=5, num_subsets=6,
+                                  kmeans=KMeansParams(reseed_empty=True)))
     assert float(res.sse) <= float(ref.sse) * 1.05
     # every recovered centroid is near a planted center (clusters overlap
     # with sigma=2, so 'near' is within ~1 sigma)
