@@ -17,26 +17,15 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import record, timeit
-from repro.kernels import ops, ref
-from repro.kernels.fused import fused_tile_shapes
+from repro.kernels import ops, ref, specs, tuning
 from repro.kernels.resident import resident_feasible, resident_vmem_bytes
+from repro.kernels.specs import F32
 
 SIZES = [(10_000, 2, 5), (100_000, 16, 64), (500_000, 64, 256)]
-F32 = 4  # bytes
 NOMINAL_ITERS = 20  # typical Lloyd iterations-to-convergence for the models
 
-
-def vmem_footprint(bn, bk, d_pad, dtype_bytes=F32):
-    """Bytes of VMEM the assign kernel's working set claims per grid step."""
-    return (bn * d_pad + bk * d_pad + bk + 2 * bn) * dtype_bytes
-
-
-def fused_vmem_footprint(bn, bk, k_pad, d_pad, dtype_bytes=F32):
-    """Fused kernel working set: x/c/cn/w tiles + resident (sums, counts,
-    sse) output blocks + the (best, idx) scratch pair."""
-    return (bn * d_pad + bk * d_pad + bk + bn          # inputs
-            + k_pad * d_pad + k_pad + 1                # resident outputs
-            + 2 * bn) * dtype_bytes                    # argmin scratch
+# working-set pricing lives on KernelSpec (specs.py) — the same byte models
+# the tuner prunes candidates with, so the report can't drift from the guard
 
 
 def lloyd_hbm_bytes(n, d, k, fused: bool):
@@ -81,7 +70,9 @@ def run():
         fn = jax.jit(lambda x, c: ref.assign_ref(x, c))
         t = timeit(fn, x, c)
         # the kernels' actual tiling (block sizes clamp on small shapes)
-        bn, bk, _, k_pad, d_pad = fused_tile_shapes(n, d, k)
+        spec = specs.DEFAULT_SPEC
+        bn, bk, _, k_pad, d_pad = spec.tile_shapes(n, d, k)
+        budget = specs.get_profile().budget_bytes
         # fused vs two-kernel: one HBM sweep per iteration instead of two
         two_pass = lloyd_hbm_bytes(n, d, k, fused=False)
         fused = lloyd_hbm_bytes(n, d, k, fused=True)
@@ -93,11 +84,10 @@ def run():
             "flops": 2.0 * n * k * d,
             "gflops_per_s": 2.0 * n * k * d / t / 1e9,
             "pallas_block": [bn, bk, d_pad],
-            "pallas_vmem_bytes": vmem_footprint(bn, bk, d_pad),
-            "vmem_ok": vmem_footprint(bn, bk, d_pad) < 16 * 2 ** 20,
-            "fused_vmem_bytes": fused_vmem_footprint(bn, bk, k_pad, d_pad),
-            "fused_vmem_ok":
-                fused_vmem_footprint(bn, bk, k_pad, d_pad) < 16 * 2 ** 20,
+            "pallas_vmem_bytes": spec.assign_vmem_bytes(n, d, k),
+            "vmem_ok": spec.assign_vmem_bytes(n, d, k) <= budget,
+            "fused_vmem_bytes": spec.fused_vmem_bytes(n, d, k),
+            "fused_vmem_ok": spec.fused_vmem_bytes(n, d, k) <= budget,
             "hbm_bytes_two_pass": two_pass,
             "hbm_bytes_fused": fused,
             "fused_hbm_ratio": two_pass / fused,
@@ -172,6 +162,33 @@ def run():
     }
     rows.append(resident_row)
 
+    # tuned vs default geometry: the fused step under the cache's winner for
+    # this shape (specs.DEFAULT_SPEC on a cache miss — the tuned engine's
+    # fallback) head-to-head with the default spec.  Run
+    # `python -m repro.launch.autotune` first to populate the cache; without
+    # it this row documents that tuned == default.
+    n, d, k = SIZES[0]
+    tuned_spec = (tuning.lookup_spec(n, d, k, jnp.float32)
+                  or specs.DEFAULT_SPEC)
+    # t_fus above already timed the default spec on this exact (x, c) —
+    # reuse it, and only pay a second interpret-mode sweep when the cache
+    # actually produced a different geometry
+    t_def = t_fus
+    t_tun = t_def if tuned_spec == specs.DEFAULT_SPEC else timeit(
+        jax.jit(lambda x, c: ops.lloyd_step_fused(
+            x, c, spec=tuned_spec, interpret=True)), x, c)
+    tuned_row = {
+        "n": n, "d": d, "k": k, "mode": "interpret-tuned-vs-default",
+        "tuned_from_cache": tuned_spec != specs.DEFAULT_SPEC,
+        "default_spec": specs.DEFAULT_SPEC.to_json(),
+        "tuned_spec": tuned_spec.to_json(),
+        "default_us": t_def * 1e6,
+        "tuned_us": t_tun * 1e6,
+        "default_vmem_bytes": specs.DEFAULT_SPEC.fused_vmem_bytes(n, d, k),
+        "tuned_vmem_bytes": tuned_spec.fused_vmem_bytes(n, d, k),
+    }
+    rows.append(tuned_row)
+
     record("kernel_bench", rows,
            ("kernel_assign", f"{assign_row['jnp_ref_us']:.0f}",
             f"gflops={assign_row['gflops_per_s']:.1f}"))
@@ -182,6 +199,9 @@ def run():
            ("kernel_resident_vs_fused",
             f"{resident_row['resident_solve_us']:.0f}",
             f"solve_hbm_ratio={resident_row['resident_solve_hbm_ratio']:.2f}"))
+    record("kernel_bench", rows,
+           ("kernel_tuned_vs_default", f"{tuned_row['tuned_us']:.0f}",
+            f"from_cache={tuned_row['tuned_from_cache']}"))
     return rows
 
 

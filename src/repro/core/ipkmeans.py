@@ -32,13 +32,14 @@ class IPKMeansConfig:
     num_subsets: int                        # M — parallel "reducers"
     partition: str = "kd_axis"              # 'kd_axis' | 'kd_random' | 'random'
     merge: str = "min_asse"                 # 'min_asse' | 'hierarchical'
+    pack: str = "scatter"                   # 'scatter' | 'sorted' | 'a2a'
     leaf_capacity: int | None = None        # default: num_subsets (paper)
     label_axis: int = 0
     kmeans: KMeansParams = KMeansParams()
 
     def with_backend(self, backend: str) -> "IPKMeansConfig":
         """Same config, different Lloyd engine ('jnp' | 'pallas' | 'fused' |
-        'resident' — any name in the ``kernels.engine`` registry).
+        'resident' | 'tuned' — any name in the ``kernels.engine`` registry).
 
         The engine is the hot-path choice every S2 reducer executes; this
         helper keeps it switchable without re-spelling the whole config.
@@ -70,14 +71,42 @@ class IPKMeansResult(NamedTuple):
     kd_depth: int                           # static: tree levels ("jobs")
 
 
-def _partition_and_pack(points, key, cfg: IPKMeansConfig):
+def _partition_and_pack(points, key, cfg: IPKMeansConfig,
+                        mesh=None, axis_names=None):
+    """S1: partition, then route each subset to its reducer.
+
+    The shuffle strategy is ``cfg.pack`` (§Perf C2/C3 — previously
+    reachable only from the kmeans_dryrun CLI):
+
+      * ``scatter`` — the reference scatter-pack; always valid.
+      * ``sorted``  — one sort + reshape, no scatter (GSPMD lowers the
+        scatter as a dataset-sized all-reduce; the sort+gather moves the
+        data once).  Requires every subset to hold exactly ``capacity``
+        points (``n == M * capacity``, the static precondition the kernel
+        itself asserts) — otherwise falls back to ``scatter``.
+      * ``a2a``     — explicit shard_map all_to_all shuffle; needs a mesh
+        (so the single-process :func:`ipkmeans` falls back to ``scatter``),
+        and itself falls back when M or n don't divide over the mesh.
+    """
+    if cfg.pack not in ("scatter", "sorted", "a2a"):
+        raise ValueError(f"unknown pack: {cfg.pack!r} "
+                         f"(expected 'scatter' | 'sorted' | 'a2a')")
     part = kdtree.partition_dataset(
         points, key, cfg.num_subsets,
         leaf_capacity=cfg.leaf_capacity,
         strategy=cfg.partition, label_axis=cfg.label_axis)
-    capacity = cfg.subset_capacity(points.shape[0])
-    subsets, masks = kdtree.pack_subsets(
-        points, part.subset_ids, cfg.num_subsets, capacity)
+    n = points.shape[0]
+    capacity = cfg.subset_capacity(n)
+    if cfg.pack == "sorted" and n == cfg.num_subsets * capacity:
+        subsets, masks = kdtree.pack_subsets_sorted(
+            points, part.subset_ids, cfg.num_subsets, capacity)
+    elif cfg.pack == "a2a" and mesh is not None:
+        subsets, masks = kdtree.pack_subsets_a2a(
+            points, part.subset_ids, cfg.num_subsets, capacity,
+            mesh, axis_names)
+    else:
+        subsets, masks = kdtree.pack_subsets(
+            points, part.subset_ids, cfg.num_subsets, capacity)
     return part, subsets, masks
 
 
@@ -129,7 +158,9 @@ def ipkmeans_distributed(points: jnp.ndarray,
         raise ValueError(
             f"num_subsets={cfg.num_subsets} not divisible by mesh size {n_dev}")
 
-    part, subsets, masks = _partition_and_pack(points, key, cfg)
+    part, subsets, masks = _partition_and_pack(points, key, cfg,
+                                               mesh=mesh,
+                                               axis_names=axis_names)
 
     def s2_body(sub, msk):                       # per-device stack of reducers
         return kmeans_batched(sub, msk, init_centroids, cfg.kmeans)

@@ -11,7 +11,8 @@ semantics, Algorithm 4); engines that own their convergence loop
 Registered engines (see ``src/repro/kernels/__init__.py`` for the taxonomy):
 ``jnp`` (reference/oracle) | ``pallas`` (two-kernel, labels as product) |
 ``fused`` (one HBM sweep per iteration) | ``resident`` (one HBM sweep per
-*solve* — VMEM-resident loop with automatic fused fallback).
+*solve* — VMEM-resident loop with automatic fused fallback) | ``tuned``
+(resident behaviour + autotuned kernel geometry from the tuning cache).
 
 ``reseed_empty`` re-seeds zero-count centroids at the farthest in-subset
 point (k-means++-style, Bahmani et al.): with small subsets a centroid frozen
@@ -31,15 +32,21 @@ from repro.kernels import engine as engines
 from repro.kernels import ref
 
 
-# registered engine names at import time (the historical public constant;
-# late registrations are visible via engines.available())
-BACKENDS = engines.available()
+def __getattr__(name):
+    # BACKENDS is the historical public constant; computed per-access (not
+    # snapshotted at import) so late-registered engines — 'tuned' lands when
+    # kernels.tuning imports, custom engines whenever callers register —
+    # are never invisible here.
+    if name == "BACKENDS":
+        return engines.available()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class KMeansParams(NamedTuple):
     max_iters: int = 300
     tol: float = 1e-6             # paper: "until centroids stop moving"
-    backend: str = "jnp"          # 'jnp' | 'pallas' | 'fused' | 'resident'
+    backend: str = "jnp"          # any name in engines.available():
+                                  # 'jnp'|'pallas'|'fused'|'resident'|'tuned'
     reseed_empty: bool = False    # re-seed empty clusters at farthest points
 
 

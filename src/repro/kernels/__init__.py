@@ -1,10 +1,21 @@
 """Pallas TPU kernels for the k-means hot-spots, behind the LloydEngine
-registry.
+registry — with kernel geometry owned by one subsystem.
 
-Backend selection is no longer string-dispatch scattered across core/ — every
-backend is a :class:`~repro.kernels.engine.LloydEngine` registered by name in
-``engine.py``; ``KMeansParams.backend`` / ``IPKMeansConfig.with_backend`` pick
-one and the solvers call ``engine.step`` / ``engine.solve``:
+**Geometry** (``specs.py`` / ``tuning.py``): every kernel launch takes a
+frozen :class:`~repro.kernels.specs.KernelSpec` (block_n, block_k, on-chip
+acc dtype, interpret flag) instead of loose ints; the module defaults live
+in ``specs.py`` — no kernel file carries its own block constants.  What the
+chip affords is a :class:`~repro.kernels.specs.DeviceProfile` (per-core VMEM
+x double-buffering share, looked up from ``jax.Device.device_kind``, env
+override ``REPRO_VMEM_BUDGET``): the resident engine's feasibility guard and
+the tuner's candidate pruning both budget against it.  Specs reach kernels
+through the engine protocol's ``resolve_spec(points, centroids)`` hook — the
+base returns ``None`` (defaults); the ``tuned`` engine returns the winner
+recorded by the offline sweep (``python -m repro.launch.autotune``) in the
+JSON cache under ``experiments/tuning/``.
+
+**Engines** (``engine.py``; ``KMeansParams.backend`` /
+``IPKMeansConfig.with_backend`` pick one by name):
 
   * ``jnp``      — pure-jnp reference (``ref.py``).  Ground truth for every
     kernel test, and the default on hosts without a TPU where wall-clock of
@@ -26,28 +37,35 @@ one and the solvers call ``engine.step`` / ``engine.solve``:
     iteration/convergence state sits in SMEM, and the points stream from HBM
     once per *solve* instead of once per iteration — the paper's
     one-job-instead-of-one-job-per-iteration argument finished at the memory
-    hierarchy.  Only engine that overrides ``engine.solve``; gated by a
-    VMEM-feasibility check with automatic fallback to ``fused`` when
-    (n, d, k) does not fit on-chip.  The preferred TPU engine for the
-    IPKMeans S2 reducers, whose subsets are sized to fit.
+    hierarchy.  Gated by the DeviceProfile VMEM-feasibility check with
+    automatic fallback to ``fused`` when (n, d, k) does not fit on-chip.
+  * ``tuned``    — ``tuning.py``: ``resident`` solve semantics + autotuned
+    kernel geometry.  Its ``resolve_spec`` hook serves the cached
+    per-(device, dtype, shape) winner, falling back to the defaults on a
+    cache miss, so it is always safe to request.  The preferred TPU engine
+    for the IPKMeans S2 reducers once the target shapes have been swept.
 
-CI exercises all four: the kernel-correctness job sweeps ``pallas``,
-``fused`` and ``resident`` in interpret mode against the oracles in
-``ref.py`` (tests/test_kernels.py, tests/test_fused.py, tests/test_engines.py
-— the last adds a hypothesis property test that all registered engines agree
-on (sums, counts, sse)), and the tier-1 gate runs the solvers on the ``jnp``
-engine.  On non-TPU hosts ``ops.py`` transparently falls back to
-``interpret=True``.
+CI exercises all of them: the kernel-correctness job sweeps ``pallas``,
+``fused``, ``resident`` and ``tuned`` in interpret mode against the oracles
+in ``ref.py`` (tests/test_kernels.py, tests/test_fused.py,
+tests/test_engines.py, tests/test_tuning.py — the last covers the cache
+round-trip, spec clamping, and tuned-vs-oracle parity), and an autotune
+smoke job runs a tiny sweep end to end and re-reads the cache it wrote.  On
+non-TPU hosts ``ops.py`` transparently falls back to ``interpret=True``.
 """
-from repro.kernels import engine, ops, ref
+from repro.kernels import engine, ops, ref, specs, tuning
 from repro.kernels.assign import assign_pallas
 from repro.kernels.centroid_update import centroid_update_pallas
 from repro.kernels.engine import LloydEngine, available, get_engine, register
 from repro.kernels.fused import lloyd_step_fused
 from repro.kernels.resident import (lloyd_solve_resident, resident_feasible,
                                     resident_vmem_bytes)
+from repro.kernels.specs import DeviceProfile, KernelSpec, get_profile
+from repro.kernels.tuning import TuningCache, autotune_step, lookup_spec
 
-__all__ = ["engine", "ops", "ref", "assign_pallas", "centroid_update_pallas",
+__all__ = ["engine", "ops", "ref", "specs", "tuning",
+           "assign_pallas", "centroid_update_pallas",
            "lloyd_step_fused", "lloyd_solve_resident", "resident_feasible",
            "resident_vmem_bytes", "LloydEngine", "available", "get_engine",
-           "register"]
+           "register", "DeviceProfile", "KernelSpec", "get_profile",
+           "TuningCache", "autotune_step", "lookup_spec"]

@@ -4,7 +4,7 @@ The assignment step is the FLOP hot-spot every IPKMeans reducer executes
 (n*k*d MACs per Lloyd iteration).  TPU mapping:
 
   * the ``-2 x.cT`` term is a (bn x d) @ (d x bk) matmul on the MXU
-    (``preferred_element_type=f32`` accumulation);
+    (``preferred_element_type`` accumulation in the spec's acc dtype);
   * grid = (n_blocks, k_blocks) with k minor: each x-tile stays resident in
     VMEM while centroid tiles stream past it, carrying a running
     (best_score, best_index) pair in the revisited output block — a flash-
@@ -12,6 +12,11 @@ The assignment step is the FLOP hot-spot every IPKMeans reducer executes
     materialized in HBM;
   * d is zero-padded to the 128-lane boundary (exact for squared-euclidean),
     n and k are padded to block multiples with +inf masking on k.
+
+Block geometry arrives as a :class:`~repro.kernels.specs.KernelSpec`
+(``specs.DEFAULT_SPEC`` when unset; autotuned specs via the ``tuned``
+engine); the historical loose ``block_n``/``block_k`` ints remain as a
+deprecated shim.
 
 ``x-norm`` is row-constant so it cannot change the argmin; the kernel reduces
 ``||c||^2 - 2 x.c`` and the wrapper adds ``||x||^2`` back for the distances.
@@ -24,16 +29,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import specs
+from repro.kernels.specs import KernelSpec
+
 
 def _assign_kernel(x_ref, c_ref, cn_ref, best_ref, idx_ref, *,
-                   block_k: int, k_actual: int):
+                   block_k: int, k_actual: int, acc):
     j = pl.program_id(1)
-    x = x_ref[...].astype(jnp.float32)                    # (bn, d)
-    c = c_ref[...].astype(jnp.float32)                    # (bk, d)
-    cn = cn_ref[...].astype(jnp.float32)                  # (1, bk)
+    x = x_ref[...].astype(acc)                            # (bn, d)
+    c = c_ref[...].astype(acc)                            # (bk, d)
+    cn = cn_ref[...].astype(acc)                          # (1, bk)
 
     # score = ||c||^2 - 2 x.c   (row-constant ||x||^2 omitted)
-    s = cn - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    s = (cn - 2.0 * jnp.dot(x, c.T, preferred_element_type=acc)
+         ).astype(jnp.float32)
     col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(col < k_actual, s, jnp.inf)             # mask padded centroids
 
@@ -54,22 +63,14 @@ def _assign_kernel(x_ref, c_ref, cn_ref, best_ref, idx_ref, *,
         idx_ref[...] = jnp.where(take, local_idx, prev_idx)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
-def assign_pallas(points: jnp.ndarray,
-                  centroids: jnp.ndarray,
-                  *,
-                  block_n: int = 256,
-                  block_k: int = 128,
-                  interpret: bool = False):
-    """(n,d),(k,d) -> labels (n,) i32, min squared distances (n,) f32."""
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _assign_pallas(points: jnp.ndarray,
+                   centroids: jnp.ndarray,
+                   *,
+                   spec: KernelSpec):
     n, d = points.shape
     k = centroids.shape[0]
-
-    bn = min(block_n, max(8, n))
-    bk = min(block_k, max(8, k))
-    n_pad = -(-n // bn) * bn
-    k_pad = -(-k // bk) * bk
-    d_pad = max(-(-d // 128) * 128, 128)
+    bn, bk, n_pad, k_pad, d_pad = spec.tile_shapes(n, d, k)
 
     x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
     c = jnp.zeros((k_pad, d_pad), centroids.dtype).at[:k, :d].set(centroids)
@@ -77,7 +78,8 @@ def assign_pallas(points: jnp.ndarray,
 
     grid = (n_pad // bn, k_pad // bk)
     best, idx = pl.pallas_call(
-        functools.partial(_assign_kernel, block_k=bk, k_actual=k),
+        functools.partial(_assign_kernel, block_k=bk, k_actual=k,
+                          acc=jnp.dtype(spec.acc_dtype)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, d_pad), lambda i, j: (i, 0)),
@@ -92,9 +94,23 @@ def assign_pallas(points: jnp.ndarray,
             jax.ShapeDtypeStruct((n_pad,), jnp.float32),
             jax.ShapeDtypeStruct((n_pad,), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=bool(spec.interpret),
     )(x, c, cn)
 
     x2 = jnp.sum(points.astype(jnp.float32) ** 2, axis=-1)
     mind = jnp.maximum(best[:n] + x2, 0.0)
     return idx[:n], mind
+
+
+def assign_pallas(points: jnp.ndarray,
+                  centroids: jnp.ndarray,
+                  *,
+                  spec: KernelSpec | None = None,
+                  block_n: int | None = None,
+                  block_k: int | None = None,
+                  interpret: bool | None = None):
+    """(n,d),(k,d) -> labels (n,) i32, min squared distances (n,) f32."""
+    spec = specs.coerce(spec, block_n=block_n, block_k=block_k,
+                        interpret=interpret)
+    return _assign_pallas(points, centroids,
+                          spec=spec.with_interpret(bool(spec.interpret)))

@@ -10,6 +10,11 @@ Grid streams n-tiles through VMEM; the (k, d) output block is revisited every
 step and accumulated in place (k is small for k-means, so the whole output
 fits VMEM).  Padded points carry weight 0 and padded labels point at row k
 (sliced off by the wrapper), so no masking branch is needed in the kernel.
+
+Block geometry arrives as a :class:`~repro.kernels.specs.KernelSpec`
+(``specs.UPDATE_DEFAULT_SPEC`` when unset — this kernel's default tile is
+taller, ``block_n=512``, because it has no k-blocking to feed); the loose
+``block_n`` int remains as a deprecated shim.
 """
 from __future__ import annotations
 
@@ -19,19 +24,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import specs
+from repro.kernels.specs import KernelSpec
 
-def _update_kernel(x_ref, lab_ref, w_ref, sums_ref, counts_ref, *, k_pad: int):
+
+def _update_kernel(x_ref, lab_ref, w_ref, sums_ref, counts_ref, *,
+                   k_pad: int, acc):
     i = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)                     # (bn, d)
+    x = x_ref[...].astype(acc)                             # (bn, d)
     lab = lab_ref[...]                                     # (bn,)
-    w = w_ref[...].astype(jnp.float32)                     # (bn,)
+    w = w_ref[...].astype(acc)                             # (bn,)
 
     onehot = (lab[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (lab.shape[0], k_pad), 1)).astype(jnp.float32)
+        jnp.int32, (lab.shape[0], k_pad), 1)).astype(acc)
     onehot = onehot * w[:, None]
 
-    local_sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
-    local_counts = jnp.sum(onehot, axis=0)[None, :]        # (1, k_pad)
+    local_sums = jnp.dot(onehot.T, x,
+                         preferred_element_type=acc).astype(jnp.float32)
+    local_counts = jnp.sum(onehot.astype(jnp.float32), axis=0)[None, :]
 
     @pl.when(i == 0)
     def _init():
@@ -44,20 +54,15 @@ def _update_kernel(x_ref, lab_ref, w_ref, sums_ref, counts_ref, *, k_pad: int):
         counts_ref[...] += local_counts
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
-def centroid_update_pallas(points: jnp.ndarray,
-                           labels: jnp.ndarray,
-                           weights: jnp.ndarray,
-                           k: int,
-                           *,
-                           block_n: int = 512,
-                           interpret: bool = False):
-    """(n,d),(n,),(n,) -> sums (k,d) f32, counts (k,) f32."""
+@functools.partial(jax.jit, static_argnames=("k", "spec"))
+def _centroid_update_pallas(points: jnp.ndarray,
+                            labels: jnp.ndarray,
+                            weights: jnp.ndarray,
+                            k: int,
+                            *,
+                            spec: KernelSpec):
     n, d = points.shape
-    bn = min(block_n, max(8, n))
-    n_pad = -(-n // bn) * bn
-    d_pad = max(-(-d // 128) * 128, 128)
-    k_pad = max(-(-(k + 1) // 8) * 8, 8)    # +1 trash row for padded points
+    bn, n_pad, k_pad, d_pad = spec.update_tile_shapes(n, d, k)
 
     x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
     lab = jnp.full((n_pad,), k, jnp.int32).at[:n].set(labels.astype(jnp.int32))
@@ -65,7 +70,8 @@ def centroid_update_pallas(points: jnp.ndarray,
 
     grid = (n_pad // bn,)
     sums, counts = pl.pallas_call(
-        functools.partial(_update_kernel, k_pad=k_pad),
+        functools.partial(_update_kernel, k_pad=k_pad,
+                          acc=jnp.dtype(spec.acc_dtype)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, d_pad), lambda i: (i, 0)),
@@ -80,7 +86,23 @@ def centroid_update_pallas(points: jnp.ndarray,
             jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
             jax.ShapeDtypeStruct((1, k_pad), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=bool(spec.interpret),
     )(x, lab, w)
 
     return sums[:k, :d], counts[0, :k]
+
+
+def centroid_update_pallas(points: jnp.ndarray,
+                           labels: jnp.ndarray,
+                           weights: jnp.ndarray,
+                           k: int,
+                           *,
+                           spec: KernelSpec | None = None,
+                           block_n: int | None = None,
+                           interpret: bool | None = None):
+    """(n,d),(n,),(n,) -> sums (k,d) f32, counts (k,) f32."""
+    spec = specs.coerce(spec, block_n=block_n, interpret=interpret,
+                        default=specs.UPDATE_DEFAULT_SPEC)
+    return _centroid_update_pallas(
+        points, labels, weights, k,
+        spec=spec.with_interpret(bool(spec.interpret)))

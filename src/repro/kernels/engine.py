@@ -17,9 +17,16 @@ protocol:
     ``step`` from a host-side ``lax.while_loop``; engines that own their
     convergence loop (``resident``) override it, which is how the loop moves
     from core/ down into the kernel layer.
+  * ``resolve_spec(points, centroids) -> KernelSpec | None`` — the kernel-
+    geometry hook.  EVERY engine's kernel launches route their block
+    geometry through this method, so tuned geometry is one override away
+    for any engine: the base returns ``None`` (each kernel's module
+    default), the ``tuned`` engine (``kernels/tuning.py``) returns the
+    autotuning cache's winner for the launch shape.
 
-Engines registered here: ``jnp`` | ``pallas`` | ``fused`` | ``resident`` —
-see ``kernels/__init__`` for when to pick each.
+Engines registered: ``jnp`` | ``pallas`` | ``fused`` | ``resident`` here,
+plus ``tuned`` from ``kernels/tuning.py`` — see ``kernels/__init__`` for
+when to pick each.
 """
 from __future__ import annotations
 
@@ -99,6 +106,17 @@ class LloydEngine:
         """Nearest centroids -> (labels (n,) i32, min sq dists (n,) f32)."""
         raise NotImplementedError
 
+    def resolve_spec(self, points, centroids):
+        """Kernel geometry for this launch shape -> KernelSpec or None.
+
+        ``None`` means "each kernel's module default" (``specs.DEFAULT_SPEC``
+        and friends).  Runs at trace time on static shape/dtype info only, so
+        overrides may do host-side work (cache lookups, table walks) freely.
+        The ``tuned`` engine overrides this with the autotuning-cache lookup;
+        pure-jnp engines never consult it.
+        """
+        return None
+
     def sse(self, points, centroids, weights=None):
         """Total weighted SSE of ``centroids`` over the subset.
 
@@ -166,13 +184,17 @@ class PallasEngine(LloydEngine):
         from repro.kernels import ops
         k = centroids.shape[0]
         w = _as_weights(points, weights)
-        labels, mind = ops.assign(points, centroids)
-        sums, counts = ops.centroid_update(points, labels, w, k)
+        spec = self.resolve_spec(points, centroids)
+        labels, mind = ops.assign(points, centroids, spec=spec)
+        # the update kernel keeps its own (taller) default tile when the
+        # hook declines; a concrete spec applies to both launches
+        sums, counts = ops.centroid_update(points, labels, w, k, spec=spec)
         return sums, counts, jnp.sum(w * mind)
 
     def assign(self, points, centroids):
         from repro.kernels import ops
-        return ops.assign(points, centroids)
+        return ops.assign(points, centroids,
+                          spec=self.resolve_spec(points, centroids))
 
 
 class FusedEngine(LloydEngine):
@@ -183,13 +205,15 @@ class FusedEngine(LloydEngine):
 
     def step(self, points, centroids, weights=None):
         from repro.kernels import ops
-        return ops.lloyd_step_fused(points, centroids, weights)
+        return ops.lloyd_step_fused(points, centroids, weights,
+                                    spec=self.resolve_spec(points, centroids))
 
     def assign(self, points, centroids):
         # the fused kernel's optional labels output: still one sweep, no
         # second kernel and no (n,) HBM round-trip mid-pass
         from repro.kernels import ops
-        return ops.lloyd_assign_fused(points, centroids)
+        return ops.lloyd_assign_fused(
+            points, centroids, spec=self.resolve_spec(points, centroids))
 
     def sse(self, points, centroids, weights=None):
         # step IS one sweep here — its sse output is the cheapest scoring
@@ -202,8 +226,9 @@ class ResidentEngine(FusedEngine):
     instead of once per iteration.  Per-step behaviour (``step``/``assign``/
     ``sse``) is inherited from the fused engine; only the solve moves
     on-chip.  Falls back to the fused per-step loop when (n, d, k) does not
-    fit VMEM, or when empty-cluster reseeding is on (reseeding needs the
-    host-side loop's per-iteration assign pass)."""
+    fit the local chip's DeviceProfile VMEM budget (``resident_feasible``),
+    or when empty-cluster reseeding is on (reseeding needs the host-side
+    loop's per-iteration assign pass)."""
 
     name = "resident"
 

@@ -21,6 +21,11 @@ TPU mapping (grid = ``(n_blocks, k_blocks)``, k minor):
     ``sums (k, d)``, ``counts (k,)`` and shard SSE into revisited output
     blocks that stay resident in VMEM for the whole sweep.
 
+Block geometry arrives as a :class:`~repro.kernels.specs.KernelSpec`
+(``specs.DEFAULT_SPEC`` when unset; the ``tuned`` engine feeds autotuned
+winners through the same argument) — the historical loose ``block_n``/
+``block_k`` ints remain as a deprecated shim.
+
 Padding follows the other kernels: d zero-padded to the 128-lane boundary
 (exact for squared euclidean), n/k padded to block multiples; padded
 centroids are masked to +inf scores, padded points carry weight 0, so neither
@@ -35,25 +40,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import specs
+from repro.kernels.specs import KernelSpec
+
 
 def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
                   sums_ref, counts_ref, sse_ref,
                   *rest,
                   block_k: int, k_actual: int, last_j: int,
-                  with_labels: bool):
+                  with_labels: bool, acc):
     if with_labels:
         labels_ref, mind_ref, best_scr, idx_scr = rest
     else:
         best_scr, idx_scr = rest
     i = pl.program_id(0)
     j = pl.program_id(1)
-    x = x_ref[...].astype(jnp.float32)                    # (bn, d)
-    c = c_ref[...].astype(jnp.float32)                    # (bk, d)
-    cn = cn_ref[...].astype(jnp.float32)                  # (1, bk)
+    x = x_ref[...].astype(acc)                            # (bn, d)
+    c = c_ref[...].astype(acc)                            # (bk, d)
+    cn = cn_ref[...].astype(acc)                          # (1, bk)
 
     # --- phase 1: online argmin over centroid tiles (same as assign.py) ---
     # score = ||c||^2 - 2 x.c   (row-constant ||x||^2 omitted)
-    s = cn - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    s = (cn - 2.0 * jnp.dot(x, c.T, preferred_element_type=acc)
+         ).astype(jnp.float32)
     col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(col < k_actual, s, jnp.inf)             # mask padded centroids
 
@@ -78,19 +87,21 @@ def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
     # centroid_update.py) ---
     @pl.when(j == last_j)
     def _flush():
-        w = w_ref[...].astype(jnp.float32)                # (bn,)
+        w = w_ref[...].astype(acc)                        # (bn,)
         idx = idx_scr[...]
         k_pad = sums_ref.shape[0]
         onehot = (idx[:, None] == jax.lax.broadcasted_iota(
-            jnp.int32, (idx.shape[0], k_pad), 1)).astype(jnp.float32)
+            jnp.int32, (idx.shape[0], k_pad), 1)).astype(acc)
         onehot = onehot * w[:, None]
 
-        local_sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
-        local_counts = jnp.sum(onehot, axis=0)[None, :]   # (1, k_pad)
+        local_sums = jnp.dot(onehot.T, x,
+                             preferred_element_type=acc).astype(jnp.float32)
+        local_counts = jnp.sum(onehot.astype(jnp.float32), axis=0)[None, :]
         # add the row-constant ||x||^2 back to recover true distances
-        x2 = jnp.sum(x * x, axis=1)
+        xf = x.astype(jnp.float32)
+        x2 = jnp.sum(xf * xf, axis=1)
         mind = jnp.maximum(best_scr[...] + x2, 0.0)
-        local_sse = jnp.sum(w * mind)[None, None]         # (1, 1)
+        local_sse = jnp.sum(w.astype(jnp.float32) * mind)[None, None]  # (1, 1)
 
         if with_labels:                                   # final-pass labels out
             labels_ref[...] = idx
@@ -110,49 +121,32 @@ def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
 
 
 def fused_tile_shapes(n: int, d: int, k: int,
-                      block_n: int = 256, block_k: int = 128):
+                      block_n: int | None = None,
+                      block_k: int | None = None,
+                      spec: KernelSpec | None = None):
     """The kernel's tiling policy: (bn, bk, n_pad, k_pad, d_pad).
 
-    Single source of truth — the wrapper below and the VMEM-footprint
-    accounting in benchmarks/kernel_bench.py both read it, so the reported
-    working sets always match what the kernel actually allocates."""
-    bn = min(block_n, max(8, n))
-    bk = min(block_k, max(8, k))
-    n_pad = -(-n // bn) * bn
-    k_pad = -(-k // bk) * bk
-    d_pad = max(-(-d // 128) * 128, 128)
-    return bn, bk, n_pad, k_pad, d_pad
+    Delegates to :meth:`KernelSpec.tile_shapes` — the single source of truth
+    the wrapper below, the tuner's VMEM pricing, and the footprint accounting
+    in benchmarks/kernel_bench.py all read, so the reported working sets
+    always match what the kernel actually allocates."""
+    if spec is None:
+        spec = specs.DEFAULT_SPEC.replace(
+            **{f: v for f, v in (("block_n", block_n), ("block_k", block_k))
+               if v is not None})
+    return spec.tile_shapes(n, d, k)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_n", "block_k", "interpret",
-                                    "return_labels"))
-def lloyd_step_fused(points: jnp.ndarray,
-                     centroids: jnp.ndarray,
-                     weights: jnp.ndarray | None = None,
-                     *,
-                     block_n: int = 256,
-                     block_k: int = 128,
-                     interpret: bool = False,
-                     return_labels: bool = False):
-    """One fused Lloyd pass: (n,d),(k,d)[,(n,)] ->
-    sums (k,d) f32, counts (k,) f32, sse () f32.
-
-    ``weights`` defaults to all-ones; pass a 0/1 mask (or arbitrary
-    non-negative weights) to ignore padded rows.  Callers divide
-    ``sums / counts`` (guarding empty clusters) to get the new centroids —
-    kept outside the kernel so the division policy stays in one place
-    (``ref.divide_or_keep``).
-
-    With ``return_labels=True`` the flush phase additionally streams out the
-    finished per-point ``labels (n,) i32`` and ``mind (n,) f32`` — meant for
-    the *final* iteration only (cluster dumps, solver final statistics), so
-    callers get the assignment from the same single sweep instead of a
-    second two-kernel assign pass.  Returns a 5-tuple in that case.
-    """
+@functools.partial(jax.jit, static_argnames=("spec", "return_labels"))
+def _lloyd_step_fused(points: jnp.ndarray,
+                      centroids: jnp.ndarray,
+                      weights: jnp.ndarray | None,
+                      *,
+                      spec: KernelSpec,
+                      return_labels: bool):
     n, d = points.shape
     k = centroids.shape[0]
-    bn, bk, n_pad, k_pad, d_pad = fused_tile_shapes(n, d, k, block_n, block_k)
+    bn, bk, n_pad, k_pad, d_pad = spec.tile_shapes(n, d, k)
 
     x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
     c = jnp.zeros((k_pad, d_pad), centroids.dtype).at[:k, :d].set(centroids)
@@ -179,7 +173,8 @@ def lloyd_step_fused(points: jnp.ndarray,
                       jax.ShapeDtypeStruct((n_pad,), jnp.float32)]
     out = pl.pallas_call(
         functools.partial(_fused_kernel, block_k=bk, k_actual=k,
-                          last_j=grid[1] - 1, with_labels=return_labels),
+                          last_j=grid[1] - 1, with_labels=return_labels,
+                          acc=jnp.dtype(spec.acc_dtype)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, d_pad), lambda i, j: (i, 0)),
@@ -193,7 +188,7 @@ def lloyd_step_fused(points: jnp.ndarray,
             pltpu.VMEM((bn,), jnp.float32),               # running best score
             pltpu.VMEM((bn,), jnp.int32),                 # running best index
         ],
-        interpret=interpret,
+        interpret=bool(spec.interpret),
     )(x, c, cn, w)
 
     sums, counts, sse = out[:3]
@@ -202,3 +197,34 @@ def lloyd_step_fused(points: jnp.ndarray,
         return (sums[:k, :d], counts[0, :k], sse[0, 0],
                 labels[:n], mind[:n])
     return sums[:k, :d], counts[0, :k], sse[0, 0]
+
+
+def lloyd_step_fused(points: jnp.ndarray,
+                     centroids: jnp.ndarray,
+                     weights: jnp.ndarray | None = None,
+                     *,
+                     spec: KernelSpec | None = None,
+                     block_n: int | None = None,
+                     block_k: int | None = None,
+                     interpret: bool | None = None,
+                     return_labels: bool = False):
+    """One fused Lloyd pass: (n,d),(k,d)[,(n,)] ->
+    sums (k,d) f32, counts (k,) f32, sse () f32.
+
+    ``weights`` defaults to all-ones; pass a 0/1 mask (or arbitrary
+    non-negative weights) to ignore padded rows.  Callers divide
+    ``sums / counts`` (guarding empty clusters) to get the new centroids —
+    kept outside the kernel so the division policy stays in one place
+    (``ref.divide_or_keep``).
+
+    With ``return_labels=True`` the flush phase additionally streams out the
+    finished per-point ``labels (n,) i32`` and ``mind (n,) f32`` — meant for
+    the *final* iteration only (cluster dumps, solver final statistics), so
+    callers get the assignment from the same single sweep instead of a
+    second two-kernel assign pass.  Returns a 5-tuple in that case.
+    """
+    spec = specs.coerce(spec, block_n=block_n, block_k=block_k,
+                        interpret=interpret)
+    return _lloyd_step_fused(points, centroids, weights,
+                             spec=spec.with_interpret(bool(spec.interpret)),
+                             return_labels=return_labels)

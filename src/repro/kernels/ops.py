@@ -3,71 +3,91 @@
 On the TPU target the kernels compile natively; on this CPU container they
 execute via ``interpret=True`` (Pallas's Python interpreter), which is what
 the correctness sweeps in tests/test_kernels.py exercise against ref.py.
+
+Geometry: every wrapper takes an optional :class:`~repro.kernels.specs
+.KernelSpec` (``spec=``).  ``None`` means the module default for that kernel
+(``specs.DEFAULT_SPEC`` / ``specs.UPDATE_DEFAULT_SPEC``); the engine layer
+passes whatever its ``resolve_spec`` hook returns, which is how autotuned
+winners reach the kernels.  The pre-spec loose ``block_n``/``block_k`` ints
+are still accepted as a deprecated shim.  A spec whose ``interpret`` is
+``None`` picks up this module's policy: compiled on TPU, interpreted
+elsewhere.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.kernels import ref, specs
 from repro.kernels.assign import assign_pallas
 from repro.kernels.centroid_update import centroid_update_pallas
 from repro.kernels.fused import lloyd_step_fused as _lloyd_step_fused
 from repro.kernels.resident import lloyd_solve_resident as _lloyd_solve_resident
-from repro.kernels import ref
+from repro.kernels.specs import KernelSpec
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def assign(points, centroids, *, block_n: int = 256, block_k: int = 128,
+def _resolve(spec, block_n, block_k, interpret, default) -> KernelSpec:
+    spec = specs.coerce(spec, block_n=block_n, block_k=block_k,
+                        interpret=interpret, default=default)
+    if spec.interpret is None:
+        spec = spec.with_interpret(_interpret_default())
+    return spec
+
+
+def assign(points, centroids, *, spec: KernelSpec | None = None,
+           block_n: int | None = None, block_k: int | None = None,
            interpret: bool | None = None):
     """Nearest-centroid labels + min squared distances via the Pallas kernel."""
-    if interpret is None:
-        interpret = _interpret_default()
-    return assign_pallas(points, centroids, block_n=block_n,
-                         block_k=block_k, interpret=interpret)
+    spec = _resolve(spec, block_n, block_k, interpret, specs.DEFAULT_SPEC)
+    return assign_pallas(points, centroids, spec=spec)
 
 
-def centroid_update(points, labels, weights, k: int, *, block_n: int = 512,
+def centroid_update(points, labels, weights, k: int, *,
+                    spec: KernelSpec | None = None,
+                    block_n: int | None = None,
                     interpret: bool | None = None):
     """Weighted per-cluster (sums, counts) via the Pallas kernel."""
-    if interpret is None:
-        interpret = _interpret_default()
-    return centroid_update_pallas(points, labels, weights, k,
-                                  block_n=block_n, interpret=interpret)
+    spec = _resolve(spec, block_n, None, interpret,
+                    specs.UPDATE_DEFAULT_SPEC)
+    return centroid_update_pallas(points, labels, weights, k, spec=spec)
 
 
-def lloyd_step_fused(points, centroids, weights=None, *, block_n: int = 256,
-                     block_k: int = 128, interpret: bool | None = None):
+def lloyd_step_fused(points, centroids, weights=None, *,
+                     spec: KernelSpec | None = None,
+                     block_n: int | None = None, block_k: int | None = None,
+                     interpret: bool | None = None):
     """One fused Lloyd pass -> (sums (k,d), counts (k,), sse ()) — the
     single-sweep kernel; points are read from HBM once per iteration."""
-    if interpret is None:
-        interpret = _interpret_default()
-    return _lloyd_step_fused(points, centroids, weights,
-                             block_n=block_n, block_k=block_k,
-                             interpret=interpret)
+    spec = _resolve(spec, block_n, block_k, interpret, specs.DEFAULT_SPEC)
+    return _lloyd_step_fused(points, centroids, weights, spec=spec)
 
 
-def lloyd_assign_fused(points, centroids, *, block_n: int = 256,
-                       block_k: int = 128, interpret: bool | None = None):
+def lloyd_assign_fused(points, centroids, *,
+                       spec: KernelSpec | None = None,
+                       block_n: int | None = None, block_k: int | None = None,
+                       interpret: bool | None = None):
     """Labels + min squared distances from the fused kernel's final-pass
     labels output — one sweep, no second kernel (for cluster dumps and
     solver final statistics)."""
-    if interpret is None:
-        interpret = _interpret_default()
+    spec = _resolve(spec, block_n, block_k, interpret, specs.DEFAULT_SPEC)
     _, _, _, labels, mind = _lloyd_step_fused(
-        points, centroids, None, block_n=block_n, block_k=block_k,
-        interpret=interpret, return_labels=True)
+        points, centroids, None, spec=spec, return_labels=True)
     return labels, mind
 
 
 def lloyd_solve_resident(points, centroids, weights=None, *,
                          max_iters: int = 300, tol: float = 1e-6,
+                         spec: KernelSpec | None = None,
                          interpret: bool | None = None):
     """Whole Lloyd solve in ONE kernel launch (VMEM-resident loop) ->
     (centroids (k,d), sse (), iters () i32, converged () bool).  Points
     stream from HBM once per solve; see kernels/resident.py for the
-    feasibility contract."""
+    feasibility contract (budget from the chip's DeviceProfile)."""
+    if interpret is None:
+        interpret = (spec.interpret if spec is not None else None)
     if interpret is None:
         interpret = _interpret_default()
     return _lloyd_solve_resident(points, centroids, weights,

@@ -30,7 +30,11 @@ Feasibility: the working set is ~``n*d + 2*n*k + 3*k*d`` floats (the (n, k)
 score and one-hot matrices are materialized on-chip), so
 :func:`resident_feasible` gates the launch and callers fall back to the
 per-step fused engine when the subset does not fit — see
-``kernels/engine.py``.
+``kernels/engine.py``.  The budget it gates against is no longer a module
+constant: it comes from the :class:`~repro.kernels.specs.DeviceProfile` of
+the local chip (VMEM size / double-buffering share per ``device_kind``,
+conservative 12 MiB default for unknown hosts, ``REPRO_VMEM_BUDGET`` env
+override for CI determinism).
 """
 from __future__ import annotations
 
@@ -41,11 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-F32 = 4  # bytes
-
-# VMEM per TensorCore the feasibility guard budgets against.  Real chips have
-# ~16 MiB; leave headroom for double-buffered input DMA and compiler spills.
-VMEM_BUDGET_BYTES = 12 * 2 ** 20
+from repro.kernels import specs
+from repro.kernels.specs import F32, KernelSpec
 
 
 def resident_tile_shapes(n: int, d: int, k: int):
@@ -71,13 +72,20 @@ def resident_vmem_bytes(n: int, d: int, k: int) -> int:
 
 
 def resident_feasible(n: int, d: int, k: int,
-                      budget: int = VMEM_BUDGET_BYTES) -> bool:
-    """Can the whole solve stay resident in VMEM for this (n, d, k)?"""
+                      budget: int | None = None) -> bool:
+    """Can the whole solve stay resident in VMEM for this (n, d, k)?
+
+    ``budget`` defaults to the local chip's :class:`DeviceProfile` working-
+    set budget (``specs.get_profile().budget_bytes``) — the guard matches
+    the hardware it runs on, not a hardcoded constant.
+    """
+    if budget is None:
+        budget = specs.get_profile().budget_bytes
     return resident_vmem_bytes(n, d, k) <= budget
 
 
 def max_resident_points(d: int, k: int,
-                        budget: int = VMEM_BUDGET_BYTES) -> int:
+                        budget: int | None = None) -> int:
     """Largest subset size n that keeps a (d, k) solve VMEM-resident.
 
     This is the sizing knob for IPKMeans S2: the paper's answer to a subset
@@ -85,6 +93,8 @@ def max_resident_points(d: int, k: int,
     partition until ``subset_capacity(n) <= max_resident_points(d, k)`` and
     every reducer becomes a single kernel launch.
     """
+    if budget is None:
+        budget = specs.get_profile().budget_bytes
     _, k_pad, d_pad = resident_tile_shapes(8, d, k)
     fixed = (3 * k_pad * d_pad + 2 * k_pad) * F32
     per_n = (d_pad + 2 * k_pad + 4) * F32
@@ -160,22 +170,13 @@ def _resident_kernel(x_ref, c0_ref, w_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("max_iters", "tol", "interpret"))
-def lloyd_solve_resident(points: jnp.ndarray,
-                         centroids: jnp.ndarray,
-                         weights: jnp.ndarray | None = None,
-                         *,
-                         max_iters: int = 300,
-                         tol: float = 1e-6,
-                         interpret: bool = False):
-    """Full Lloyd solve in ONE kernel launch: (n,d),(k,d)[,(n,)] ->
-    (centroids (k,d), sse (), iters () i32, converged () bool).
-
-    Semantics match ``core.kmeans``'s host loop exactly: iterate while
-    ``iters < max_iters and shift > tol`` with keep-old-centroid handling of
-    empty clusters, then score the final centroids.  Callers MUST check
-    :func:`resident_feasible` first — the engine layer does, and falls back
-    to the per-step fused path when the subset does not fit VMEM.
-    """
+def _lloyd_solve_resident(points: jnp.ndarray,
+                          centroids: jnp.ndarray,
+                          weights: jnp.ndarray | None = None,
+                          *,
+                          max_iters: int = 300,
+                          tol: float = 1e-6,
+                          interpret: bool = False):
     n, d = points.shape
     k = centroids.shape[0]
     n_pad, k_pad, d_pad = resident_tile_shapes(n, d, k)
@@ -203,3 +204,33 @@ def lloyd_solve_resident(points: jnp.ndarray,
 
     return (c_out[:k, :d].astype(centroids.dtype), sse[0, 0],
             iters[0, 0], conv[0, 0].astype(bool))
+
+
+def lloyd_solve_resident(points: jnp.ndarray,
+                         centroids: jnp.ndarray,
+                         weights: jnp.ndarray | None = None,
+                         *,
+                         max_iters: int = 300,
+                         tol: float = 1e-6,
+                         interpret: bool | None = None,
+                         spec: KernelSpec | None = None):
+    """Full Lloyd solve in ONE kernel launch: (n,d),(k,d)[,(n,)] ->
+    (centroids (k,d), sse (), iters () i32, converged () bool).
+
+    Semantics match ``core.kmeans``'s host loop exactly: iterate while
+    ``iters < max_iters and shift > tol`` with keep-old-centroid handling of
+    empty clusters, then score the final centroids.  Callers MUST check
+    :func:`resident_feasible` first — the engine layer does, and falls back
+    to the per-step fused path when the subset does not fit VMEM.
+
+    This kernel has no block geometry (the whole subset is one block), so of
+    a :class:`KernelSpec` only the interpret flag applies; on-chip arithmetic
+    is fixed f32 because the carry-dtype round-trip defines the fallback
+    parity contract.
+    """
+    if interpret is None:
+        interpret = (spec.interpret if spec is not None
+                     and spec.interpret is not None else False)
+    return _lloyd_solve_resident(points, centroids, weights,
+                                 max_iters=max_iters, tol=tol,
+                                 interpret=bool(interpret))

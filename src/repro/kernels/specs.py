@@ -1,0 +1,273 @@
+"""Kernel geometry ownership: :class:`KernelSpec` + :class:`DeviceProfile`.
+
+Every Pallas kernel in this package tiles the same way — an ``(n, d)`` point
+stream against a ``(k, d)`` centroid set — and until this module existed each
+kernel file froze its own copy of the block geometry (``block_n=256`` /
+``block_k=128`` module defaults) while the resident engine guessed a 12 MiB
+VMEM budget.  The paper's speedup rests on each reducer running as fast as
+the hardware allows; the TPU analogue of that claim is *kernel geometry*, so
+geometry now has exactly one owner:
+
+  * :class:`KernelSpec` — the frozen, hashable tile policy (``block_n``,
+    ``block_k``, accumulator dtype, interpret flag) that every kernel wrapper
+    takes instead of loose ints.  ``tile_shapes`` / ``update_tile_shapes``
+    are the clamping+padding rules the kernels actually allocate with, and
+    the ``*_vmem_bytes`` estimators price a candidate geometry *before*
+    launching it — which is how the tuner (``kernels/tuning.py``) prunes its
+    sweep grid.
+  * :class:`DeviceProfile` — what the chip gives us: per-core VMEM and the
+    double-buffering share the compiler claims for input DMA.  Looked up
+    from ``jax.Device.device_kind`` with a conservative default for unknown
+    chips (16 MiB / 1.33x == the historical 12 MiB budget, so CPU CI keeps
+    its exact pre-profile behaviour).  ``REPRO_VMEM_BUDGET`` overrides the
+    budget byte-for-byte for CI determinism and odd deployments.
+
+The per-(device, dtype, shape) *winning* specs live in a JSON cache under
+``experiments/tuning/`` — see ``kernels/tuning.py`` for the sweep and the
+``tuned`` engine that consumes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+
+F32 = 4                      # bytes per float32 — shared by every byte model
+MiB = 2 ** 20
+
+ENV_VMEM_BUDGET = "REPRO_VMEM_BUDGET"
+
+_ACC_DTYPES = ("float32", "bfloat16")
+
+
+# --------------------------------------------------------------- KernelSpec --
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One kernel launch geometry.  Frozen and hashable: it is a jit static
+    argument, a tuning-cache value, and a dict key — never mutate, ``replace``.
+
+    ``acc_dtype`` is the on-chip compute dtype: tiles are cast to it before
+    the MXU dots (``float32`` reproduces the historical kernels bit-for-bit;
+    ``bfloat16`` halves the tile working set at reduced score precision —
+    the cross-cluster argmin is usually insensitive, which is why the tuner
+    may pick it).  Partial sums always accumulate into float32 outputs.
+
+    ``interpret=None`` means "caller's policy" (``ops.py`` resolves it to
+    compiled-on-TPU / interpreted-elsewhere); a concrete bool pins it.
+    """
+
+    block_n: int = 256
+    block_k: int = 128
+    acc_dtype: str = "float32"
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        for name in ("block_n", "block_k"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 8 or v % 8:
+                raise ValueError(
+                    f"{name}={v!r}: block sizes must be ints, >= 8 and "
+                    f"sublane-aligned (multiples of 8)")
+        if self.acc_dtype not in _ACC_DTYPES:
+            raise ValueError(f"acc_dtype={self.acc_dtype!r}: "
+                             f"expected one of {_ACC_DTYPES}")
+
+    def replace(self, **kw) -> "KernelSpec":
+        return dataclasses.replace(self, **kw)
+
+    def with_interpret(self, interpret: bool) -> "KernelSpec":
+        if self.interpret == interpret:
+            return self
+        return dataclasses.replace(self, interpret=interpret)
+
+    # ---- the tiling policy (single source of truth for every kernel) ----
+
+    def tile_shapes(self, n: int, d: int, k: int):
+        """(bn, bk, n_pad, k_pad, d_pad) for the (n x k)-gridded kernels
+        (assign, fused): blocks clamp to the problem, n/k pad to block
+        multiples, d zero-pads to the 128-lane boundary."""
+        bn = min(self.block_n, max(8, n))
+        bk = min(self.block_k, max(8, k))
+        n_pad = -(-n // bn) * bn
+        k_pad = -(-k // bk) * bk
+        d_pad = max(-(-d // 128) * 128, 128)
+        return bn, bk, n_pad, k_pad, d_pad
+
+    def update_tile_shapes(self, n: int, d: int, k: int):
+        """(bn, n_pad, k_pad, d_pad) for the n-gridded segment-sum kernel
+        (centroid_update): no k blocking — the (k, d) output block stays
+        resident — and k pads to 8 sublanes plus one trash row."""
+        bn = min(self.block_n, max(8, n))
+        n_pad = -(-n // bn) * bn
+        d_pad = max(-(-d // 128) * 128, 128)
+        k_pad = max(-(-(k + 1) // 8) * 8, 8)     # +1 trash row, padded points
+        return bn, n_pad, k_pad, d_pad
+
+    @property
+    def acc_bytes(self) -> int:
+        return 2 if self.acc_dtype == "bfloat16" else 4
+
+    # ---- VMEM pricing (what the tuner prunes with) ----
+
+    def assign_vmem_bytes(self, n: int, d: int, k: int) -> int:
+        """Per-grid-step working set of the assign kernel: x/c/cn tiles in
+        acc dtype + the f32 (best, idx) output pair."""
+        bn, bk, _, _, d_pad = self.tile_shapes(n, d, k)
+        return ((bn * d_pad + bk * d_pad + bk) * self.acc_bytes
+                + 2 * bn * F32)
+
+    def fused_vmem_bytes(self, n: int, d: int, k: int) -> int:
+        """Per-grid-step working set of the fused kernel: input tiles in acc
+        dtype + the VMEM-resident f32 (sums, counts, sse) output blocks and
+        the (best, idx) argmin scratch."""
+        bn, bk, _, k_pad, d_pad = self.tile_shapes(n, d, k)
+        return ((bn * d_pad + bk * d_pad + bk + bn) * self.acc_bytes
+                + (k_pad * d_pad + k_pad + 1 + 2 * bn) * F32)
+
+    def update_vmem_bytes(self, n: int, d: int, k: int) -> int:
+        """Per-grid-step working set of the segment-sum kernel."""
+        bn, _, k_pad, d_pad = self.update_tile_shapes(n, d, k)
+        return ((bn * d_pad + 2 * bn + bn * k_pad) * self.acc_bytes
+                + (k_pad * d_pad + k_pad) * F32)
+
+    # ---- cache (de)serialization ----
+
+    def to_json(self) -> dict:
+        return {"block_n": self.block_n, "block_k": self.block_k,
+                "acc_dtype": self.acc_dtype}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "KernelSpec":
+        return cls(block_n=int(obj["block_n"]), block_k=int(obj["block_k"]),
+                   acc_dtype=str(obj.get("acc_dtype", "float32")))
+
+
+# module defaults — the historical per-kernel constants, now in ONE place
+DEFAULT_SPEC = KernelSpec(block_n=256, block_k=128)
+UPDATE_DEFAULT_SPEC = KernelSpec(block_n=512, block_k=128)
+
+
+def coerce(spec: KernelSpec | None = None, *,
+           block_n: int | None = None,
+           block_k: int | None = None,
+           interpret: bool | None = None,
+           default: KernelSpec = DEFAULT_SPEC) -> KernelSpec:
+    """Resolve a spec from the new-style ``spec=`` argument and/or the
+    deprecated loose-int kwargs (the pre-spec kernel signatures).
+
+    Passing ``block_n``/``block_k`` without a spec still works but warns:
+    geometry should arrive as a :class:`KernelSpec` so the tuner's winners
+    flow through unmodified.  Passing both is an error (ambiguous).
+    """
+    if spec is not None:
+        if block_n is not None or block_k is not None:
+            raise TypeError("pass either spec= or the deprecated "
+                            "block_n=/block_k= ints, not both")
+        out = spec
+    elif block_n is not None or block_k is not None:
+        warnings.warn(
+            "loose block_n=/block_k= kwargs are deprecated; pass "
+            "spec=KernelSpec(block_n=..., block_k=...) instead",
+            DeprecationWarning, stacklevel=3)
+        out = default.replace(**{f: v for f, v in
+                                 (("block_n", block_n), ("block_k", block_k))
+                                 if v is not None})
+    else:
+        out = default
+    if interpret is not None:
+        out = out.with_interpret(interpret)
+    return out
+
+
+# ------------------------------------------------------------ DeviceProfile --
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """What the accelerator gives one kernel launch to work with.
+
+    ``vmem_bytes`` is the per-core VMEM size; ``double_buffering`` is the
+    multiplicative share the compiler claims for overlapped input DMA and
+    spills, so the *usable* working-set budget is ``vmem_bytes /
+    double_buffering``.  The feasibility guards (``resident_feasible``, the
+    tuner's candidate pruning) budget against that, not the raw size.
+    """
+
+    device_kind: str
+    vmem_bytes: int
+    double_buffering: float = 4 / 3
+
+    @property
+    def budget_bytes(self) -> int:
+        return int(self.vmem_bytes / self.double_buffering)
+
+    def fits(self, nbytes: int) -> bool:
+        return nbytes <= self.budget_bytes
+
+    def resident_feasible(self, n: int, d: int, k: int) -> bool:
+        """Does a whole (n, d, k) Lloyd solve stay VMEM-resident here?"""
+        from repro.kernels import resident           # deferred: no cycle
+        return resident.resident_vmem_bytes(n, d, k) <= self.budget_bytes
+
+    def max_resident_points(self, d: int, k: int) -> int:
+        """Largest n keeping a (d, k) solve resident — the S2 sizing knob."""
+        from repro.kernels import resident
+        return resident.max_resident_points(d, k, self.budget_bytes)
+
+
+# Approximate published per-core VMEM by device_kind (longest-prefix match on
+# the lowercased jax.Device.device_kind).  Numbers are deliberately on the
+# conservative side of public figures; where a deployment knows better,
+# REPRO_VMEM_BUDGET overrides the budget outright.
+DEVICE_PROFILES: dict[str, DeviceProfile] = {
+    "tpu v2": DeviceProfile("tpu v2", 16 * MiB),
+    "tpu v3": DeviceProfile("tpu v3", 16 * MiB),
+    "tpu v4 lite": DeviceProfile("tpu v4 lite", 16 * MiB),
+    "tpu v4": DeviceProfile("tpu v4", 32 * MiB),
+    "tpu v5 lite": DeviceProfile("tpu v5 lite", 64 * MiB),
+    "tpu v5p": DeviceProfile("tpu v5p", 64 * MiB),
+    "tpu v6 lite": DeviceProfile("tpu v6 lite", 64 * MiB),
+}
+
+# Unknown chips (and CPU interpret-mode hosts) get 16 MiB / 1.33x == the 12
+# MiB budget the resident engine historically hardcoded, so behaviour off
+# real TPUs is unchanged by the profile layer.
+DEFAULT_PROFILE = DeviceProfile("unknown", 16 * MiB)
+
+
+def _local_device_kind() -> str:
+    try:
+        import jax
+        return jax.devices()[0].device_kind
+    except Exception:                                # no backend at all
+        return "unknown"
+
+
+def get_profile(device_kind: str | None = None) -> DeviceProfile:
+    """Profile for ``device_kind`` (default: the local jax device), with the
+    ``REPRO_VMEM_BUDGET`` env override applied.
+
+    Matching is by longest lowercased prefix so e.g. ``"TPU v5 lite"`` hits
+    the v5-lite row, not a bare ``"tpu v5"``; unknown kinds fall back to the
+    conservative :data:`DEFAULT_PROFILE` (with the observed kind recorded,
+    so logs show what failed to match).
+    """
+    kind = (_local_device_kind() if device_kind is None else device_kind)
+    norm = kind.lower().strip()
+    best = None
+    for key, prof in DEVICE_PROFILES.items():
+        if norm.startswith(key) and (best is None or len(key) > len(best[0])):
+            best = (key, prof)
+    profile = best[1] if best else dataclasses.replace(
+        DEFAULT_PROFILE, device_kind=kind)
+    env = os.environ.get(ENV_VMEM_BUDGET)
+    if env:
+        # override IS the budget: bytes usable, no double-buffering haircut
+        profile = dataclasses.replace(profile, vmem_bytes=int(env),
+                                      double_buffering=1.0)
+    return profile
+
+
+def vmem_budget_bytes(device_kind: str | None = None) -> int:
+    """Usable VMEM working-set budget for the (local) device."""
+    return get_profile(device_kind).budget_bytes

@@ -1,0 +1,276 @@
+"""Offline block-geometry autotuning + the ``tuned`` Lloyd engine.
+
+The paper trades a one-off preprocessing pass (the k-d tree) for every
+subsequent reducer running at full speed; this module makes the same trade
+for kernel geometry — like Bahmani et al.'s Scalable K-Means++ trades rounds
+for per-round work, one offline sweep buys every later solve the fastest
+tile shape the chip admits:
+
+  * :func:`candidate_specs` builds the sweep grid for a launch shape and
+    prunes it by VMEM feasibility (``KernelSpec.fused_vmem_bytes`` vs the
+    chip's :class:`~repro.kernels.specs.DeviceProfile` budget) and by
+    effective-geometry duplicates (clamping makes ``block_n=512`` and ``256``
+    identical at ``n=300`` — no point timing both);
+  * :func:`autotune_step` times one fused Lloyd pass per surviving candidate
+    and records the winner;
+  * :class:`TuningCache` persists winners as JSON under
+    ``experiments/tuning/kernel_specs.json`` (``REPRO_TUNING_CACHE``
+    overrides the path), keyed by
+    ``device_kind|dtype|n<bucket>|d<d>|k<k>`` where the n-bucket is the
+    next power of two — solves of a given problem family hit one entry;
+  * :class:`TunedEngine` (registered as ``tuned``) is the consumer:
+    fused/resident behaviour whose ``resolve_spec`` hook returns the cached
+    winner for the launch shape, falling back to the module defaults when no
+    entry exists — so ``backend="tuned"`` is always safe to request, tuned
+    or not.
+
+Drive the sweep with ``python -m repro.launch.autotune``; benchmarks/
+kernel_bench.py reports tuned-vs-default head-to-head.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import engine as engine_mod
+from repro.kernels import specs
+from repro.kernels.specs import DeviceProfile, KernelSpec
+
+ENV_CACHE_PATH = "REPRO_TUNING_CACHE"
+CACHE_VERSION = 1
+
+# sweep grid defaults: sublane-aligned powers of two around the MXU shape
+BLOCK_NS = (64, 128, 256, 512)
+BLOCK_KS = (64, 128, 256)
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get(ENV_CACHE_PATH)
+    if env:
+        return Path(env)
+    return (Path(__file__).resolve().parents[3]
+            / "experiments" / "tuning" / "kernel_specs.json")
+
+
+def n_bucket(n: int) -> int:
+    """Shape-family bucket for n: the next power of two (min 8).  d and k
+    change the kernel's inner geometry so they key exactly; n only scales
+    the grid's major axis, so nearby n share a winner."""
+    return max(8, 1 << max(0, int(n - 1).bit_length()))
+
+
+def cache_key(device_kind: str, dtype, n: int, d: int, k: int) -> str:
+    dt = jnp.dtype(dtype).name
+    return f"{device_kind.lower().strip()}|{dt}|n{n_bucket(n)}|d{d}|k{k}"
+
+
+@dataclasses.dataclass
+class TuningCache:
+    """The persisted winners: ``key -> KernelSpec`` (+ sweep metadata).
+
+    JSON schema (``version`` 1)::
+
+        {"version": 1,
+         "entries": {"<device>|<dtype>|n<bucket>|d<d>|k<k>":
+                       {"block_n": 256, "block_k": 128,
+                        "acc_dtype": "float32",
+                        "time_us": 812.4, "n": 300, "d": 2, "k": 5,
+                        "candidates": 9}}}
+    """
+
+    path: Path
+    entries: dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: str | Path | None = None) -> "TuningCache":
+        p = Path(path) if path is not None else default_cache_path()
+        entries: dict[str, dict] = {}
+        if p.exists():
+            try:
+                obj = json.loads(p.read_text())
+                if obj.get("version") == CACHE_VERSION:
+                    entries = dict(obj.get("entries", {}))
+                else:
+                    warnings.warn(f"ignoring tuning cache {p}: version "
+                                  f"{obj.get('version')!r} != {CACHE_VERSION}")
+            except (OSError, json.JSONDecodeError, AttributeError) as e:
+                warnings.warn(f"ignoring unreadable tuning cache {p}: {e}")
+        return cls(path=p, entries=entries)
+
+    def get(self, key: str) -> KernelSpec | None:
+        entry = self.entries.get(key)
+        if entry is None:
+            return None
+        try:
+            return KernelSpec.from_json(entry)
+        except (KeyError, ValueError, TypeError) as e:
+            warnings.warn(f"ignoring malformed tuning entry {key!r}: {e}")
+            return None
+
+    def put(self, key: str, spec: KernelSpec, **meta) -> None:
+        self.entries[key] = {**spec.to_json(), **meta}
+
+    def save(self) -> Path:
+        """Atomic write (tmp + rename) so a crashed sweep never truncates
+        the winners every later process would read."""
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = json.dumps({"version": CACHE_VERSION,
+                              "entries": self.entries}, indent=2,
+                             sort_keys=True)
+        tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+        tmp.write_text(payload)
+        os.replace(tmp, self.path)
+        return self.path
+
+
+# process-wide cache memo: loaded lazily, keyed by resolved path so tests
+# that repoint REPRO_TUNING_CACHE get a fresh view
+_ACTIVE: TuningCache | None = None
+
+
+def _active_cache() -> TuningCache:
+    global _ACTIVE
+    want = default_cache_path()
+    if _ACTIVE is None or _ACTIVE.path != want:
+        _ACTIVE = TuningCache.load(want)
+    return _ACTIVE
+
+
+def reload_cache() -> TuningCache:
+    """Drop the in-process memo (after a sweep wrote new winners)."""
+    global _ACTIVE
+    _ACTIVE = None
+    return _active_cache()
+
+
+def lookup_spec(n: int, d: int, k: int, dtype=jnp.float32,
+                device_kind: str | None = None) -> KernelSpec | None:
+    """Cached winner for this launch shape, or ``None`` (use defaults).
+
+    Pure host-side work on static shape/dtype info — safe at trace time,
+    which is when engines call it.
+    """
+    kind = device_kind or specs.get_profile().device_kind
+    return _active_cache().get(cache_key(kind, dtype, n, d, k))
+
+
+# ------------------------------------------------------------------ sweep ---
+
+def candidate_specs(n: int, d: int, k: int,
+                    profile: DeviceProfile | None = None,
+                    block_ns=BLOCK_NS, block_ks=BLOCK_KS,
+                    acc_dtypes=("float32",)) -> list[KernelSpec]:
+    """The pruned sweep grid for one launch shape.
+
+    Prunes (a) geometries whose fused working set busts the device budget
+    and (b) duplicates — block sizes clamp to the problem, so distinct
+    (block_n, block_k) pairs often launch identical tiles.  The module
+    default always competes (and survives even if the budget would prune
+    it, so the sweep can never return an empty grid).
+    """
+    profile = profile or specs.get_profile()
+    out: dict[tuple, KernelSpec] = {}
+    for acc in acc_dtypes:
+        for bn in block_ns:
+            for bk in block_ks:
+                cand = KernelSpec(block_n=bn, block_k=bk, acc_dtype=acc)
+                if cand.fused_vmem_bytes(n, d, k) > profile.budget_bytes:
+                    continue
+                out.setdefault((cand.tile_shapes(n, d, k), acc), cand)
+    fallback = specs.DEFAULT_SPEC.replace(acc_dtype=acc_dtypes[0])
+    out.setdefault((fallback.tile_shapes(n, d, k), fallback.acc_dtype),
+                   fallback)
+    return list(out.values())
+
+
+def _timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds with block_until_ready (local copy — src/ must
+    not depend on the benchmarks package)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def autotune_step(n: int, d: int, k: int, *,
+                  dtype=jnp.float32,
+                  profile: DeviceProfile | None = None,
+                  cache: TuningCache | None = None,
+                  repeats: int = 3,
+                  interpret: bool | None = None,
+                  block_ns=BLOCK_NS, block_ks=BLOCK_KS,
+                  acc_dtypes=("float32",),
+                  measure=None,
+                  seed: int = 0):
+    """Sweep the candidate grid for one (n, d, k, dtype) and record the
+    winner in ``cache`` (caller saves).  Returns ``(best_spec, rows)`` where
+    ``rows`` is the full sweep table for reporting.
+
+    ``measure(spec) -> seconds`` may be injected (tests, exotic harnesses);
+    the default times one fused Lloyd pass on synthetic data.  On non-TPU
+    hosts the kernels run interpreted, so wall-clock there only orders the
+    Python interpreter — the sweep still exercises every geometry end to
+    end, which is what the CI smoke checks.
+    """
+    profile = profile or specs.get_profile()
+    cands = candidate_specs(n, d, k, profile,
+                            block_ns=block_ns, block_ks=block_ks,
+                            acc_dtypes=acc_dtypes)
+    if measure is None:
+        from repro.kernels import ops
+        kx, kc = jax.random.split(jax.random.key(seed + n * d * k))
+        x = jax.random.normal(kx, (n, d), jnp.float32).astype(dtype)
+        c = jax.random.normal(kc, (k, d), jnp.float32).astype(dtype)
+
+        def measure(spec):
+            return _timeit(
+                lambda: ops.lloyd_step_fused(x, c, spec=spec,
+                                             interpret=interpret),
+                repeats=repeats)
+
+    rows = []
+    for cand in cands:
+        secs = measure(cand)
+        rows.append({"spec": cand, "time_us": secs * 1e6,
+                     "vmem_bytes": cand.fused_vmem_bytes(n, d, k)})
+    rows.sort(key=lambda r: r["time_us"])
+    best = rows[0]
+    key = cache_key(profile.device_kind, dtype, n, d, k)
+    if cache is not None:
+        cache.put(key, best["spec"], time_us=round(best["time_us"], 2),
+                  n=n, d=d, k=k, candidates=len(cands))
+    return best["spec"], rows
+
+
+# ----------------------------------------------------------- tuned engine ---
+
+class TunedEngine(engine_mod.ResidentEngine):
+    """fused/resident behaviour with autotuned kernel geometry.
+
+    Identical solve semantics to ``resident`` (VMEM-resident loop when the
+    DeviceProfile says the subset fits, fused per-step loop otherwise); the
+    only difference is the ``resolve_spec`` hook, which looks the launch
+    shape up in the tuning cache and falls back to the module defaults on a
+    miss — request ``backend="tuned"`` unconditionally, it can only match
+    or beat the untuned engines."""
+
+    name = "tuned"
+
+    def resolve_spec(self, points, centroids):
+        return lookup_spec(points.shape[0], points.shape[1],
+                           centroids.shape[0], points.dtype)
+
+
+engine_mod.register(TunedEngine())

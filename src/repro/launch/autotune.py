@@ -1,0 +1,115 @@
+"""Offline kernel-geometry sweep: ``python -m repro.launch.autotune``.
+
+Runs the tuning sweep of ``repro.kernels.tuning`` over a list of launch
+shapes, persists the winners to the JSON cache (default
+``experiments/tuning/kernel_specs.json``; ``--cache`` / ``REPRO_TUNING_CACHE``
+override), then re-reads the cache through the same lookup path the ``tuned``
+engine uses and asserts every swept shape resolves — so a green run IS the
+round-trip proof the CI smoke job relies on.
+
+On a TPU host this produces real winners; on CPU the kernels run under the
+Pallas interpreter, so the sweep is an end-to-end exercise of every
+candidate geometry rather than a meaningful timing — use ``--repeats 1``
+and tiny shapes there (the CI smoke does).
+
+Examples::
+
+    # production embedding-table shapes, full grid
+    python -m repro.launch.autotune --sizes 16384x64x1024 65536x64x1024
+
+    # CI smoke: tiny shape, pruned grid, interpret mode, throwaway cache
+    python -m repro.launch.autotune --sizes 64x4x4 --repeats 1 \
+        --block-ns 64,128 --block-ks 64 --cache /tmp/tuning.json
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.kernels import specs, tuning
+
+
+def _parse_size(s: str) -> tuple[int, int, int]:
+    try:
+        n, d, k = (int(v) for v in s.lower().split("x"))
+        return n, d, k
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"{s!r}: expected NxDxK, e.g. 4096x64x256")
+
+
+def _parse_ints(s: str) -> tuple[int, ...]:
+    return tuple(int(v) for v in s.split(","))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Sweep Lloyd-kernel block geometry and cache the winners")
+    ap.add_argument("--sizes", nargs="+", type=_parse_size, required=True,
+                    metavar="NxDxK", help="launch shapes to tune")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="points dtype the winners are keyed under")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per candidate (median wins)")
+    ap.add_argument("--block-ns", type=_parse_ints,
+                    default=tuning.BLOCK_NS, metavar="N1,N2,...",
+                    help="block_n sweep grid")
+    ap.add_argument("--block-ks", type=_parse_ints,
+                    default=tuning.BLOCK_KS, metavar="K1,K2,...",
+                    help="block_k sweep grid")
+    ap.add_argument("--acc-dtypes", type=lambda s: tuple(s.split(",")),
+                    default=("float32",), metavar="DT1,DT2",
+                    help="on-chip acc dtypes to sweep (float32[,bfloat16])")
+    ap.add_argument("--cache", default=None,
+                    help="cache path (default: REPRO_TUNING_CACHE or "
+                         "experiments/tuning/kernel_specs.json)")
+    ap.add_argument("--device-kind", default=None,
+                    help="profile/key under this device kind instead of the "
+                         "local jax device (e.g. 'TPU v4')")
+    ap.add_argument("--interpret", action="store_true",
+                    help="force the Pallas interpreter (default: auto — "
+                         "compiled on TPU, interpreted elsewhere)")
+    args = ap.parse_args(argv)
+
+    profile = specs.get_profile(args.device_kind)
+    dtype = jnp.dtype(args.dtype)
+    cache = tuning.TuningCache.load(args.cache)
+    print(f"device profile: {profile.device_kind} "
+          f"(vmem={profile.vmem_bytes >> 20} MiB, "
+          f"budget={profile.budget_bytes >> 20} MiB)  cache: {cache.path}")
+
+    for n, d, k in args.sizes:
+        best, rows = tuning.autotune_step(
+            n, d, k, dtype=dtype, profile=profile, cache=cache,
+            repeats=args.repeats, interpret=True if args.interpret else None,
+            block_ns=args.block_ns, block_ks=args.block_ks,
+            acc_dtypes=args.acc_dtypes)
+        default_row = next(
+            (r for r in rows
+             if r["spec"].tile_shapes(n, d, k)
+             == specs.DEFAULT_SPEC.tile_shapes(n, d, k)
+             and r["spec"].acc_dtype == specs.DEFAULT_SPEC.acc_dtype), None)
+        speedup = (default_row["time_us"] / rows[0]["time_us"]
+                   if default_row else float("nan"))
+        print(f"n{n} d{d} k{k}: {len(rows)} candidates -> "
+              f"block_n={best.block_n} block_k={best.block_k} "
+              f"acc={best.acc_dtype} "
+              f"({rows[0]['time_us']:.0f} us, {speedup:.2f}x vs default)")
+
+    path = cache.save()
+    print(f"wrote {len(cache.entries)} entries to {path}")
+
+    # round-trip proof: the winners must resolve through the tuned engine's
+    # own lookup path from a fresh load of the file just written
+    fresh = tuning.TuningCache.load(path)
+    for n, d, k in args.sizes:
+        key = tuning.cache_key(profile.device_kind, dtype, n, d, k)
+        spec = fresh.get(key)
+        assert spec is not None, f"cache round-trip failed for {key}"
+    print(f"cache round-trip OK ({len(args.sizes)} shapes resolve)")
+
+
+if __name__ == "__main__":
+    main()

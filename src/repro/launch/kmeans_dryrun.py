@@ -101,7 +101,8 @@ def _record(name, mesh_tag, lowered, compiled, extra=None):
 def lower_all(multi_pod: bool, backend: str = "jnp"):
     """Lower the dry-run cells.  ``backend`` names the Lloyd engine for
     pkmeans-iter and s2s3 (any name in the ``kernels.engine`` registry —
-    'jnp' | 'pallas' | 'fused' | 'resident'); non-default backends skip the
+    'jnp' | 'pallas' | 'fused' | 'resident' | 'tuned'); non-default
+    backends skip the
     backend-independent S1 cells and write records suffixed ``__<backend>``
     so perf_variants can diff them against the jnp baselines.  With
     'resident', each S2 reducer whose subset fits VMEM lowers as ONE kernel

@@ -5,5 +5,18 @@ import os
 os.environ.pop("XLA_FLAGS", None)
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tuning_cache(tmp_path, monkeypatch):
+    """Pin the tuning cache to an empty per-test path so engine parity
+    results never depend on whatever winners a developer's local autotune
+    runs left in experiments/tuning/ (the 'tuned' engine resolves specs
+    from REPRO_TUNING_CACHE at trace time).  Tests that seed a cache set
+    the env themselves, overriding this."""
+    monkeypatch.setenv("REPRO_TUNING_CACHE",
+                       str(tmp_path / "tuning_cache_isolated.json"))
+    yield

@@ -21,7 +21,8 @@ def _data(n, d, k, dtype=jnp.float32, scale=3.0, seed=1):
 # ---------------------------------------------------------------- registry --
 
 def test_registry_contents():
-    assert set(engines.available()) >= {"jnp", "pallas", "fused", "resident"}
+    assert set(engines.available()) >= {"jnp", "pallas", "fused",
+                                        "resident", "tuned"}
     for name in engines.available():
         assert engines.get_engine(name).name == name
 
@@ -51,7 +52,7 @@ def test_registry_accepts_new_engine():
 
 # ------------------------------------------------- cross-engine step parity --
 
-ENGINE_NAMES = ("jnp", "pallas", "fused", "resident")
+ENGINE_NAMES = ("jnp", "pallas", "fused", "resident", "tuned")
 
 
 def _step_parity_case(n, d, k, dtype, masked, seed):
@@ -160,11 +161,13 @@ def test_kmeans_solver_resident_backend():
 # ------------------------------------------------------ feasibility + fall --
 
 def test_resident_feasibility_model():
+    from repro.kernels import specs
     assert resident.resident_feasible(300, 2, 5)
-    # (n, k) score matrix alone blows the budget
+    # (n, k) score matrix alone blows the budget — which now comes from the
+    # local chip's DeviceProfile (12 MiB conservative default on this host)
     assert not resident.resident_feasible(4096, 8, 2048)
     assert resident.resident_vmem_bytes(4096, 8, 2048) \
-        > resident.VMEM_BUDGET_BYTES
+        > specs.get_profile().budget_bytes
     # max_resident_points inverts the byte model exactly (S2 sizing knob)
     for d, k in [(2, 5), (16, 64), (64, 1024)]:
         n_max = resident.max_resident_points(d, k)

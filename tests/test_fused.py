@@ -87,10 +87,12 @@ def test_fused_empty_clusters():
 
 @pytest.mark.parametrize("block_n,block_k", [(128, 128), (256, 64), (64, 256)])
 def test_fused_block_shape_invariance(block_n, block_k):
+    from repro.kernels.specs import KernelSpec
     x, c = _data(700, 16, 200)
     s0, cnt0, sse0 = ref.lloyd_step_ref(x, c)
-    s1, cnt1, sse1 = ops.lloyd_step_fused(x, c, block_n=block_n,
-                                          block_k=block_k, interpret=True)
+    s1, cnt1, sse1 = ops.lloyd_step_fused(
+        x, c, spec=KernelSpec(block_n=block_n, block_k=block_k),
+        interpret=True)
     np.testing.assert_allclose(np.asarray(cnt0), np.asarray(cnt1), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
                                rtol=1e-4, atol=1e-4)

@@ -1,4 +1,6 @@
 """Integration tests: IPKMeans pipeline vs PKMeans — the paper's claims."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -107,3 +109,72 @@ def test_subset_iterations_are_independent(dataset):
     iters = np.asarray(r.subset_iters)
     assert iters.min() >= 1
     assert len(np.unique(iters)) > 1
+
+
+# ----------------------------------------------------------- pack strategy --
+
+def test_pack_sorted_parity_when_subsets_full():
+    """IPKMeansConfig.pack='sorted' (one sort+reshape, no scatter — §Perf
+    C2, previously reachable only from kmeans_dryrun): with a balanced
+    random partition every subset holds exactly `capacity` points, the
+    sorted pack is valid, and the pipeline must reproduce the scatter pack
+    bit-for-bit."""
+    pts = jax.random.normal(jax.random.key(0), (512, 4))
+    init = pts[:5]
+    base = IPKMeansConfig(num_clusters=5, num_subsets=4, partition="random")
+    r_scatter = ipkmeans(pts, init, jax.random.key(1), base)
+    r_sorted = ipkmeans(pts, init, jax.random.key(1),
+                        dataclasses.replace(base, pack="sorted"))
+    np.testing.assert_allclose(np.asarray(r_sorted.centroids),
+                               np.asarray(r_scatter.centroids), rtol=1e-6)
+    np.testing.assert_allclose(float(r_sorted.sse), float(r_scatter.sse),
+                               rtol=1e-6)
+
+
+def test_pack_sorted_falls_back_when_uneven(dataset):
+    """n != M * capacity (the kd partition's padded leaves) violates the
+    sorted pack's static precondition — the config must fall back to the
+    scatter pack instead of tripping the kernel's assert."""
+    pts, inits = dataset
+    base = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    assert pts.shape[0] != 6 * base.subset_capacity(pts.shape[0])
+    r_scatter = ipkmeans(pts, inits[0], jax.random.key(0), base)
+    r_sorted = ipkmeans(pts, inits[0], jax.random.key(0),
+                        dataclasses.replace(base, pack="sorted"))
+    np.testing.assert_allclose(np.asarray(r_sorted.centroids),
+                               np.asarray(r_scatter.centroids), rtol=1e-6)
+
+
+def test_pack_a2a_single_process_falls_back(dataset):
+    """pack='a2a' needs a mesh; the single-process entry point has none and
+    must silently take the scatter path (the distributed path wires the mesh
+    through — covered by the 8-device slow test for the kernel itself)."""
+    pts, inits = dataset
+    base = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    r_scatter = ipkmeans(pts, inits[0], jax.random.key(0), base)
+    r_a2a = ipkmeans(pts, inits[0], jax.random.key(0),
+                     dataclasses.replace(base, pack="a2a"))
+    np.testing.assert_allclose(np.asarray(r_a2a.centroids),
+                               np.asarray(r_scatter.centroids), rtol=1e-6)
+
+
+def test_pack_a2a_distributed_parity(dataset):
+    """The distributed pipeline threads its mesh into the a2a pack (1-device
+    mesh: all_to_all degenerates but the code path is the production one)."""
+    pts, inits = dataset
+    mesh = compat.make_mesh((1,), ("data",))
+    base = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    r_scatter = ipkmeans_distributed(pts, inits[0], jax.random.key(0),
+                                     base, mesh, ("data",))
+    r_a2a = ipkmeans_distributed(pts, inits[0], jax.random.key(0),
+                                 dataclasses.replace(base, pack="a2a"),
+                                 mesh, ("data",))
+    np.testing.assert_allclose(np.asarray(r_a2a.centroids),
+                               np.asarray(r_scatter.centroids), rtol=1e-5)
+
+
+def test_pack_unknown_raises(dataset):
+    pts, inits = dataset
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=6, pack="zip")
+    with pytest.raises(ValueError, match="unknown pack"):
+        ipkmeans(pts, inits[0], jax.random.key(0), cfg)

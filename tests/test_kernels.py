@@ -57,10 +57,12 @@ def test_centroid_update_matches_ref(n, d, k, dtype):
 
 @pytest.mark.parametrize("block_n,block_k", [(128, 128), (256, 64), (64, 256)])
 def test_assign_block_shape_invariance(block_n, block_k):
+    from repro.kernels.specs import KernelSpec
     x = jax.random.normal(jax.random.key(0), (700, 16))
     c = jax.random.normal(jax.random.key(1), (200, 16))
     l0, m0 = ref.assign_ref(x, c)
-    l1, m1 = ops.assign(x, c, block_n=block_n, block_k=block_k,
+    l1, m1 = ops.assign(x, c, spec=KernelSpec(block_n=block_n,
+                                              block_k=block_k),
                         interpret=True)
     np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
     np.testing.assert_allclose(np.asarray(m0), np.asarray(m1), rtol=1e-4,

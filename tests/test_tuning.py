@@ -1,0 +1,357 @@
+"""KernelSpec / DeviceProfile geometry layer, the autotuning cache, and the
+``tuned`` engine — all in interpret mode (the CI kernel gate).
+
+Covers the acceptance contract of the KernelSpec subsystem: specs are the
+single source of block geometry (clamping matches the historical loose-int
+behaviour exactly), the resident feasibility budget comes from the device
+profile (env-overridable), the JSON cache round-trips through the same
+lookup path the ``tuned`` engine uses, and ``backend="tuned"`` matches the
+jnp oracle whether the cache hits or misses.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import KMeansParams, kmeans
+from repro.kernels import engine as engines
+from repro.kernels import ops, ref, resident, specs, tuning
+from repro.kernels.specs import DeviceProfile, KernelSpec
+
+
+def _data(n, d, k, dtype=jnp.float32, seed=1):
+    kx, kc = jax.random.split(jax.random.key(n * d * k + seed))
+    x = (jax.random.normal(kx, (n, d)) * 3).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * 3).astype(dtype)
+    return x, c
+
+
+# ------------------------------------------------------------- KernelSpec --
+
+def test_spec_validation_and_hashability():
+    s = KernelSpec(block_n=64, block_k=64)
+    assert hash(s) == hash(KernelSpec(64, 64))          # jit static arg
+    assert s.replace(block_k=128).block_k == 128
+    for bad in (dict(block_n=7), dict(block_n=0), dict(block_k=100),
+                dict(block_k=-8), dict(acc_dtype="int8"),
+                dict(acc_dtype="f32")):
+        with pytest.raises(ValueError):
+            KernelSpec(**bad)
+
+
+def test_spec_tile_shapes_match_historical_policy():
+    """The spec's clamping is byte-for-byte the policy the kernels froze as
+    module constants — same blocks, same padding, for every shape the kernel
+    sweeps exercise."""
+    for n, d, k in [(64, 2, 3), (300, 2, 5), (1000, 17, 7), (513, 64, 130),
+                    (2048, 128, 256), (96, 160, 9)]:
+        bn, bk, n_pad, k_pad, d_pad = specs.DEFAULT_SPEC.tile_shapes(n, d, k)
+        assert bn == min(256, max(8, n)) and bk == min(128, max(8, k))
+        assert n_pad % bn == 0 and n_pad >= n
+        assert k_pad % bk == 0 and k_pad >= k
+        assert d_pad % 128 == 0 and d_pad >= d
+        ubn, un_pad, uk_pad, ud_pad = \
+            specs.UPDATE_DEFAULT_SPEC.update_tile_shapes(n, d, k)
+        assert ubn == min(512, max(8, n))
+        assert uk_pad >= k + 1 and uk_pad % 8 == 0
+
+
+def test_spec_clamping_collapses_oversized_blocks():
+    """Blocks larger than the problem clamp to it, so distinct specs can name
+    the same launch geometry — the dedup rule the tuner's grid relies on."""
+    small = KernelSpec(block_n=64, block_k=64)
+    huge = KernelSpec(block_n=1024, block_k=512)
+    assert huge.tile_shapes(48, 4, 5) == small.tile_shapes(48, 4, 5)
+    x, c = _data(48, 4, 5)
+    s_a, cnt_a, sse_a = ops.lloyd_step_fused(x, c, spec=huge, interpret=True)
+    s_b, cnt_b, sse_b = ops.lloyd_step_fused(x, c, spec=small, interpret=True)
+    np.testing.assert_array_equal(np.asarray(cnt_a), np.asarray(cnt_b))
+    np.testing.assert_allclose(np.asarray(s_a), np.asarray(s_b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("spec", [
+    KernelSpec(block_n=64, block_k=64),
+    KernelSpec(block_n=512, block_k=256),
+    KernelSpec(block_n=128, block_k=64, acc_dtype="bfloat16"),
+])
+def test_spec_geometry_invariance(spec):
+    """Any valid spec — including bf16 on-chip accumulation — reproduces the
+    oracle (the spec-level version of the loose-int invariance sweeps).
+
+    bf16 scores legitimately flip argmin ties, moving individual points
+    between clusters, so the bf16 row checks aggregate invariants (mass
+    conservation, SSE within bf16 noise) rather than elementwise sums."""
+    x, c = _data(300, 5, 9)
+    s_r, cnt_r, sse_r = ref.lloyd_step_ref(x, c)
+    s, cnt, sse = ops.lloyd_step_fused(x, c, spec=spec, interpret=True)
+    if spec.acc_dtype == "bfloat16":
+        assert float(cnt.sum()) == pytest.approx(300.0)   # no point lost
+        np.testing.assert_allclose(np.asarray(s.sum(0)),
+                                   np.asarray(s_r.sum(0)), rtol=0.05,
+                                   atol=3.0)
+        np.testing.assert_allclose(float(sse), float(sse_r), rtol=0.05)
+    else:
+        np.testing.assert_allclose(np.asarray(cnt), np.asarray(cnt_r),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_r),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(float(sse), float(sse_r), rtol=1e-4)
+
+
+def test_deprecated_loose_int_shim():
+    """The pre-spec kwargs still work (one release of grace), warn, and
+    produce exactly the spec path's results; mixing both forms is an error."""
+    x, c = _data(300, 5, 9)
+    want = ops.lloyd_step_fused(
+        x, c, spec=KernelSpec(block_n=128, block_k=64), interpret=True)
+    with pytest.warns(DeprecationWarning, match="block_n"):
+        got = ops.lloyd_step_fused(x, c, block_n=128, block_k=64,
+                                   interpret=True)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(TypeError, match="not both"):
+        ops.assign(x, c, spec=KernelSpec(), block_n=128)
+
+
+def test_spec_vmem_models_are_monotone():
+    """Bigger tiles can never price below smaller ones (the tuner's pruning
+    assumes the byte models order sanely), and bf16 tiles price below f32."""
+    big = KernelSpec(block_n=512, block_k=256)
+    small = KernelSpec(block_n=64, block_k=64)
+    n, d, k = 100_000, 64, 512
+    assert big.fused_vmem_bytes(n, d, k) > small.fused_vmem_bytes(n, d, k)
+    assert big.assign_vmem_bytes(n, d, k) > small.assign_vmem_bytes(n, d, k)
+    bf16 = KernelSpec(block_n=512, block_k=256, acc_dtype="bfloat16")
+    assert bf16.fused_vmem_bytes(n, d, k) < big.fused_vmem_bytes(n, d, k)
+
+
+# ---------------------------------------------------------- DeviceProfile --
+
+def test_profile_table_lookup():
+    assert specs.get_profile("TPU v3").vmem_bytes == 16 * specs.MiB
+    assert specs.get_profile("TPU v4").vmem_bytes == 32 * specs.MiB
+    # longest-prefix: the lite row wins over the bare family row
+    assert specs.get_profile("TPU v5 lite").device_kind == "tpu v5 lite"
+
+
+def test_profile_unknown_device_kind_falls_back_conservative():
+    """Unknown chips get the conservative default — whose budget is exactly
+    the 12 MiB constant the resident engine used to hardcode, so behaviour
+    off known TPUs is unchanged."""
+    p = specs.get_profile("Weird Accelerator 9000")
+    assert p.device_kind == "Weird Accelerator 9000"
+    assert p.budget_bytes == 12 * specs.MiB
+    assert specs.get_profile().budget_bytes == 12 * specs.MiB  # cpu host
+
+
+def test_profile_env_override(monkeypatch):
+    monkeypatch.setenv(specs.ENV_VMEM_BUDGET, str(1 << 20))
+    assert specs.get_profile().budget_bytes == 1 << 20
+    assert specs.get_profile("TPU v4").budget_bytes == 1 << 20
+
+
+def test_resident_feasibility_tracks_profile_budget(monkeypatch):
+    """The resident guard consults the profile, not a constant: shrinking
+    the env budget flips a comfortably-feasible shape to infeasible and the
+    resident engine must then take the fused fallback."""
+    assert resident.resident_feasible(512, 6, 8)
+    monkeypatch.setenv(specs.ENV_VMEM_BUDGET, "65536")       # 64 KiB
+    assert not resident.resident_feasible(512, 6, 8)
+    assert resident.max_resident_points(6, 8) < 512
+    calls = {"n": 0}
+    real = ops.lloyd_solve_resident
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "lloyd_solve_resident", counting)
+    x, _ = _data(512, 6, 8)
+    c_r, sse_r, it_r, _ = engines.get_engine("resident").solve(
+        x, x[:8], max_iters=10, tol=1e-6)
+    assert calls["n"] == 0                       # kernel never launched
+    c_o, sse_o, it_o, _ = ref.lloyd_solve_ref(x, x[:8], max_iters=10,
+                                              tol=1e-6)
+    assert int(it_r) == int(it_o)
+    np.testing.assert_allclose(float(sse_r), float(sse_o), rtol=1e-4)
+
+
+# ------------------------------------------------------------ tuning cache --
+
+def test_cache_roundtrip_and_schema(tmp_path):
+    path = tmp_path / "kernel_specs.json"
+    cache = tuning.TuningCache.load(path)
+    assert cache.entries == {}
+    key = tuning.cache_key("cpu", jnp.float32, 300, 2, 5)
+    assert key == "cpu|float32|n512|d2|k5"       # n buckets to next pow2
+    cache.put(key, KernelSpec(block_n=64, block_k=64), time_us=12.5,
+              n=300, d=2, k=5, candidates=9)
+    cache.save()
+
+    obj = json.loads(path.read_text())
+    assert obj["version"] == tuning.CACHE_VERSION
+    entry = obj["entries"][key]
+    assert entry["block_n"] == 64 and entry["block_k"] == 64
+    assert entry["acc_dtype"] == "float32" and entry["time_us"] == 12.5
+
+    fresh = tuning.TuningCache.load(path)
+    assert fresh.get(key) == KernelSpec(block_n=64, block_k=64)
+    assert fresh.get("cpu|float32|n512|d9|k9") is None
+
+
+def test_cache_rejects_wrong_version_and_garbage(tmp_path):
+    vpath = tmp_path / "wrong_version.json"
+    vpath.write_text(json.dumps({"version": 99, "entries": {"k": {}}}))
+    with pytest.warns(UserWarning, match="version"):
+        assert tuning.TuningCache.load(vpath).entries == {}
+    gpath = tmp_path / "garbage.json"
+    gpath.write_text("{not json")
+    with pytest.warns(UserWarning, match="unreadable"):
+        assert tuning.TuningCache.load(gpath).entries == {}
+    mpath = tmp_path / "malformed_entry.json"
+    mpath.write_text(json.dumps({
+        "version": tuning.CACHE_VERSION,
+        "entries": {"key": {"block_n": 7, "block_k": 64}}}))  # invalid spec
+    cache = tuning.TuningCache.load(mpath)
+    with pytest.warns(UserWarning, match="malformed"):
+        assert cache.get("key") is None
+
+
+def test_candidate_specs_prune_by_budget_and_dedup():
+    roomy = DeviceProfile("test", 16 * specs.MiB)
+    n, d, k = 200_000, 256, 2048
+    cands = tuning.candidate_specs(n, d, k, roomy)
+    geoms = {(c.tile_shapes(n, d, k), c.acc_dtype) for c in cands}
+    assert len(geoms) == len(cands)              # no duplicate geometries
+    tiny = DeviceProfile("test", 1 << 16)        # 64 KiB: prunes everything
+    only = tuning.candidate_specs(n, d, k, tiny)
+    assert only == [specs.DEFAULT_SPEC]          # fallback always survives
+    small = tuning.candidate_specs(48, 4, 5, roomy)
+    assert len(small) < len(cands)               # clamping collapses the grid
+
+
+def test_autotune_step_records_winner(tmp_path):
+    """With an injected measure the sweep is deterministic: the known-best
+    candidate must win and land in the cache under the right key."""
+    profile = DeviceProfile("testchip", 16 * specs.MiB)
+    cache = tuning.TuningCache.load(tmp_path / "c.json")
+
+    def measure(spec):                            # block_n=128 rigged to win
+        return 1.0 if spec.block_n == 128 else 2.0 + spec.block_n / 1e3
+
+    best, rows = tuning.autotune_step(300, 4, 16, profile=profile,
+                                      cache=cache, measure=measure)
+    assert best.block_n == 128
+    assert rows[0]["time_us"] <= rows[-1]["time_us"]
+    key = tuning.cache_key("testchip", jnp.float32, 300, 4, 16)
+    assert cache.get(key) == best
+    cache.save()
+    assert tuning.TuningCache.load(cache.path).get(key) == best
+
+
+def test_autotune_step_real_measure_interpret(tmp_path):
+    """End-to-end sweep on a tiny shape through the actual fused kernel in
+    interpret mode (what the CI autotune smoke runs)."""
+    cache = tuning.TuningCache.load(tmp_path / "c.json")
+    best, rows = tuning.autotune_step(
+        64, 4, 4, cache=cache, repeats=1, interpret=True,
+        block_ns=(64, 128), block_ks=(64,))
+    assert best in [r["spec"] for r in rows]
+    assert cache.entries                         # winner recorded
+
+
+# ------------------------------------------------------------ tuned engine --
+
+def _seed_cache(monkeypatch, tmp_path, n, d, k, spec,
+                dtype=jnp.float32):
+    """Point REPRO_TUNING_CACHE at a fresh cache holding ``spec`` for the
+    local device kind, and reload the in-process memo."""
+    path = tmp_path / "kernel_specs.json"
+    cache = tuning.TuningCache.load(path)
+    kind = specs.get_profile().device_kind
+    cache.put(tuning.cache_key(kind, dtype, n, d, k), spec)
+    cache.save()
+    monkeypatch.setenv(tuning.ENV_CACHE_PATH, str(path))
+    tuning.reload_cache()
+    return cache
+
+
+def test_tuned_engine_resolves_cached_spec(monkeypatch, tmp_path):
+    n, d, k = 288, 6, 12
+    seeded = KernelSpec(block_n=64, block_k=64)
+    _seed_cache(monkeypatch, tmp_path, n, d, k, seeded)
+    eng = engines.get_engine("tuned")
+    x, c = _data(n, d, k)
+    assert eng.resolve_spec(x, c) == seeded
+    # a different shape misses the cache -> None -> module defaults
+    x2, c2 = _data(n, d, k + 1)
+    assert eng.resolve_spec(x2, c2) is None
+
+
+def test_tuned_engine_parity_with_cached_spec(monkeypatch, tmp_path):
+    """backend='tuned' with a NON-default cached geometry still matches the
+    jnp oracle through the whole KMeansResult — tuning changes the launch
+    shape, never the math."""
+    n, d, k = 352, 6, 8
+    _seed_cache(monkeypatch, tmp_path, n, d, k,
+                KernelSpec(block_n=64, block_k=64))
+    x, _ = _data(n, d, k)
+    init = x[:k]
+    r_tun = kmeans(x, init, params=KMeansParams(max_iters=25,
+                                                backend="tuned"))
+    r_jnp = kmeans(x, init, params=KMeansParams(max_iters=25))
+    assert int(r_tun.iters) == int(r_jnp.iters)
+    assert bool(r_tun.converged) == bool(r_jnp.converged)
+    np.testing.assert_allclose(np.asarray(r_tun.centroids),
+                               np.asarray(r_jnp.centroids),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(r_tun.sse), float(r_jnp.sse), rtol=1e-4)
+
+
+def test_tuned_engine_default_fallback_parity():
+    """Cache miss (no cache seeded): tuned == resident == oracle on a fresh
+    shape — 'tuned' is always safe to request."""
+    n, d, k = 416, 5, 7
+    x, _ = _data(n, d, k)
+    init = x[:k]
+    r_tun = kmeans(x, init, params=KMeansParams(max_iters=20,
+                                                backend="tuned"))
+    r_jnp = kmeans(x, init, params=KMeansParams(max_iters=20))
+    assert int(r_tun.iters) == int(r_jnp.iters)
+    np.testing.assert_allclose(np.asarray(r_tun.centroids),
+                               np.asarray(r_jnp.centroids),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lookup_unknown_device_kind_returns_none(monkeypatch, tmp_path):
+    _seed_cache(monkeypatch, tmp_path, 64, 4, 4, KernelSpec(64, 64))
+    assert tuning.lookup_spec(64, 4, 4,
+                              device_kind="weird chip 9000") is None
+
+
+# -------------------------------------------------------- BACKENDS snapshot --
+
+def test_backends_sees_late_registrations():
+    """core.kmeans.BACKENDS is computed per-access, so engines registered
+    after core's import (the tuned engine, custom user engines) are never
+    invisible."""
+    import sys
+    km = sys.modules["repro.core.kmeans"]
+    assert "tuned" in km.BACKENDS
+
+    class Late(engines.LloydEngine):
+        name = "_late_test"
+
+        def step(self, points, centroids, weights=None):
+            return ref.lloyd_step_ref(points, centroids, weights)
+
+    engines.register(Late())
+    try:
+        assert "_late_test" in km.BACKENDS
+    finally:
+        engines._REGISTRY.pop("_late_test", None)
+    assert "_late_test" not in km.BACKENDS
+    with pytest.raises(AttributeError):
+        km.NOT_A_THING
