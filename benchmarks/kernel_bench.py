@@ -6,11 +6,18 @@ Python interpreter — not meaningful for wall-clock), so the timed comparison
 is jnp-reference vs jnp-reference-at-scale; the Pallas numbers reported are
 correctness-path timings only.  The real target is the TPU lowering, whose
 tiling is validated structurally here: block shapes, VMEM footprints, and the
-HBM-traffic models that quantify the two wins — per *iteration*, the fused
+HBM-traffic models that quantify the wins — per *iteration*, the fused
 single-pass kernel reads the points once instead of twice with no ``(n,)``
 label/distance round-trip; per *solve*, the VMEM-resident engine reads the
 points ONCE TOTAL, so its projected per-solve traffic is ~1/iters of the
-fused engine's (which pays one sweep every iteration)."""
+fused engine's (which pays one sweep every iteration); per *stack*, the
+batched megakernel turns a device's M reducers into ceil(M/T) pipelined
+grid steps (vs M serialized single-block steps under vmap) with the whole
+stack's points still read once per solve.
+
+``benchmarks.run --smoke`` snapshots this module's rows to
+``BENCH_kernel.json`` at the repo root, so the perf trajectory accumulates
+across commits."""
 from __future__ import annotations
 
 import jax
@@ -18,6 +25,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import record, timeit
 from repro.kernels import ops, ref, specs, tuning
+from repro.kernels.batch_resident import (batched_group_size,
+                                          batched_group_vmem_bytes)
 from repro.kernels.resident import resident_feasible, resident_vmem_bytes
 from repro.kernels.specs import F32
 
@@ -59,6 +68,27 @@ def lloyd_solve_hbm_bytes(n, d, k, iters, engine: str):
         return (n * d * F32 + n * F32          # points + weights, ONCE
                 + 2 * k * d * F32 + 3 * F32)   # init in, final out, scalars
     return iters * lloyd_hbm_bytes(n, d, k, fused=(engine == "fused"))
+
+
+def lloyd_stack_hbm_bytes(m, s, d, k, iters, engine: str, group_t: int = 1):
+    """Analytic HBM traffic of a STACK of M solves (f32) for an engine.
+
+    'batched' reads the whole stack's points+weights ONCE per stack solve
+    and the shared init centroids once per grid step (ceil(M/T) groups),
+    writing M converged centroid sets + per-subset scalars back.  The vmap
+    of 'resident' moves the same points once per subset grid step — equal
+    point bytes, M init-centroid reads instead of M/T — so the byte model
+    alone is near-parity: the batched win is structural (launch count M ->
+    ceil(M/T), input pipelining overlapping the next group's HBM stream
+    with the current group's iterations, and group-batched MXU shapes),
+    which the launch-count column quantifies.
+    """
+    launches = -(-m // group_t) if engine == "batched" else m
+    if engine in ("batched", "resident"):
+        return (m * s * d * F32 + m * s * F32  # the whole stack, ONCE
+                + launches * k * d * F32       # shared init, per launch
+                + m * (k * d + 3) * F32)       # finals + scalars out
+    return m * lloyd_solve_hbm_bytes(s, d, k, iters, engine)
 
 
 def run():
@@ -162,6 +192,55 @@ def run():
     }
     rows.append(resident_row)
 
+    # batched vs vmap(resident): a whole S2 reducer STACK (M subsets), one
+    # pipelined multi-group launch vs the serialized grid of single-block
+    # kernels vmap produces.  Both stream the stack's points once per solve;
+    # the structural win is the launch count (M -> ceil(M/T)) and the
+    # input-pipelining overlap, which interpret-mode wall-clock cannot show —
+    # the row exists so CI exercises solve_batched end to end and reports
+    # the launch/byte models head-to-head.
+    m_stack, s_sub, d_b, k_b = 8, 64, 4, 4
+    solve_iters = 8
+    kx, kc = jax.random.split(jax.random.key(m_stack * s_sub))
+    stack = jax.random.normal(kx, (m_stack, s_sub, d_b), jnp.float32)
+    init_b = jax.random.normal(kc, (k_b, d_b), jnp.float32)
+    # explicit group_t: T=1 keeps this interpret-mode row alive even on a
+    # host whose budget would refuse the auto-derivation
+    group_t = max(1, batched_group_size(m_stack, s_sub, d_b, k_b))
+    t_bat = timeit(jax.jit(lambda x, c: ops.lloyd_solve_batched(
+        x, c, group_t=group_t, max_iters=solve_iters, tol=0.0)[0]),
+        stack, init_b)
+    t_vmap = timeit(jax.jit(jax.vmap(
+        lambda x, c: ops.lloyd_solve_resident(
+            x, c, max_iters=solve_iters, tol=0.0)[0],
+        in_axes=(0, None))), stack, init_b)
+    batched_row = {
+        "m": m_stack, "s": s_sub, "d": d_b, "k": k_b,
+        "mode": "interpret-batched-vs-vmap-resident-stack",
+        "solve_iters": solve_iters, "group_t": group_t,
+        "launches_batched": -(-m_stack // group_t),
+        "launches_vmap_resident": m_stack,
+        "batched_stack_us": t_bat * 1e6,
+        "vmap_resident_stack_us": t_vmap * 1e6,
+        "group_vmem_bytes": batched_group_vmem_bytes(group_t, s_sub,
+                                                     d_b, k_b),
+        "group_vmem_share": (batched_group_vmem_bytes(group_t, s_sub,
+                                                      d_b, k_b)
+                             / specs.get_profile().budget_bytes),
+        "subset_vmem_share": (resident_vmem_bytes(s_sub, d_b, k_b)
+                              / specs.get_profile().budget_bytes),
+        "hbm_bytes_stack_batched":
+            lloyd_stack_hbm_bytes(m_stack, s_sub, d_b, k_b, solve_iters,
+                                  "batched", group_t),
+        "hbm_bytes_stack_vmap_resident":
+            lloyd_stack_hbm_bytes(m_stack, s_sub, d_b, k_b, solve_iters,
+                                  "resident"),
+        "hbm_bytes_stack_fused":
+            lloyd_stack_hbm_bytes(m_stack, s_sub, d_b, k_b, solve_iters,
+                                  "fused"),
+    }
+    rows.append(batched_row)
+
     # tuned vs default geometry: the fused step under the cache's winner for
     # this shape (specs.DEFAULT_SPEC on a cache miss — the tuned engine's
     # fallback) head-to-head with the default spec.  Run
@@ -199,6 +278,11 @@ def run():
            ("kernel_resident_vs_fused",
             f"{resident_row['resident_solve_us']:.0f}",
             f"solve_hbm_ratio={resident_row['resident_solve_hbm_ratio']:.2f}"))
+    record("kernel_bench", rows,
+           ("kernel_batched_vs_vmap",
+            f"{batched_row['batched_stack_us']:.0f}",
+            f"launches={batched_row['launches_batched']}/"
+            f"{batched_row['launches_vmap_resident']}"))
     record("kernel_bench", rows,
            ("kernel_tuned_vs_default", f"{tuned_row['tuned_us']:.0f}",
             f"from_cache={tuned_row['tuned_from_cache']}"))

@@ -1,13 +1,19 @@
 """Benchmark harness — one entry per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV lines; full rows land in
-experiments/bench/*.json.
+experiments/bench/*.json, and a successful kernel_bench additionally
+snapshots to ``BENCH_kernel.json`` at the repo root so the kernel perf
+trajectory accumulates commit over commit (CI's ``--smoke`` writes it too).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def main() -> None:
@@ -34,7 +40,11 @@ def main() -> None:
     failed = 0
     for name, fn in benches:
         try:
-            fn()
+            rows = fn()
+            if name == "kernel_bench":
+                # repo-root snapshot: the perf-trajectory artifact
+                (REPO_ROOT / "BENCH_kernel.json").write_text(
+                    json.dumps(rows, indent=2) + "\n")
         except Exception:
             failed += 1
             print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}",

@@ -39,13 +39,15 @@ class IPKMeansConfig:
 
     def with_backend(self, backend: str) -> "IPKMeansConfig":
         """Same config, different Lloyd engine ('jnp' | 'pallas' | 'fused' |
-        'resident' | 'tuned' — any name in the ``kernels.engine`` registry).
+        'resident' | 'batched' | 'tuned' — any name in the
+        ``kernels.engine`` registry).
 
         The engine is the hot-path choice every S2 reducer executes; this
         helper keeps it switchable without re-spelling the whole config.
-        ``resident`` is the intended S2 engine on TPU: subsets are sized to
-        fit VMEM, so each reducer's entire convergence loop is one kernel
-        launch (points cross HBM once per solve).
+        ``batched`` is the intended S2 engine on TPU: subsets are sized to
+        fit VMEM, and each device's whole reducer STACK lowers to one
+        pipelined multi-group kernel launch (``resident`` runs the same
+        per-subset loop but one grid step per reducer, serialized).
         """
         return dataclasses.replace(
             self, kmeans=self.kmeans._replace(backend=backend))
@@ -146,8 +148,11 @@ def ipkmeans_distributed(points: jnp.ndarray,
     S1 runs jit-sharded (sorts partition fine under SPMD); S2 runs under
     ``shard_map`` with the subset axis sharded over ``axis_names`` so each
     device drives its own ``lax.while_loop`` with NO collectives — the
-    communication-avoidance that defines the paper.  S3 is O(K*M) and runs
-    replicated.
+    communication-avoidance that defines the paper.  The shard_map body is
+    ``kmeans_batched``, so ``cfg.kmeans.backend`` picks how each device
+    runs its local stack: per-subset engines vmap (serialized grid), while
+    ``"batched"`` lowers the whole per-device stack to one pipelined
+    megakernel launch.  S3 is O(K*M) and runs replicated.
 
     ``num_subsets`` must be a multiple of the mesh size along ``axis_names``.
     """

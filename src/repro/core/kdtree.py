@@ -13,6 +13,7 @@ pjit on a mesh without modification.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import NamedTuple
 
@@ -134,7 +135,6 @@ def required_depth(n: int, leaf_capacity: int) -> int:
     implies leaves of size *closest to* M — one split further would halve
     the leaves and leave subsets M/2..M-1 empty (labels are ranks within
     the leaf).  So: depth = round(log2(n / capacity)), leaf in (M/2, M]."""
-    import math
     if n <= leaf_capacity:
         return 0
     return max(0, round(math.log2(n / leaf_capacity)))
@@ -260,10 +260,7 @@ def pack_subsets_a2a(points: jnp.ndarray,
         # route local points to the device owning their subset
         dst = (ids_loc // m_loc).astype(jnp.int32)
         order = jnp.argsort(dst, stable=True)
-        counts = jnp.bincount(dst, length=r)
-        starts = jnp.cumsum(counts) - counts
-        slot_sorted = jnp.arange(n_loc, dtype=jnp.int32) \
-            - starts[dst[order]].astype(jnp.int32)
+        _, slot_sorted, _ = _segment_rank(dst, order, r)
         slot = jnp.zeros(n_loc, jnp.int32).at[order].set(slot_sorted)
         slot = jnp.where(slot < c_send, slot, c_send)        # drop overflow
         send_x = jnp.zeros((r, c_send, d), pts_loc.dtype).at[
@@ -277,10 +274,7 @@ def pack_subsets_a2a(points: jnp.ndarray,
         flat_id = recv_id.reshape(r * c_send)
         local_sub = jnp.where(flat_id >= 0, flat_id % m_loc, m_loc)
         order2 = jnp.argsort(local_sub, stable=True)
-        counts2 = jnp.bincount(local_sub, length=m_loc + 1)
-        starts2 = jnp.cumsum(counts2) - counts2
-        rank_sorted = jnp.arange(r * c_send, dtype=jnp.int32) \
-            - starts2[local_sub[order2]].astype(jnp.int32)
+        _, rank_sorted, _ = _segment_rank(local_sub, order2, m_loc + 1)
         rank = jnp.zeros(r * c_send, jnp.int32).at[order2].set(rank_sorted)
         valid = (flat_id >= 0) & (rank < capacity)
         out = jnp.zeros((m_loc, capacity, d), pts_loc.dtype).at[

@@ -11,8 +11,10 @@ semantics, Algorithm 4); engines that own their convergence loop
 Registered engines (see ``src/repro/kernels/__init__.py`` for the taxonomy):
 ``jnp`` (reference/oracle) | ``pallas`` (two-kernel, labels as product) |
 ``fused`` (one HBM sweep per iteration) | ``resident`` (one HBM sweep per
-*solve* — VMEM-resident loop with automatic fused fallback) | ``tuned``
-(resident behaviour + autotuned kernel geometry from the tuning cache).
+*solve* — VMEM-resident loop with automatic fused fallback) | ``batched``
+(resident semantics whose reducer STACKS lower to one pipelined multi-group
+launch) | ``tuned`` (resident behaviour + autotuned kernel geometry from
+the tuning cache).
 
 ``reseed_empty`` re-seeds zero-count centroids at the farthest in-subset
 point (k-means++-style, Bahmani et al.): with small subsets a centroid frozen
@@ -45,8 +47,8 @@ def __getattr__(name):
 class KMeansParams(NamedTuple):
     max_iters: int = 300
     tol: float = 1e-6             # paper: "until centroids stop moving"
-    backend: str = "jnp"          # any name in engines.available():
-                                  # 'jnp'|'pallas'|'fused'|'resident'|'tuned'
+    backend: str = "jnp"          # any name in engines.available(): 'jnp'|
+                                  # 'pallas'|'fused'|'resident'|'batched'|'tuned'
     reseed_empty: bool = False    # re-seed empty clusters at farthest points
 
 
@@ -99,16 +101,43 @@ def kmeans(points: jnp.ndarray,
                         converged=converged)
 
 
+@partial(jax.jit, static_argnames=("params",))
 def kmeans_batched(subsets: jnp.ndarray,
                    masks: jnp.ndarray,
                    init_centroids: jnp.ndarray,
                    params: KMeansParams = KMeansParams()) -> KMeansResult:
-    """vmap of :func:`kmeans` over a stack of subsets — (M, S, d) + (M, S).
+    """A stack of complete k-means solves — (M, S, d) + (M, S).
 
     This is the per-device body of IPKMeans stage 2: when more subsets than
     devices exist, each device runs a stack of complete k-means instances
-    (Hadoop would queue reducers the same way).  Engine solves vmap cleanly —
-    including the resident kernel, which maps to a batched single-launch.
+    (Hadoop would queue reducers the same way).  The stack delegates WHOLE
+    to ``engine.solve_batched``: the base hook is a vmap of ``solve`` (so
+    per-subset engines — including ``resident``, whose vmap is a *serialized
+    grid* of single-block kernels — behave exactly as before), while
+    ``backend="batched"`` lowers the stack to ONE pipelined multi-group
+    megakernel launch (``kernels/batch_resident.py``): per-stack launches
+    drop M -> ceil(M/T) and the next group's HBM stream overlaps the current
+    group's iterations.
+
+    Empty (all-padding) subsets keep the kmeans contract: sse 0 and
+    ASSE=+inf, so they never win the min-ASSE merge.
     """
-    fn = lambda p, m: kmeans(p, init_centroids, m, params)
-    return jax.vmap(fn)(subsets, masks)
+    engine = engines.get_engine(params.backend)
+    w = None if masks is None else masks.astype(subsets.dtype)
+    final_c, total_sse, iters, converged = engine.solve_batched(
+        subsets, init_centroids, w,
+        max_iters=params.max_iters, tol=params.tol,
+        reseed_empty=params.reseed_empty)
+
+    if masks is None:
+        cnt = jnp.full((subsets.shape[0],), float(subsets.shape[1]),
+                       jnp.float32)
+    else:
+        cnt = jnp.sum(masks.astype(jnp.float32), axis=1)
+    # empty shards must never win the min-ASSE merge: ASSE = +inf
+    asse = jnp.where(cnt > 0.0, total_sse / jnp.maximum(cnt, 1.0), jnp.inf)
+    return KMeansResult(centroids=final_c.astype(init_centroids.dtype),
+                        sse=total_sse,
+                        asse=asse,
+                        iters=iters,
+                        converged=converged)

@@ -16,8 +16,14 @@ import jax.numpy as jnp
 @partial(jax.jit, static_argnames=("num_clusters",))
 def hierarchical_merge(centroids: jnp.ndarray, num_clusters: int) -> jnp.ndarray:
     """Algorithm 5: repeatedly replace the closest active pair by its midpoint
-    until only ``num_clusters`` remain.  O(N^3) with N = K*M, run as a
-    fixed-trip ``fori_loop`` over (N - K) merge steps with an active mask.
+    until only ``num_clusters`` remain, run as a fixed-trip ``fori_loop``
+    over (N - K) merge steps with an active mask (N = K*M).
+
+    The (N, N) distance matrix is computed ONCE and carried through the
+    loop: a merge only moves centroid ``i`` (to the midpoint) and retires
+    centroid ``j``, so each step rewrites just those two rows/columns —
+    O(N*d + N^2) per step for the update+argmin instead of the O(N^2*d)
+    full-matrix recompute (O(N^3*d) total) this loop used to pay.
 
     Returns (num_clusters, d): the surviving centroids, packed by sorting the
     active mask (inactive rows pushed to the end and sliced off).
@@ -27,21 +33,27 @@ def hierarchical_merge(centroids: jnp.ndarray, num_clusters: int) -> jnp.ndarray
     if steps <= 0:
         return centroids[:num_clusters]
 
+    idx = jnp.arange(n)
+    d2_0 = jnp.sum((centroids[:, None, :] - centroids[None, :, :]) ** 2,
+                   axis=-1)
+    d2_0 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2_0)
+
     def body(_, carry):
-        c, active = carry
-        d2 = jnp.sum((c[:, None, :] - c[None, :, :]) ** 2, axis=-1)
-        pair_ok = active[:, None] & active[None, :]
-        d2 = jnp.where(pair_ok, d2, jnp.inf)
-        d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)
-        flat = jnp.argmin(d2)
+        c, active, d2 = carry
+        flat = jnp.argmin(d2)                  # inactive/self rows are +inf
         i, j = flat // n, flat % n
         mid = 0.5 * (c[i] + c[j])
         c = c.at[i].set(mid)
         active = active.at[j].set(False)
-        return c, active
+        # only row/col i (moved to mid) and row/col j (retired) changed
+        di = jnp.sum((c - mid) ** 2, axis=-1)
+        di = jnp.where(active & (idx != i), di, jnp.inf)
+        d2 = d2.at[i, :].set(di).at[:, i].set(di)
+        d2 = d2.at[j, :].set(jnp.inf).at[:, j].set(jnp.inf)
+        return c, active, d2
 
-    c, active = jax.lax.fori_loop(
-        0, steps, body, (centroids, jnp.ones(n, dtype=bool)))
+    c, active, _ = jax.lax.fori_loop(
+        0, steps, body, (centroids, jnp.ones(n, dtype=bool), d2_0))
     # pack the `num_clusters` active rows to the front (stable by index)
     order = jnp.argsort(~active, stable=True)
     return c[order][:num_clusters]

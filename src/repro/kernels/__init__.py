@@ -3,12 +3,13 @@ registry — with kernel geometry owned by one subsystem.
 
 **Geometry** (``specs.py`` / ``tuning.py``): every kernel launch takes a
 frozen :class:`~repro.kernels.specs.KernelSpec` (block_n, block_k, on-chip
-acc dtype, interpret flag) instead of loose ints; the module defaults live
-in ``specs.py`` — no kernel file carries its own block constants.  What the
-chip affords is a :class:`~repro.kernels.specs.DeviceProfile` (per-core VMEM
-x double-buffering share, looked up from ``jax.Device.device_kind``, env
-override ``REPRO_VMEM_BUDGET``): the resident engine's feasibility guard and
-the tuner's candidate pruning both budget against it.  Specs reach kernels
+acc dtype, interpret flag, batched group size) instead of loose ints; the
+module defaults live in ``specs.py`` — no kernel file carries its own block
+constants.  What the chip affords is a :class:`~repro.kernels.specs
+.DeviceProfile` (per-core VMEM x double-buffering share, looked up from
+``jax.Device.device_kind``, env override ``REPRO_VMEM_BUDGET``): the
+resident engine's feasibility guard, the batched engine's group sizing and
+the tuner's candidate pruning all budget against it.  Specs reach kernels
 through the engine protocol's ``resolve_spec(points, centroids)`` hook — the
 base returns ``None`` (defaults); the ``tuned`` engine returns the winner
 recorded by the offline sweep (``python -m repro.launch.autotune``) in the
@@ -31,30 +32,50 @@ JSON cache under ``experiments/tuning/``.
     iteration and labels never leave VMEM (~half the HBM traffic of
     ``pallas``); an optional final-pass labels output serves cluster dumps
     without a second kernel.  The preferred per-step TPU engine, and the
-    fallback for ``resident``.
-  * ``resident`` — ``resident.py``: the whole convergence loop in ONE kernel
-    launch.  Centroids and the (k, d) accumulators stay resident in VMEM,
-    iteration/convergence state sits in SMEM, and the points stream from HBM
-    once per *solve* instead of once per iteration — the paper's
-    one-job-instead-of-one-job-per-iteration argument finished at the memory
-    hierarchy.  Gated by the DeviceProfile VMEM-feasibility check with
-    automatic fallback to ``fused`` when (n, d, k) does not fit on-chip.
+    ultimate fallback for the whole-solve engines.
+  * ``resident`` — ``resident.py``: ONE subset's whole convergence loop in
+    one kernel launch.  Centroids and the (k, d) accumulators stay resident
+    in VMEM, iteration/convergence state sits in SMEM, and the points stream
+    from HBM once per *solve* instead of once per iteration.  Gated by the
+    DeviceProfile VMEM-feasibility check with automatic fallback to
+    ``fused`` when (n, d, k) does not fit on-chip.  Under vmap (a reducer
+    stack) it serializes: one single-block grid step per subset, no overlap.
+  * ``batched``  — ``batch_resident.py``: a whole reducer STACK in one
+    pipelined launch.  The grid iterates over groups of T subsets; each
+    grid step runs its group's convergence loop on-chip with group-batched
+    MXU matmuls (``dot_general`` batch dim over the group) while Pallas
+    double-buffers the next group's points from HBM — per-stack launches
+    drop M -> ceil(M/T) and the HBM stream overlaps compute.  T fills the
+    DeviceProfile budget (``batched_group_size``) or comes from the tuning
+    cache's ``group_t`` winner.  Per-subset semantics are bit-for-bit the
+    resident kernel's; single solves inherit the resident path.  The
+    preferred S2 stack engine on TPU.
   * ``tuned``    — ``tuning.py``: ``resident`` solve semantics + autotuned
     kernel geometry.  Its ``resolve_spec`` hook serves the cached
     per-(device, dtype, shape) winner, falling back to the defaults on a
-    cache miss, so it is always safe to request.  The preferred TPU engine
-    for the IPKMeans S2 reducers once the target shapes have been swept.
+    cache miss, so it is always safe to request.
+
+The engine protocol's ``solve_batched`` hook is where stacks enter: the base
+is a vmap of ``solve`` (every per-subset engine composes unchanged), and
+``batched`` overrides it with the megakernel — ``core.kmeans.kmeans_batched``
+delegates whole stacks there, so the choice is one backend string away for
+``ipkmeans`` / ``ipkmeans_distributed`` / ``kmeans_dryrun`` alike.
 
 CI exercises all of them: the kernel-correctness job sweeps ``pallas``,
-``fused``, ``resident`` and ``tuned`` in interpret mode against the oracles
-in ``ref.py`` (tests/test_kernels.py, tests/test_fused.py,
-tests/test_engines.py, tests/test_tuning.py — the last covers the cache
-round-trip, spec clamping, and tuned-vs-oracle parity), and an autotune
-smoke job runs a tiny sweep end to end and re-reads the cache it wrote.  On
-non-TPU hosts ``ops.py`` transparently falls back to ``interpret=True``.
+``fused``, ``resident``, ``batched`` and ``tuned`` in interpret mode against
+the oracles in ``ref.py`` (tests/test_kernels.py, tests/test_fused.py,
+tests/test_engines.py, tests/test_tuning.py, tests/test_batched.py — the
+last covers stack-vs-vmap-oracle parity incl. heterogeneous convergence and
+the single-``pallas_call`` lowering guarantee), and an autotune smoke job
+runs a tiny sweep — including the ``--group-ts`` group-size axis — end to
+end and re-reads the cache it wrote.  On non-TPU hosts ``ops.py``
+transparently falls back to ``interpret=True``.
 """
-from repro.kernels import engine, ops, ref, specs, tuning
+from repro.kernels import batch_resident, engine, ops, ref, specs, tuning
 from repro.kernels.assign import assign_pallas
+from repro.kernels.batch_resident import (batched_feasible,
+                                          batched_group_size,
+                                          lloyd_solve_batched)
 from repro.kernels.centroid_update import centroid_update_pallas
 from repro.kernels.engine import LloydEngine, available, get_engine, register
 from repro.kernels.fused import lloyd_step_fused
@@ -63,8 +84,9 @@ from repro.kernels.resident import (lloyd_solve_resident, resident_feasible,
 from repro.kernels.specs import DeviceProfile, KernelSpec, get_profile
 from repro.kernels.tuning import TuningCache, autotune_step, lookup_spec
 
-__all__ = ["engine", "ops", "ref", "specs", "tuning",
+__all__ = ["batch_resident", "engine", "ops", "ref", "specs", "tuning",
            "assign_pallas", "centroid_update_pallas",
+           "batched_feasible", "batched_group_size", "lloyd_solve_batched",
            "lloyd_step_fused", "lloyd_solve_resident", "resident_feasible",
            "resident_vmem_bytes", "LloydEngine", "available", "get_engine",
            "register", "DeviceProfile", "KernelSpec", "get_profile",

@@ -1,0 +1,275 @@
+"""Pallas TPU kernel: batched-resident S2 megakernel — one pipelined launch
+per reducer *stack*.
+
+The resident kernel (``resident.py``) runs one subset's whole Lloyd loop in a
+single launch, but a device's S2 workload is a STACK of M reducers, and
+``jax.vmap`` turns the stack into a serialized grid of single-block kernels:
+no overlap between streaming subset g+1 from HBM and iterating subset g, and
+paper-sized subsets (a few hundred points) drive the MXU with tiny matmuls at
+a few percent utilization.  This kernel finishes the paper's
+"one single MapReduce job with much more reducers" argument at the device
+level — the same many-small-tasks aggregation as Ene et al.'s fast-clustering
+rounds: ONE ``pallas_call`` whose grid iterates over *groups* of T subsets,
+so the per-stack launch count drops M -> ceil(M/T) and every matmul is
+group-batched.
+
+TPU mapping (grid = ``(ceil(M/T),)``, one group per step):
+
+  * each grid step holds a ``(T, S, d)`` points block, the shared ``(k, d)``
+    init centroids, and per-subset ``(T, k, d)`` carried centroids in VMEM;
+    the assignment and segment-sum matmuls are ``dot_general`` contractions
+    with a batch dimension over the group, so the MXU sees one
+    budget-sized batched op instead of T tiny ones;
+  * the convergence loop is a single ``lax.while_loop`` over the whole
+    group: per-subset (iteration count, shift) state advances only while
+    that subset is still active, so each subset's trajectory is bit-for-bit
+    the single-subset resident kernel's — heterogeneous convergence inside
+    a group freezes finished subsets instead of perturbing them;
+  * per-subset iteration/convergence state — trip counts and the
+    ``shift <= tol`` predicate — is scalar state, so it leaves the kernel
+    through SMEM-space ``(T, 1)`` int32 output blocks: the batched
+    analogue of the single-subset kernel's SMEM scalars;
+  * Pallas's automatic input pipelining double-buffers group g+1's points
+    block from HBM while group g iterates — the HBM stream overlaps compute
+    instead of serializing with it.
+
+Padding: d to the 128-lane boundary, S and k to 8 sublanes (identical to
+``resident_tile_shapes``); M pads up to a multiple of T with all-zero-weight
+subsets that converge on their first trip and are sliced off.  Group size T
+comes from the :class:`~repro.kernels.specs.DeviceProfile` VMEM budget
+(:func:`batched_group_size` fills the budget instead of the ~2% one subset
+uses) unless a tuned ``KernelSpec.group_t`` from the autotuning cache
+overrides it — see ``kernels/tuning.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import specs
+from repro.kernels.resident import resident_tile_shapes, resident_vmem_bytes
+from repro.kernels.specs import F32
+
+
+def batched_group_vmem_bytes(t: int, s: int, d: int, k: int) -> int:
+    """f32 working-set bytes of one grid step holding a group of ``t``
+    subsets: t subset-solve working sets plus the shared (k, d) init block."""
+    _, k_pad, d_pad = resident_tile_shapes(s, d, k)
+    return t * resident_vmem_bytes(s, d, k) + k_pad * d_pad * F32
+
+
+def batched_feasible(s: int, d: int, k: int,
+                     budget: int | None = None) -> bool:
+    """Can at least a T=1 group stay VMEM-resident for this subset shape?"""
+    if budget is None:
+        budget = specs.get_profile().budget_bytes
+    return batched_group_vmem_bytes(1, s, d, k) <= budget
+
+
+def batched_group_size(m: int, s: int, d: int, k: int,
+                       budget: int | None = None) -> int:
+    """Largest group size T <= M that fits the device budget (0: infeasible).
+
+    This is the budget-filling knob: one subset's working set is typically a
+    few percent of VMEM, so the group batches as many reducers per grid step
+    as the :class:`DeviceProfile` budget affords — the tuner can override
+    the result with a cached ``KernelSpec.group_t`` winner.
+    """
+    if budget is None:
+        budget = specs.get_profile().budget_bytes
+    _, k_pad, d_pad = resident_tile_shapes(s, d, k)
+    fixed = k_pad * d_pad * F32                   # shared init-centroid block
+    per_t = resident_vmem_bytes(s, d, k)
+    if fixed + per_t > budget:
+        return 0
+    return min(m, (budget - fixed) // per_t)
+
+
+def _batched_kernel(x_ref, c0_ref, w_ref,
+                    c_out_ref, sse_ref, iters_ref, conv_ref, *,
+                    k_actual: int, max_iters: int, tol: float,
+                    carry_dtype):
+    # deferred (trace-time) imports, exactly like the single-subset kernel:
+    # divide_or_keep and centroid_shift have ONE definition across host
+    # loop / oracle / resident kernel / this kernel — vmap gives them the
+    # group batch dim, so the bit-for-bit parity contract rests on shared
+    # code, not on a hand-copied formula staying in sync
+    from repro.core.metrics import centroid_shift
+    from repro.kernels.ref import divide_or_keep
+    t, s_pad, d_pad = x_ref.shape
+    k_pad = c0_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32)                     # (t, s_pad, d_pad)
+    w = w_ref[...].astype(jnp.float32)                     # (t, s_pad)
+    x2 = jnp.sum(x * x, axis=2)                            # (t, s_pad)
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, s_pad, k_pad), 2)
+
+    def assign_and_reduce(c):
+        """One group-batched Lloyd pass -> (sums, counts, sse) — the
+        single-subset resident pass with a batch dim over the group, so the
+        MXU contractions are (t, s, d) x (t, k, d) batched dots."""
+        cn = jnp.sum(c * c, axis=2)[:, None, :]            # (t, 1, k_pad)
+        xc = jax.lax.dot_general(
+            x, c, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)            # (t, s_pad, k_pad)
+        s = cn - 2.0 * xc
+        s = jnp.where(col < k_actual, s, jnp.inf)          # mask padded centroids
+        best = jnp.min(s, axis=2)
+        idx = jnp.argmin(s, axis=2).astype(jnp.int32)
+        onehot = (idx[:, :, None] == col).astype(jnp.float32) * w[:, :, None]
+        sums = jax.lax.dot_general(
+            onehot, x, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)            # (t, k_pad, d_pad)
+        counts = jnp.sum(onehot, axis=1)                   # (t, k_pad)
+        mind = jnp.maximum(best + x2, 0.0)                 # row-constant restored
+        return sums, counts, jnp.sum(w * mind, axis=1)     # sse (t,)
+
+    def cond(carry):
+        _, it, shift = carry
+        return jnp.any(jnp.logical_and(it < max_iters, shift > tol))
+
+    def body(carry):
+        c, it, shift = carry
+        # per-subset activity: a converged (or max-iters) subset's centroids,
+        # trip count and shift freeze while its groupmates keep iterating —
+        # this is what makes each lane bit-for-bit the single-subset solve
+        active = jnp.logical_and(it < max_iters, shift > tol)        # (t,)
+        sums, counts, _ = assign_and_reduce(c)
+        new_c = jax.vmap(divide_or_keep)(sums, counts, c)
+        # round-trip through the caller's carry dtype so feasible, fallback
+        # and single-subset solves are bit-for-bit consistent (f32 identity)
+        new_c = new_c.astype(carry_dtype).astype(jnp.float32)
+        new_shift = jax.vmap(centroid_shift)(new_c, c)
+        c = jnp.where(active[:, None, None], new_c, c)
+        it = it + active.astype(jnp.int32)
+        shift = jnp.where(active, new_shift, shift)
+        return c, it, shift
+
+    c0 = jnp.broadcast_to(c0_ref[...].astype(jnp.float32),
+                          (t, k_pad, d_pad))
+    final_c, final_it, final_shift = jax.lax.while_loop(
+        cond, body,
+        (c0, jnp.zeros((t,), jnp.int32), jnp.full((t,), jnp.inf,
+                                                  jnp.float32)))
+
+    # final statistics with the converged centroids — one extra group-batched
+    # assignment pass that never leaves VMEM
+    _, _, final_sse = assign_and_reduce(final_c)
+    c_out_ref[...] = final_c
+    sse_ref[...] = final_sse[:, None]
+    # per-subset (trip count, converged) state is scalar state, so its
+    # output blocks live in SMEM (see out_specs); t is static — the scalar
+    # stores unroll
+    for u in range(t):
+        iters_ref[u, 0] = final_it[u]
+        conv_ref[u, 0] = jnp.where(final_shift[u] <= tol, 1, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group_t", "max_iters", "tol",
+                                    "interpret"))
+def _lloyd_solve_batched(subsets: jnp.ndarray,
+                         centroids: jnp.ndarray,
+                         weights: jnp.ndarray | None = None,
+                         *,
+                         group_t: int,
+                         max_iters: int = 300,
+                         tol: float = 1e-6,
+                         interpret: bool = False):
+    m, s, d = subsets.shape
+    k = centroids.shape[0]
+    t = max(1, min(int(group_t), m))
+    s_pad, k_pad, d_pad = resident_tile_shapes(s, d, k)
+    m_pad = -(-m // t) * t                    # pad with zero-weight subsets
+
+    x = jnp.zeros((m_pad, s_pad, d_pad), subsets.dtype)
+    x = x.at[:m, :s, :d].set(subsets)
+    c = jnp.zeros((k_pad, d_pad), centroids.dtype).at[:k, :d].set(centroids)
+    w = jnp.zeros((m_pad, s_pad), jnp.float32)
+    w = w.at[:m, :s].set(1.0 if weights is None
+                         else weights.astype(jnp.float32))
+
+    c_out, sse, iters, conv = pl.pallas_call(
+        functools.partial(_batched_kernel, k_actual=k,
+                          max_iters=max_iters, tol=tol,
+                          carry_dtype=centroids.dtype),
+        grid=(m_pad // t,),
+        in_specs=[
+            pl.BlockSpec((t, s_pad, d_pad), lambda g: (g, 0, 0)),
+            pl.BlockSpec((k_pad, d_pad), lambda g: (0, 0)),
+            pl.BlockSpec((t, s_pad), lambda g: (g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t, k_pad, d_pad), lambda g: (g, 0, 0)),
+            pl.BlockSpec((t, 1), lambda g: (g, 0)),
+            # per-subset (trips, converged) is scalar loop state -> SMEM
+            pl.BlockSpec((t, 1), lambda g: (g, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((t, 1), lambda g: (g, 0), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad, k_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((m_pad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, c, w)
+
+    return (c_out[:m, :k, :d].astype(centroids.dtype), sse[:m, 0],
+            iters[:m, 0], conv[:m, 0].astype(bool))
+
+
+def lloyd_solve_batched(subsets: jnp.ndarray,
+                        centroids: jnp.ndarray,
+                        weights: jnp.ndarray | None = None,
+                        *,
+                        group_t: int | None = None,
+                        max_iters: int = 300,
+                        tol: float = 1e-6,
+                        interpret: bool | None = None,
+                        spec: specs.KernelSpec | None = None):
+    """A whole STACK of Lloyd solves in ONE kernel launch:
+    (M,S,d),(k,d)[,(M,S)] -> (centroids (M,k,d), sse (M,), iters (M,) i32,
+    converged (M,) bool).
+
+    Per-subset semantics are exactly :func:`~repro.kernels.resident
+    .lloyd_solve_resident`'s — same stop criterion, same keep-old-centroid
+    policy, same carry-dtype round-trip — so every lane matches the
+    vmap-of-resident oracle bit-for-bit, including groups whose subsets
+    converge at different iterations.  ``group_t`` is the subsets-per-grid-
+    step batch (default: fill the DeviceProfile budget via
+    :func:`batched_group_size`; a :class:`KernelSpec` with ``group_t`` set —
+    the tuner's cached winner — overrides).  When no ``group_t`` is given
+    and even a T=1 group busts the budget this raises ``ValueError`` rather
+    than launching over budget — check :func:`batched_feasible` first; the
+    ``batched`` engine does, and falls back to the vmap-of-solve path.
+    An explicit ``group_t`` is always honored (interpret-mode benches and
+    tests rely on that).
+    """
+    m, s, d = subsets.shape
+    k = centroids.shape[0]
+    if group_t is None and spec is not None:
+        group_t = spec.group_t
+    if group_t is None:
+        group_t = batched_group_size(m, s, d, k)
+        if group_t <= 0:
+            # never silently clamp an infeasible auto-derivation to T=1 and
+            # launch over budget — an explicit group_t is the caller taking
+            # responsibility (interpret-mode benches do), absence is not
+            raise ValueError(
+                f"no feasible group size for stack (m={m}, s={s}, d={d}, "
+                f"k={k}): one subset's solve working set "
+                f"({resident_vmem_bytes(s, d, k)} B) busts the device "
+                f"budget ({specs.get_profile().budget_bytes} B) — check "
+                f"batched_feasible() first and fall back to vmap-of-solve "
+                f"(the 'batched' engine does this automatically)")
+    if interpret is None:
+        interpret = (spec.interpret if spec is not None
+                     and spec.interpret is not None else False)
+    return _lloyd_solve_batched(subsets, centroids, weights,
+                                group_t=int(group_t),
+                                max_iters=max_iters, tol=tol,
+                                interpret=bool(interpret))

@@ -17,6 +17,14 @@ protocol:
     ``step`` from a host-side ``lax.while_loop``; engines that own their
     convergence loop (``resident``) override it, which is how the loop moves
     from core/ down into the kernel layer.
+  * ``solve_batched(subsets, init, weights, max_iters, tol, reseed_empty) ->
+    (centroids (M,k,d), sse (M,), iters (M,), converged (M,))`` — a whole
+    STACK of solves (one device's S2 reducer stack).  The default is a vmap
+    of ``solve`` (so per-subset engines behave exactly as before — for
+    ``resident`` that means a serialized grid of single-block kernels); the
+    ``batched`` engine overrides it with the group-batched megakernel
+    (``kernels/batch_resident.py``) so the stack becomes ONE pipelined
+    launch.
   * ``resolve_spec(points, centroids) -> KernelSpec | None`` — the kernel-
     geometry hook.  EVERY engine's kernel launches route their block
     geometry through this method, so tuned geometry is one override away
@@ -24,9 +32,9 @@ protocol:
     default), the ``tuned`` engine (``kernels/tuning.py``) returns the
     autotuning cache's winner for the launch shape.
 
-Engines registered: ``jnp`` | ``pallas`` | ``fused`` | ``resident`` here,
-plus ``tuned`` from ``kernels/tuning.py`` — see ``kernels/__init__`` for
-when to pick each.
+Engines registered: ``jnp`` | ``pallas`` | ``fused`` | ``resident`` |
+``batched`` here, plus ``tuned`` from ``kernels/tuning.py`` — see
+``kernels/__init__`` for when to pick each.
 """
 from __future__ import annotations
 
@@ -159,6 +167,24 @@ class LloydEngine:
         total = self.sse(points, final_c, weights)
         return final_c, total, iters, shift <= tol
 
+    def solve_batched(self, subsets, init_centroids, weights=None, *,
+                      max_iters: int, tol: float, reseed_empty: bool = False):
+        """A stack of solves: (M,S,d),(k,d)[,(M,S)] ->
+        (centroids (M,k,d), sse (M,), iters (M,) i32, converged (M,) bool).
+
+        Default: vmap of ``solve`` over the stack — every per-subset engine
+        composes under vmap unchanged (for ``resident`` this is the
+        serialized grid of single-block kernels the ``batched`` engine
+        replaces with one pipelined multi-group launch).
+        """
+        if weights is None:
+            return jax.vmap(lambda p: self.solve(
+                p, init_centroids, None, max_iters=max_iters, tol=tol,
+                reseed_empty=reseed_empty))(subsets)
+        return jax.vmap(lambda p, w: self.solve(
+            p, init_centroids, w, max_iters=max_iters, tol=tol,
+            reseed_empty=reseed_empty))(subsets, weights)
+
 
 class JnpEngine(LloydEngine):
     """Pure-jnp reference — ground truth for every other engine, and the
@@ -246,7 +272,57 @@ class ResidentEngine(FusedEngine):
         return final_c.astype(init_centroids.dtype), total, iters, conv
 
 
+class BatchedEngine(ResidentEngine):
+    """Batched-resident megakernel for S2 reducer stacks: ONE pipelined
+    ``pallas_call`` whose grid iterates over groups of T subsets, each grid
+    step running its whole group's convergence loop on-chip with
+    group-batched MXU matmuls while Pallas double-buffers the next group's
+    points from HBM.  Per-stack launch count drops M -> ceil(M/T); per-
+    subset semantics stay bit-for-bit the resident kernel's.  Single solves
+    (``solve``) inherit the resident path; only the stack moves into the
+    megakernel.  Falls back to the vmap-of-solve path (and from there to
+    fused per-step loops) when even a T=1 group busts the DeviceProfile
+    VMEM budget, or when empty-cluster reseeding is on."""
+
+    name = "batched"
+
+    def resolve_group_size(self, m: int, s: int, d: int, k: int, dtype):
+        """Subsets per grid step for an (M, S, d, k) stack — 0: infeasible.
+
+        The tuning cache's ``group_t`` winner (keyed with the ``|m<bucket>``
+        stack extension) takes precedence; otherwise fill the DeviceProfile
+        budget via ``batched_group_size``.  Cached winners clamp to what the
+        local budget actually affords, so a cache tuned on a bigger chip is
+        always safe to consume.
+        """
+        from repro.kernels import batch_resident
+        from repro.kernels import tuning      # deferred: tuning imports us
+        cap = batch_resident.batched_group_size(m, s, d, k)
+        if cap <= 0:
+            return 0
+        cached = tuning.lookup_group_t(s, d, k, m, dtype)
+        return min(cached, cap) if cached else cap
+
+    def solve_batched(self, subsets, init_centroids, weights=None, *,
+                      max_iters: int, tol: float, reseed_empty: bool = False):
+        from repro.kernels import ops
+        m, s, d = subsets.shape
+        k = init_centroids.shape[0]
+        t = (0 if reseed_empty
+             else self.resolve_group_size(m, s, d, k, subsets.dtype))
+        if t <= 0:
+            return super().solve_batched(subsets, init_centroids, weights,
+                                         max_iters=max_iters, tol=tol,
+                                         reseed_empty=reseed_empty)
+        final_c, sse, iters, conv = ops.lloyd_solve_batched(
+            subsets, init_centroids, weights, group_t=t,
+            max_iters=max_iters, tol=tol,
+            spec=self.resolve_spec(subsets, init_centroids))
+        return final_c.astype(init_centroids.dtype), sse, iters, conv
+
+
 register(JnpEngine())
 register(PallasEngine())
 register(FusedEngine())
 register(ResidentEngine())
+register(BatchedEngine())

@@ -19,6 +19,8 @@ import jax
 
 from repro.kernels import ref, specs
 from repro.kernels.assign import assign_pallas
+from repro.kernels.batch_resident import (
+    lloyd_solve_batched as _lloyd_solve_batched_kernel)
 from repro.kernels.centroid_update import centroid_update_pallas
 from repro.kernels.fused import lloyd_step_fused as _lloyd_step_fused
 from repro.kernels.resident import lloyd_solve_resident as _lloyd_solve_resident
@@ -93,6 +95,26 @@ def lloyd_solve_resident(points, centroids, weights=None, *,
     return _lloyd_solve_resident(points, centroids, weights,
                                  max_iters=max_iters, tol=tol,
                                  interpret=interpret)
+
+
+def lloyd_solve_batched(subsets, centroids, weights=None, *,
+                        group_t: int | None = None,
+                        max_iters: int = 300, tol: float = 1e-6,
+                        spec: KernelSpec | None = None,
+                        interpret: bool | None = None):
+    """A whole STACK of Lloyd solves in ONE pipelined kernel launch:
+    (M,S,d),(k,d)[,(M,S)] -> (centroids (M,k,d), sse (M,), iters (M,) i32,
+    converged (M,) bool).  ``group_t`` is the subsets-per-grid-step batch
+    (default: the spec's tuned ``group_t``, else fill the DeviceProfile
+    budget); see kernels/batch_resident.py for the feasibility contract."""
+    if interpret is None:
+        interpret = (spec.interpret if spec is not None else None)
+    if interpret is None:
+        interpret = _interpret_default()
+    return _lloyd_solve_batched_kernel(subsets, centroids, weights,
+                                       group_t=group_t,
+                                       max_iters=max_iters, tol=tol,
+                                       spec=spec, interpret=interpret)
 
 
 # re-export oracles so callers can switch implementations uniformly

@@ -55,12 +55,20 @@ class KernelSpec:
 
     ``interpret=None`` means "caller's policy" (``ops.py`` resolves it to
     compiled-on-TPU / interpreted-elsewhere); a concrete bool pins it.
+
+    ``group_t`` is the batched-resident megakernel's subsets-per-grid-step
+    group size (``kernels/batch_resident.py``); ``None`` means "fill the
+    DeviceProfile VMEM budget" (``batched_group_size``).  Only the batched
+    stack kernel reads it — per-subset kernels ignore it — and the tuner
+    persists swept winners through it (cache keys carry an ``|m<bucket>``
+    stack extension).
     """
 
     block_n: int = 256
     block_k: int = 128
     acc_dtype: str = "float32"
     interpret: bool | None = None
+    group_t: int | None = None
 
     def __post_init__(self):
         for name in ("block_n", "block_k"):
@@ -72,6 +80,10 @@ class KernelSpec:
         if self.acc_dtype not in _ACC_DTYPES:
             raise ValueError(f"acc_dtype={self.acc_dtype!r}: "
                              f"expected one of {_ACC_DTYPES}")
+        if self.group_t is not None and (
+                not isinstance(self.group_t, int) or self.group_t < 1):
+            raise ValueError(f"group_t={self.group_t!r}: group sizes must "
+                             f"be ints >= 1 (or None for budget-derived)")
 
     def replace(self, **kw) -> "KernelSpec":
         return dataclasses.replace(self, **kw)
@@ -134,13 +146,18 @@ class KernelSpec:
     # ---- cache (de)serialization ----
 
     def to_json(self) -> dict:
-        return {"block_n": self.block_n, "block_k": self.block_k,
-                "acc_dtype": self.acc_dtype}
+        out = {"block_n": self.block_n, "block_k": self.block_k,
+               "acc_dtype": self.acc_dtype}
+        if self.group_t is not None:       # absent = budget-derived, so old
+            out["group_t"] = self.group_t  # caches stay schema-compatible
+        return out
 
     @classmethod
     def from_json(cls, obj: dict) -> "KernelSpec":
+        group_t = obj.get("group_t")
         return cls(block_n=int(obj["block_n"]), block_k=int(obj["block_k"]),
-                   acc_dtype=str(obj.get("acc_dtype", "float32")))
+                   acc_dtype=str(obj.get("acc_dtype", "float32")),
+                   group_t=None if group_t is None else int(group_t))
 
 
 # module defaults — the historical per-kernel constants, now in ONE place
@@ -213,6 +230,14 @@ class DeviceProfile:
         """Largest n keeping a (d, k) solve resident — the S2 sizing knob."""
         from repro.kernels import resident
         return resident.max_resident_points(d, k, self.budget_bytes)
+
+    def batched_group_size(self, m: int, s: int, d: int, k: int) -> int:
+        """Subsets per grid step that fill this chip's budget for an
+        (M, S, d, k) reducer stack (0: even one subset does not fit) — the
+        batched megakernel's group-sizing knob."""
+        from repro.kernels import batch_resident
+        return batch_resident.batched_group_size(m, s, d, k,
+                                                 self.budget_bytes)
 
 
 # Approximate published per-core VMEM by device_kind (longest-prefix match on

@@ -13,6 +13,12 @@ tile shape the chip admits:
     identical at ``n=300`` — no point timing both);
   * :func:`autotune_step` times one fused Lloyd pass per surviving candidate
     and records the winner;
+  * :func:`autotune_batched` sweeps the batched-resident megakernel's
+    group-size axis (``candidate_group_ts``: the static GROUP_TS grid plus
+    the budget-derived fill-the-budget point) for a whole (m, s, d, k)
+    reducer stack and persists a winner whose ``KernelSpec.group_t`` is set,
+    keyed with the ``|m<bucket>`` stack extension — the ``batched`` engine's
+    group sizing consults it via :func:`lookup_group_t`;
   * :class:`TuningCache` persists winners as JSON under
     ``experiments/tuning/kernel_specs.json`` (``REPRO_TUNING_CACHE``
     overrides the path), keyed by
@@ -49,6 +55,9 @@ CACHE_VERSION = 1
 # sweep grid defaults: sublane-aligned powers of two around the MXU shape
 BLOCK_NS = (64, 128, 256, 512)
 BLOCK_KS = (64, 128, 256)
+# group sizes for the batched-resident stack sweep (the budget-derived
+# maximum always joins the grid, so big-VMEM chips are never under-swept)
+GROUP_TS = (1, 2, 4, 8, 16)
 
 
 def default_cache_path() -> Path:
@@ -66,9 +75,14 @@ def n_bucket(n: int) -> int:
     return max(8, 1 << max(0, int(n - 1).bit_length()))
 
 
-def cache_key(device_kind: str, dtype, n: int, d: int, k: int) -> str:
+def cache_key(device_kind: str, dtype, n: int, d: int, k: int,
+              m: int | None = None) -> str:
+    """``m`` extends the key for batched-STACK entries (n is then the subset
+    size, m the stack's reducer count, bucketed like n) — single-solve keys
+    are unchanged, so version-1 caches keep resolving."""
     dt = jnp.dtype(dtype).name
-    return f"{device_kind.lower().strip()}|{dt}|n{n_bucket(n)}|d{d}|k{k}"
+    key = f"{device_kind.lower().strip()}|{dt}|n{n_bucket(n)}|d{d}|k{k}"
+    return key if m is None else f"{key}|m{n_bucket(m)}"
 
 
 @dataclasses.dataclass
@@ -151,14 +165,24 @@ def reload_cache() -> TuningCache:
 
 
 def lookup_spec(n: int, d: int, k: int, dtype=jnp.float32,
-                device_kind: str | None = None) -> KernelSpec | None:
+                device_kind: str | None = None,
+                m: int | None = None) -> KernelSpec | None:
     """Cached winner for this launch shape, or ``None`` (use defaults).
 
     Pure host-side work on static shape/dtype info — safe at trace time,
-    which is when engines call it.
+    which is when engines call it.  With ``m``, resolves the batched-stack
+    entry (n = subset size, m = reducers in the stack) instead.
     """
     kind = device_kind or specs.get_profile().device_kind
-    return _active_cache().get(cache_key(kind, dtype, n, d, k))
+    return _active_cache().get(cache_key(kind, dtype, n, d, k, m=m))
+
+
+def lookup_group_t(s: int, d: int, k: int, m: int, dtype=jnp.float32,
+                   device_kind: str | None = None) -> int | None:
+    """Tuned group size for an (m, s, d, k) reducer stack, or ``None``
+    (budget-derived) — what the ``batched`` engine's group sizing consults."""
+    spec = lookup_spec(s, d, k, dtype, device_kind, m=m)
+    return None if spec is None else spec.group_t
 
 
 # ------------------------------------------------------------------ sweep ---
@@ -252,6 +276,85 @@ def autotune_step(n: int, d: int, k: int, *,
         cache.put(key, best["spec"], time_us=round(best["time_us"], 2),
                   n=n, d=d, k=k, candidates=len(cands))
     return best["spec"], rows
+
+
+def candidate_group_ts(m: int, s: int, d: int, k: int,
+                       profile: DeviceProfile | None = None,
+                       group_ts=GROUP_TS) -> list[int]:
+    """The pruned group-size grid for one (m, s, d, k) reducer stack.
+
+    Prunes groups whose per-grid-step working set busts the device budget
+    and clamps to the stack size; the budget-derived maximum
+    (``batched_group_size``) always competes so the sweep covers the
+    fill-the-budget point even when the static grid stops short.  Returns
+    ``[]`` when even a single subset does not fit (the engine's fallback).
+    """
+    from repro.kernels import batch_resident
+    profile = profile or specs.get_profile()
+    cap = batch_resident.batched_group_size(m, s, d, k, profile.budget_bytes)
+    if cap <= 0:
+        return []
+    out = []
+    for t in group_ts:
+        t = min(int(t), m)
+        if t >= 1 and t <= cap and t not in out:
+            out.append(t)
+    if cap not in out and cap <= m:
+        out.append(cap)
+    return sorted(out)
+
+
+def autotune_batched(m: int, s: int, d: int, k: int, *,
+                     dtype=jnp.float32,
+                     profile: DeviceProfile | None = None,
+                     cache: TuningCache | None = None,
+                     repeats: int = 3,
+                     interpret: bool | None = None,
+                     group_ts=GROUP_TS,
+                     solve_iters: int = 8,
+                     measure=None,
+                     seed: int = 0):
+    """Sweep the group-size axis of the batched-resident megakernel for one
+    (m, s, d, k) stack and record the winner (a spec whose ``group_t`` is
+    set) under the ``|m<bucket>``-extended cache key.  Returns
+    ``(best_spec | None, rows)`` — ``None`` when no group fits VMEM.
+
+    ``measure(t) -> seconds`` may be injected; the default times one whole
+    fixed-trip stack solve (``tol=0`` so every candidate pays identical
+    iteration counts).
+    """
+    from repro.kernels import batch_resident
+    profile = profile or specs.get_profile()
+    cands = candidate_group_ts(m, s, d, k, profile, group_ts)
+    if not cands:
+        return None, []
+    if measure is None:
+        from repro.kernels import ops
+        kx, kc = jax.random.split(jax.random.key(seed + m * s * d * k))
+        x = jax.random.normal(kx, (m, s, d), jnp.float32).astype(dtype)
+        c = jax.random.normal(kc, (k, d), jnp.float32).astype(dtype)
+
+        def measure(t):
+            return _timeit(
+                lambda: ops.lloyd_solve_batched(
+                    x, c, group_t=t, max_iters=solve_iters, tol=0.0,
+                    interpret=interpret)[0],
+                repeats=repeats)
+
+    rows = []
+    for t in cands:
+        rows.append({
+            "group_t": t, "time_us": measure(t) * 1e6,
+            "launches": -(-m // t),
+            "vmem_bytes": batch_resident.batched_group_vmem_bytes(t, s, d, k),
+        })
+    rows.sort(key=lambda r: r["time_us"])
+    best = specs.DEFAULT_SPEC.replace(group_t=rows[0]["group_t"])
+    if cache is not None:
+        cache.put(cache_key(profile.device_kind, dtype, s, d, k, m=m), best,
+                  time_us=round(rows[0]["time_us"], 2),
+                  m=m, n=s, d=d, k=k, candidates=len(cands))
+    return best, rows
 
 
 # ----------------------------------------------------------- tuned engine ---

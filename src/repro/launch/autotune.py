@@ -20,6 +20,11 @@ Examples::
     # CI smoke: tiny shape, pruned grid, interpret mode, throwaway cache
     python -m repro.launch.autotune --sizes 64x4x4 --repeats 1 \
         --block-ns 64,128 --block-ks 64 --cache /tmp/tuning.json
+
+    # also sweep the batched megakernel's group-size axis: each size doubles
+    # as a subset shape SxDxK, solved as a --stack-m reducer stack
+    python -m repro.launch.autotune --sizes 256x64x128 \
+        --group-ts 1,2,4,8 --stack-m 64
 """
 from __future__ import annotations
 
@@ -62,6 +67,15 @@ def main(argv=None):
     ap.add_argument("--acc-dtypes", type=lambda s: tuple(s.split(",")),
                     default=("float32",), metavar="DT1,DT2",
                     help="on-chip acc dtypes to sweep (float32[,bfloat16])")
+    ap.add_argument("--group-ts", type=_parse_ints, default=None,
+                    metavar="T1,T2,...",
+                    help="ALSO sweep the batched megakernel's group-size "
+                         "axis over these subsets-per-grid-step values: "
+                         "each NxDxK is re-read as a subset shape SxDxK and "
+                         "solved as a --stack-m sized stack (winner cached "
+                         "with group_t set under the |m<bucket> key)")
+    ap.add_argument("--stack-m", type=int, default=8, metavar="M",
+                    help="reducer-stack size for the --group-ts sweep")
     ap.add_argument("--cache", default=None,
                     help="cache path (default: REPRO_TUNING_CACHE or "
                          "experiments/tuning/kernel_specs.json)")
@@ -98,6 +112,27 @@ def main(argv=None):
               f"acc={best.acc_dtype} "
               f"({rows[0]['time_us']:.0f} us, {speedup:.2f}x vs default)")
 
+    # the batched megakernel's group-size axis: every size doubles as an
+    # SxDxK subset shape solved as an M-stack (skipped shapes where even a
+    # T=1 group busts the budget report as such and stay out of the cache)
+    batched_swept = []
+    if args.group_ts:
+        for s, d, k in args.sizes:
+            best, rows = tuning.autotune_batched(
+                args.stack_m, s, d, k, dtype=dtype, profile=profile,
+                cache=cache, repeats=args.repeats,
+                interpret=True if args.interpret else None,
+                group_ts=args.group_ts)
+            if best is None:
+                print(f"m{args.stack_m} s{s} d{d} k{k}: no feasible group "
+                      f"(budget {profile.budget_bytes >> 20} MiB) — skipped")
+                continue
+            batched_swept.append((s, d, k))
+            print(f"m{args.stack_m} s{s} d{d} k{k}: {len(rows)} group sizes "
+                  f"-> group_t={best.group_t} "
+                  f"({rows[0]['launches']} launches/stack, "
+                  f"{rows[0]['time_us']:.0f} us)")
+
     path = cache.save()
     print(f"wrote {len(cache.entries)} entries to {path}")
 
@@ -108,7 +143,15 @@ def main(argv=None):
         key = tuning.cache_key(profile.device_kind, dtype, n, d, k)
         spec = fresh.get(key)
         assert spec is not None, f"cache round-trip failed for {key}"
-    print(f"cache round-trip OK ({len(args.sizes)} shapes resolve)")
+    for s, d, k in batched_swept:
+        key = tuning.cache_key(profile.device_kind, dtype, s, d, k,
+                               m=args.stack_m)
+        spec = fresh.get(key)
+        assert spec is not None and spec.group_t, \
+            f"batched cache round-trip failed for {key}"
+    print(f"cache round-trip OK ({len(args.sizes)} shapes"
+          + (f" + {len(batched_swept)} stacks" if batched_swept else "")
+          + " resolve)")
 
 
 if __name__ == "__main__":

@@ -101,13 +101,15 @@ def _record(name, mesh_tag, lowered, compiled, extra=None):
 def lower_all(multi_pod: bool, backend: str = "jnp"):
     """Lower the dry-run cells.  ``backend`` names the Lloyd engine for
     pkmeans-iter and s2s3 (any name in the ``kernels.engine`` registry —
-    'jnp' | 'pallas' | 'fused' | 'resident' | 'tuned'); non-default
-    backends skip the
+    'jnp' | 'pallas' | 'fused' | 'resident' | 'batched' | 'tuned');
+    non-default backends skip the
     backend-independent S1 cells and write records suffixed ``__<backend>``
     so perf_variants can diff them against the jnp baselines.  With
     'resident', each S2 reducer whose subset fits VMEM lowers as ONE kernel
     launch per solve (the engine's feasibility guard decides — infeasible
-    shapes lower the fused per-step loop instead)."""
+    shapes lower the fused per-step loop instead); with 'batched', the whole
+    per-device reducer stack lowers as one pipelined multi-group launch
+    (same guard, vmap-of-solve fallback)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "x".join(map(str, mesh.devices.shape))
     file_tag = mesh_tag if backend == "jnp" else f"{mesh_tag}__{backend}"

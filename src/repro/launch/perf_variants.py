@@ -15,6 +15,7 @@ are separate records).
 import argparse
 import dataclasses
 import json
+import math
 import time
 
 from repro.configs import ARCHS
@@ -89,6 +90,12 @@ KMEANS_VARIANTS = {
                     "one kernel launch where the subset fits VMEM — points "
                     "stream HBM once per SOLVE, i.e. iters x fewer sweeps "
                     "than the fused per-step kernel"),
+    "C4": dict(backend="batched",
+               note="batched-resident stack megakernel: each device's whole "
+                    "S2 reducer stack is ONE pipelined launch (grid over "
+                    "groups of T subsets, group-batched MXU matmuls, next "
+                    "group's points DMA'd while the current group iterates) "
+                    "— launches drop M -> ceil(M/T) vs the vmap'd C3"),
 }
 
 
@@ -146,6 +153,28 @@ def run_kmeans(tag: str, force: bool = False):
                   f"resident fits n<={n_max} at this (d, k), i.e. "
                   f"M>={m_needed} reducers — the paper's more-reducers knob "
                   f"IS the feasibility knob")
+
+    if backend == "batched":
+        # launches-per-stack: each device's reducer stack collapses from
+        # m_loc single-block grid steps (vmap'd resident) to ceil(m_loc/T)
+        # pipelined groups (benchmarks/kernel_bench.py's stack model)
+        from repro.kernels.batch_resident import (batched_group_size,
+                                                  batched_group_vmem_bytes)
+        n_sub = -(-kmeans_dryrun.N // kmeans_dryrun.M)
+        d, k = kmeans_dryrun.D, kmeans_dryrun.K
+        n_dev = math.prod(int(v) for v in mesh_tag.split("x"))
+        m_loc = kmeans_dryrun.M // n_dev             # subsets per device
+        t = batched_group_size(m_loc, n_sub, d, k)
+        print(f"  per-stack launch model (m_loc={m_loc} reducers/device, "
+              f"subset n={n_sub}, d={d}, k={k}):")
+        if t:
+            print(f"    group_t={t} "
+                  f"({batched_group_vmem_bytes(t, n_sub, d, k):.3e} B/group)"
+                  f": {m_loc} launches -> {-(-m_loc // t)}")
+        else:
+            print(f"    -> one subset alone busts the VMEM budget; stack "
+                  f"falls back to the vmap-of-solve path (size subsets via "
+                  f"more reducers until batched_group_size >= 1)")
     return out
 
 

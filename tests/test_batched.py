@@ -1,0 +1,342 @@
+"""Batched-resident S2 megakernel: one pipelined launch per reducer stack.
+
+The contract under test (see kernels/batch_resident.py): ``solve_batched``
+on an (M, S, d) stack lowers to a SINGLE ``pallas_call`` and matches the
+vmap-of-resident oracle bit-for-bit on centroids/SSE/iters/converged —
+including groups whose subsets converge at different iterations, all-padding
+subsets (ASSE=+inf), bf16 carries, and the fused fallback when even a T=1
+group busts the VMEM budget.  All in interpret mode (the CI kernel gate).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import KMeansParams, kmeans_batched
+from repro.kernels import batch_resident, ops, ref, specs, tuning
+from repro.kernels import engine as engines
+
+
+def _stack(m, s, d, k, dtype=jnp.float32, scale=3.0, seed=1):
+    kx, kc = jax.random.split(jax.random.key(m * s * d * k + seed))
+    x = (jax.random.normal(kx, (m, s, d)) * scale).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * scale).astype(dtype)
+    return x, c
+
+
+def _assert_results_equal(a, b):
+    """Bit-for-bit equality across the whole stacked KMeansResult."""
+    for field, va, vb in zip(a._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(va, np.float32) if va.dtype == jnp.bfloat16 else
+            np.asarray(va),
+            np.asarray(vb, np.float32) if vb.dtype == jnp.bfloat16 else
+            np.asarray(vb),
+            err_msg=field)
+
+
+def _count_pallas_eqns(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if "pallas" in eqn.primitive.name:
+            n += 1
+        for v in eqn.params.values():
+            for u in (v if isinstance(v, (tuple, list)) else (v,)):
+                if type(u).__name__ in ("Jaxpr", "ClosedJaxpr"):
+                    n += _count_pallas_eqns(getattr(u, "jaxpr", u))
+    return n
+
+
+# ------------------------------------------------------------ registration --
+
+def test_batched_engine_registered():
+    assert "batched" in engines.available()
+    eng = engines.get_engine("batched")
+    assert eng.name == "batched"
+    # single solves inherit the resident path — only stacks change
+    assert isinstance(eng, engines.ResidentEngine)
+
+
+# ------------------------------------------------------- single-launch form --
+
+def test_stack_lowers_to_single_pallas_call():
+    """The acceptance contract: a whole (M, S, d) stack is ONE pallas_call
+    in the jaxpr — the per-reducer launches are gone, not hidden."""
+    x, c = _stack(6, 64, 3, 4)
+    w = jnp.ones((6, 64), jnp.float32)
+    eng = engines.get_engine("batched")
+    jaxpr = jax.make_jaxpr(lambda s_, w_, c_: eng.solve_batched(
+        s_, c_, w_, max_iters=10, tol=1e-6))(x, w, c)
+    assert _count_pallas_eqns(jaxpr.jaxpr) == 1
+
+
+def test_group_padding_handles_indivisible_stacks():
+    """M not a multiple of T pads with zero-weight subsets that are sliced
+    off — every real lane still matches its single-subset resident solve."""
+    m, s, d, k = 7, 48, 3, 4
+    x, c = _stack(m, s, d, k)
+    got = ops.lloyd_solve_batched(x, c, group_t=3, max_iters=20, tol=1e-6)
+    for i in range(m):
+        want = ops.lloyd_solve_resident(x[i], c, max_iters=20, tol=1e-6)
+        for g, w_ in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g[i]), np.asarray(w_))
+
+
+# ----------------------------------------------- parity vs the vmap oracle --
+
+@pytest.mark.parametrize("m,s,d,k", [(4, 64, 2, 3), (6, 96, 5, 8),
+                                     (3, 57, 17, 7)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_batched_matches_vmap_resident_oracle(m, s, d, k, masked):
+    """backend='batched' == backend='resident' (the vmap-of-solve path)
+    bit-for-bit through the whole stacked KMeansResult."""
+    x, c = _stack(m, s, d, k)
+    masks = jnp.ones((m, s), bool)
+    if masked:
+        masks = (jax.random.uniform(jax.random.key(7), (m, s)) > 0.25)
+    p = KMeansParams(max_iters=30)
+    r_bat = kmeans_batched(x, masks, c, p._replace(backend="batched"))
+    r_vm = kmeans_batched(x, masks, c, p._replace(backend="resident"))
+    _assert_results_equal(r_bat, r_vm)
+
+
+def test_heterogeneous_convergence_in_one_group():
+    """A subset converging on its first trip shares ONE group with a subset
+    that runs to max_iters: the finished lane must freeze (bit-for-bit its
+    solo solve) while its groupmate keeps iterating."""
+    s, d, k = 16, 2, 2
+    fast = jnp.concatenate([jnp.zeros((8, d)), jnp.full((8, d), 10.0)])
+    slow = jax.random.normal(jax.random.key(4), (s, d)) * 5
+    x = jnp.stack([fast, slow])
+    init = jnp.array([[0.0, 0.0], [10.0, 10.0]])       # exact means of `fast`
+    got = ops.lloyd_solve_batched(x, init, group_t=2, max_iters=2, tol=1e-6)
+    assert int(got[2][0]) == 1 and bool(got[3][0])     # converged on trip 1
+    assert int(got[2][1]) == 2 and not bool(got[3][1])  # hit max_iters
+    for i in range(2):
+        want = ops.lloyd_solve_resident(x[i], init, max_iters=2, tol=1e-6)
+        for g, w_ in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g[i]), np.asarray(w_))
+
+
+def test_all_padding_subset_keeps_asse_inf():
+    """An empty (all-padding) subset must converge immediately with sse=0
+    and ASSE=+inf — it can never win the min-ASSE merge — on both paths."""
+    m, s, d, k = 4, 32, 2, 3
+    x, c = _stack(m, s, d, k)
+    masks = jnp.ones((m, s), bool).at[2].set(False)
+    p = KMeansParams(max_iters=15)
+    r_bat = kmeans_batched(x, masks, c, p._replace(backend="batched"))
+    r_vm = kmeans_batched(x, masks, c, p._replace(backend="resident"))
+    _assert_results_equal(r_bat, r_vm)
+    assert float(r_bat.sse[2]) == 0.0
+    assert np.isinf(float(r_bat.asse[2]))
+    assert int(r_bat.iters[2]) == 1 and bool(r_bat.converged[2])
+
+
+def test_bf16_carry_roundtrip():
+    """bf16 stacks round-trip the centroid carry through the caller's dtype
+    every iteration exactly like the single-subset kernel, so the batched
+    and vmap paths stay bit-for-bit identical in bf16 too."""
+    m, s, d, k = 4, 64, 4, 4
+    x, c = _stack(m, s, d, k, dtype=jnp.bfloat16)
+    masks = jnp.ones((m, s), bool).at[1, 40:].set(False)
+    p = KMeansParams(max_iters=25)
+    r_bat = kmeans_batched(x, masks, c, p._replace(backend="batched"))
+    r_vm = kmeans_batched(x, masks, c, p._replace(backend="resident"))
+    assert r_bat.centroids.dtype == jnp.bfloat16
+    _assert_results_equal(r_bat, r_vm)
+
+
+def test_batched_solve_hits_max_iters():
+    x, c = _stack(3, 48, 3, 4)
+    _, _, it, conv = ops.lloyd_solve_batched(x, c, max_iters=3, tol=0.0)
+    assert all(int(i) == 3 for i in it)
+    assert not any(bool(v) for v in conv)
+
+
+def test_hypothesis_batched_vs_vmap_oracle():
+    """hypothesis sweep: random stacks/masks/dtypes/group sizes — the
+    megakernel vs the vmap oracle, bit-for-bit, every example."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the 'dev' extra (pip install -e '.[dev]')")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.sampled_from([(3, 48, 2, 3), (5, 64, 3, 4), (4, 40, 5, 6)]),
+           st.sampled_from([jnp.float32, jnp.bfloat16]),
+           st.booleans(), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def prop(shape, dtype, masked, seed):
+        m, s, d, k = shape
+        x, c = _stack(m, s, d, k, dtype=dtype, seed=seed % 1000)
+        masks = jnp.ones((m, s), bool)
+        if masked:
+            masks = (jax.random.uniform(jax.random.key(seed % 997),
+                                        (m, s)) > 0.3)
+        p = KMeansParams(max_iters=12)
+        r_bat = kmeans_batched(x, masks, c, p._replace(backend="batched"))
+        r_vm = kmeans_batched(x, masks, c, p._replace(backend="resident"))
+        _assert_results_equal(r_bat, r_vm)
+
+    prop()
+
+
+# --------------------------------------------------- feasibility + sizing --
+
+def test_group_vmem_model_and_sizing():
+    s, d, k = 258, 64, 64                        # paper-sized subsets
+    b1 = batch_resident.batched_group_vmem_bytes(1, s, d, k)
+    b4 = batch_resident.batched_group_vmem_bytes(4, s, d, k)
+    assert b4 > b1                               # monotone in T
+    budget = specs.get_profile().budget_bytes
+    t = batch_resident.batched_group_size(1024, s, d, k)
+    assert t >= 1
+    # fills the budget: chosen T fits, T+1 does not (or the stack capped it)
+    assert batch_resident.batched_group_vmem_bytes(t, s, d, k) <= budget
+    if t < 1024:
+        assert batch_resident.batched_group_vmem_bytes(t + 1, s, d, k) \
+            > budget
+    # a subset too large for even one group: infeasible, size 0
+    assert not batch_resident.batched_feasible(4096, 8, 2048)
+    assert batch_resident.batched_group_size(64, 4096, 8, 2048) == 0
+    # the DeviceProfile hook agrees with the module-level function
+    assert specs.get_profile().batched_group_size(1024, s, d, k) == t
+
+
+def test_spec_group_t_validation_and_roundtrip():
+    assert specs.KernelSpec().group_t is None
+    spec = specs.KernelSpec(group_t=4)
+    assert specs.KernelSpec.from_json(spec.to_json()) == spec
+    # None stays absent from JSON so version-1 caches keep their schema
+    assert "group_t" not in specs.KernelSpec().to_json()
+    for bad in (0, -2, 2.5):
+        with pytest.raises(ValueError, match="group_t"):
+            specs.KernelSpec(group_t=bad)
+
+
+def test_auto_group_size_refuses_infeasible_stack(monkeypatch):
+    """With no explicit group_t, an infeasible stack must raise — never
+    silently clamp to T=1 and launch a kernel the budget cannot hold (an
+    explicit group_t remains the caller's responsibility)."""
+    monkeypatch.setenv(specs.ENV_VMEM_BUDGET, "16384")       # 16 KiB
+    x, c = _stack(3, 64, 4, 4)
+    with pytest.raises(ValueError, match="no feasible group size"):
+        ops.lloyd_solve_batched(x, c, max_iters=5, tol=1e-6)
+    # explicit override still runs (interpret mode has no real VMEM)
+    _, _, it, _ = ops.lloyd_solve_batched(x, c, group_t=1, max_iters=2,
+                                          tol=0.0)
+    assert all(int(i) == 2 for i in it)
+
+
+def test_fallback_when_group_over_budget(monkeypatch):
+    """When even a T=1 group busts the budget the engine must route the
+    stack through the vmap-of-solve path (never launching the megakernel)
+    and still match the jnp oracle."""
+    def boom(*args, **kwargs):
+        raise AssertionError("batched kernel launched on infeasible stack")
+
+    monkeypatch.setattr(ops, "lloyd_solve_batched", boom)
+    monkeypatch.setenv(specs.ENV_VMEM_BUDGET, "16384")       # 16 KiB
+    m, s, d, k = 3, 64, 4, 4
+    x, c = _stack(m, s, d, k)
+    assert not batch_resident.batched_feasible(s, d, k)
+    got = engines.get_engine("batched").solve_batched(
+        x, c, max_iters=10, tol=1e-6)
+    for i in range(m):
+        want = ref.lloyd_solve_ref(x[i], c, max_iters=10, tol=1e-6)
+        assert int(got[2][i]) == int(want[2])
+        np.testing.assert_allclose(np.asarray(got[0][i]),
+                                   np.asarray(want[0]),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(got[1][i]), float(want[1]),
+                                   rtol=1e-4)
+
+
+def test_reseed_empty_forces_vmap_fallback(monkeypatch):
+    """Reseeding needs the per-iteration assign pass, so the stack must take
+    the vmap-of-solve path — and still rescue the frozen centroid in every
+    subset of the stack."""
+    def boom(*args, **kwargs):
+        raise AssertionError("batched kernel launched with reseed_empty")
+
+    monkeypatch.setattr(ops, "lloyd_solve_batched", boom)
+    pts = jnp.concatenate([
+        jax.random.normal(jax.random.key(0), (30, 2)),
+        jax.random.normal(jax.random.key(1), (30, 2)) + 10.0])
+    x = jnp.stack([pts, pts + 0.5])
+    masks = jnp.ones((2, 60), bool)
+    init = jnp.array([[0.0, 0.0], [0.5, 0.5], [500.0, 500.0]])
+    res = kmeans_batched(x, masks, init,
+                         KMeansParams(max_iters=20, backend="batched",
+                                      reseed_empty=True))
+    assert float(jnp.abs(res.centroids[:, 2]).max()) < 50.0
+
+
+# ----------------------------------------------------- tuned group size T --
+
+def _seed_stack_cache(monkeypatch, tmp_path, s, d, k, m, group_t):
+    path = tmp_path / "kernel_specs.json"
+    cache = tuning.TuningCache.load(path)
+    kind = specs.get_profile().device_kind
+    cache.put(tuning.cache_key(kind, jnp.float32, s, d, k, m=m),
+              specs.DEFAULT_SPEC.replace(group_t=group_t))
+    cache.save()
+    monkeypatch.setenv(tuning.ENV_CACHE_PATH, str(path))
+    tuning.reload_cache()
+
+
+def test_cached_group_t_overrides_budget(monkeypatch, tmp_path):
+    m, s, d, k = 8, 64, 4, 4
+    _seed_stack_cache(monkeypatch, tmp_path, s, d, k, m, group_t=2)
+    assert tuning.lookup_group_t(s, d, k, m) == 2
+    eng = engines.get_engine("batched")
+    assert eng.resolve_group_size(m, s, d, k, jnp.float32) == 2
+    # a cached winner from a roomier chip clamps to the local budget's cap
+    _seed_stack_cache(monkeypatch, tmp_path, s, d, k, m, group_t=10 ** 6)
+    cap = batch_resident.batched_group_size(m, s, d, k)
+    assert eng.resolve_group_size(m, s, d, k, jnp.float32) == cap
+
+
+def test_candidate_group_ts_prune_and_fill():
+    roomy = specs.DeviceProfile("test", 64 * specs.MiB)
+    cands = tuning.candidate_group_ts(64, 256, 8, 16, roomy)
+    assert cands == sorted(set(cands))
+    cap = batch_resident.batched_group_size(64, 256, 8, 16,
+                                            roomy.budget_bytes)
+    assert cap in cands                          # fill-the-budget competes
+    assert all(
+        batch_resident.batched_group_vmem_bytes(t, 256, 8, 16)
+        <= roomy.budget_bytes for t in cands)
+    tiny = specs.DeviceProfile("test", 1 << 14)
+    assert tuning.candidate_group_ts(64, 256, 8, 16, tiny) == []
+
+
+def test_autotune_batched_records_winner(tmp_path):
+    """With an injected measure the group sweep is deterministic: the rigged
+    winner lands in the cache under the |m<bucket> key with group_t set."""
+    profile = specs.DeviceProfile("testchip", 64 * specs.MiB)
+    cache = tuning.TuningCache.load(tmp_path / "c.json")
+
+    def measure(t):                               # t=2 rigged to win
+        return 1.0 if t == 2 else 2.0 + t / 100.0
+
+    best, rows = tuning.autotune_batched(8, 64, 4, 4, profile=profile,
+                                         cache=cache, group_ts=(1, 2, 4),
+                                         measure=measure)
+    assert best.group_t == 2
+    assert rows[0]["time_us"] <= rows[-1]["time_us"]
+    key = tuning.cache_key("testchip", jnp.float32, 64, 4, 4, m=8)
+    assert cache.get(key).group_t == 2
+    cache.save()
+    assert tuning.TuningCache.load(cache.path).get(key).group_t == 2
+
+
+def test_autotune_batched_real_measure_interpret(tmp_path):
+    """End-to-end group sweep through the actual megakernel in interpret
+    mode (what the CI autotune smoke runs)."""
+    cache = tuning.TuningCache.load(tmp_path / "c.json")
+    best, rows = tuning.autotune_batched(4, 48, 3, 4, cache=cache,
+                                         repeats=1, interpret=True,
+                                         group_ts=(1, 2))
+    assert best is not None and best.group_t in {r["group_t"] for r in rows}
+    assert cache.entries
