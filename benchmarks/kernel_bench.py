@@ -13,7 +13,10 @@ points ONCE TOTAL, so its projected per-solve traffic is ~1/iters of the
 fused engine's (which pays one sweep every iteration); per *stack*, the
 batched megakernel turns a device's M reducers into ceil(M/T) pipelined
 grid steps (vs M serialized single-block steps under vmap) with the whole
-stack's points still read once per solve.
+stack's points still read once per solve — including with
+``reseed_empty=True``, where the in-kernel farthest-point reseed keeps the
+launch count at ceil(M/T) instead of the vmap-of-host-solve fallback the
+flag used to force (the reseed-on row times both paths head-to-head).
 
 ``benchmarks.run --smoke`` snapshots this module's rows to
 ``BENCH_kernel.json`` at the repo root, so the perf trajectory accumulates
@@ -241,6 +244,40 @@ def run():
     }
     rows.append(batched_row)
 
+    # reseed-on stack: the paper-pipeline quality configuration
+    # (reseed_empty=True) used to force the stack OFF the megakernel onto
+    # the vmap-of-host-solve fallback (M per-subset host loops, one fused
+    # kernel launch per iteration each); the in-kernel farthest-point
+    # reseed keeps it at ceil(M/T) pipelined launches.  Head-to-head:
+    # megakernel with in-kernel reseed vs the old fallback path, same
+    # empties-producing stack (far-planted init guarantees reseeds fire).
+    from repro.kernels.engine import LloydEngine, get_engine
+    far_init = init_b + 100.0
+    t_bat_rs = timeit(jax.jit(lambda x, c: ops.lloyd_solve_batched(
+        x, c, group_t=group_t, max_iters=solve_iters, tol=0.0,
+        reseed_empty=True)[0]), stack, far_init)
+    fused_eng = get_engine("fused")
+    t_old_fallback = timeit(jax.jit(lambda x, c: LloydEngine.solve_batched(
+        fused_eng, x, c, max_iters=solve_iters, tol=0.0,
+        reseed_empty=True)[0]), stack, far_init)
+    reseed_row = {
+        "m": m_stack, "s": s_sub, "d": d_b, "k": k_b,
+        "mode": "interpret-reseed-batched-vs-old-vmap-fallback",
+        "solve_iters": solve_iters, "group_t": group_t,
+        "reseed_empty": True,
+        "launches_batched_reseed": -(-m_stack // group_t),
+        "launches_old_fallback": m_stack,          # per ITERATION, host loop
+        "batched_reseed_stack_us": t_bat_rs * 1e6,
+        "old_vmap_fallback_stack_us": t_old_fallback * 1e6,
+        "hbm_bytes_stack_batched":
+            lloyd_stack_hbm_bytes(m_stack, s_sub, d_b, k_b, solve_iters,
+                                  "batched", group_t),
+        "hbm_bytes_stack_fused_fallback":
+            lloyd_stack_hbm_bytes(m_stack, s_sub, d_b, k_b, solve_iters,
+                                  "fused"),
+    }
+    rows.append(reseed_row)
+
     # tuned vs default geometry: the fused step under the cache's winner for
     # this shape (specs.DEFAULT_SPEC on a cache miss — the tuned engine's
     # fallback) head-to-head with the default spec.  Run
@@ -283,6 +320,11 @@ def run():
             f"{batched_row['batched_stack_us']:.0f}",
             f"launches={batched_row['launches_batched']}/"
             f"{batched_row['launches_vmap_resident']}"))
+    record("kernel_bench", rows,
+           ("kernel_reseed_batched_vs_fallback",
+            f"{reseed_row['batched_reseed_stack_us']:.0f}",
+            f"launches={reseed_row['launches_batched_reseed']}/"
+            f"{reseed_row['launches_old_fallback']}"))
     record("kernel_bench", rows,
            ("kernel_tuned_vs_default", f"{tuned_row['tuned_us']:.0f}",
             f"from_cache={tuned_row['tuned_from_cache']}"))

@@ -19,7 +19,11 @@ the tuning cache).
 ``reseed_empty`` re-seeds zero-count centroids at the farthest in-subset
 point (k-means++-style, Bahmani et al.): with small subsets a centroid frozen
 at a bad init is a degenerate seed that keep-old-centroid semantics never
-repairs — this flag repairs it in every engine.
+repairs — this flag repairs it in every engine.  For the whole-solve engines
+(``resident``/``batched``/``tuned``) the reseed runs *inside* their kernels'
+convergence loops, so the paper's quality configuration keeps the
+one-launch-per-solve / one-launch-per-stack property (host-side reseeding
+remains only on the host-loop engines and infeasible-shape fallbacks).
 """
 from __future__ import annotations
 

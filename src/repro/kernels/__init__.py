@@ -38,8 +38,13 @@ JSON cache under ``experiments/tuning/``.
     in VMEM, iteration/convergence state sits in SMEM, and the points stream
     from HBM once per *solve* instead of once per iteration.  Gated by the
     DeviceProfile VMEM-feasibility check with automatic fallback to
-    ``fused`` when (n, d, k) does not fit on-chip.  Under vmap (a reducer
-    stack) it serializes: one single-block grid step per subset, no overlap.
+    ``fused`` when (n, d, k) does not fit on-chip — the ONLY remaining
+    fallback trigger: empty-cluster reseeding (``reseed_empty=True``) runs
+    *inside* the kernel loop (one extra masked score pass + the shared
+    ``ref.reseed_farthest`` selection, gated on any-empty), so the paper's
+    quality configuration keeps the one-launch-per-solve property.  Under
+    vmap (a reducer stack) it serializes: one single-block grid step per
+    subset, no overlap.
   * ``batched``  — ``batch_resident.py``: a whole reducer STACK in one
     pipelined launch.  The grid iterates over groups of T subsets; each
     grid step runs its group's convergence loop on-chip with group-batched
@@ -47,13 +52,18 @@ JSON cache under ``experiments/tuning/``.
     double-buffers the next group's points from HBM — per-stack launches
     drop M -> ceil(M/T) and the HBM stream overlaps compute.  T fills the
     DeviceProfile budget (``batched_group_size``) or comes from the tuning
-    cache's ``group_t`` winner.  Per-subset semantics are bit-for-bit the
-    resident kernel's; single solves inherit the resident path.  The
-    preferred S2 stack engine on TPU.
+    cache's ``group_t`` winner — consulted for reseed-on stacks too.
+    Per-subset semantics are bit-for-bit the resident kernel's, including
+    the in-kernel per-lane farthest-point reseed; single solves inherit the
+    resident path.  The preferred S2 stack engine on TPU, and since the
+    paper pipeline only matches PKMeans quality with ``reseed_empty=True``,
+    the reseed-on stack IS the hot path it serves.
   * ``tuned``    — ``tuning.py``: ``resident`` solve semantics + autotuned
     kernel geometry.  Its ``resolve_spec`` hook serves the cached
     per-(device, dtype, shape) winner, falling back to the defaults on a
-    cache miss, so it is always safe to request.
+    cache miss, so it is always safe to request — with or without
+    ``reseed_empty`` (the flag no longer drops it off the kernel or past
+    the cache lookup).
 
 The engine protocol's ``solve_batched`` hook is where stacks enter: the base
 is a vmap of ``solve`` (every per-subset engine composes unchanged), and
@@ -66,10 +76,13 @@ CI exercises all of them: the kernel-correctness job sweeps ``pallas``,
 the oracles in ``ref.py`` (tests/test_kernels.py, tests/test_fused.py,
 tests/test_engines.py, tests/test_tuning.py, tests/test_batched.py — the
 last covers stack-vs-vmap-oracle parity incl. heterogeneous convergence and
-the single-``pallas_call`` lowering guarantee), and an autotune smoke job
-runs a tiny sweep — including the ``--group-ts`` group-size axis — end to
-end and re-reads the cache it wrote.  On non-TPU hosts ``ops.py``
-transparently falls back to ``interpret=True``.
+the single-``pallas_call`` lowering guarantee with reseeding on and off —
+plus tests/test_reseed.py: in-kernel reseed vs the host-side
+``reseed_empty_clusters`` oracle, bit-for-bit), and an autotune smoke job
+runs a tiny sweep — including the ``--group-ts`` group-size axis through
+the reseed-on megakernel (``--reseed-empty``) — end to end and re-reads the
+cache it wrote.  On non-TPU hosts ``ops.py`` transparently falls back to
+``interpret=True``.
 """
 from repro.kernels import batch_resident, engine, ops, ref, specs, tuning
 from repro.kernels.assign import assign_pallas

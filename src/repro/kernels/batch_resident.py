@@ -25,6 +25,13 @@ TPU mapping (grid = ``(ceil(M/T),)``, one group per step):
     that subset is still active, so each subset's trajectory is bit-for-bit
     the single-subset resident kernel's — heterogeneous convergence inside
     a group freezes finished subsets instead of perturbing them;
+  * with ``reseed_empty=True`` each trip re-seeds zero-count centroids at
+    the farthest in-subset points *inside* the loop: one extra
+    group-batched score pass against the candidate centroids, then the
+    shared ``ref.reseed_farthest`` per-lane masked-argmax selection
+    (vmapped over the group), gated behind ``lax.cond`` on
+    any-empty-among-active lanes — the paper-pipeline stacks that actually
+    produce empty clusters keep the one-launch-per-stack property;
   * per-subset iteration/convergence state — trip counts and the
     ``shift <= tol`` predicate — is scalar state, so it leaves the kernel
     through SMEM-space ``(T, 1)`` int32 output blocks: the batched
@@ -91,26 +98,26 @@ def batched_group_size(m: int, s: int, d: int, k: int,
 
 def _batched_kernel(x_ref, c0_ref, w_ref,
                     c_out_ref, sse_ref, iters_ref, conv_ref, *,
-                    k_actual: int, max_iters: int, tol: float,
-                    carry_dtype):
+                    k_actual: int, s_actual: int, max_iters: int, tol: float,
+                    carry_dtype, reseed_empty: bool):
     # deferred (trace-time) imports, exactly like the single-subset kernel:
-    # divide_or_keep and centroid_shift have ONE definition across host
-    # loop / oracle / resident kernel / this kernel — vmap gives them the
-    # group batch dim, so the bit-for-bit parity contract rests on shared
-    # code, not on a hand-copied formula staying in sync
+    # divide_or_keep, centroid_shift and reseed_farthest have ONE definition
+    # across host loop / oracle / resident kernel / this kernel — vmap gives
+    # them the group batch dim, so the bit-for-bit parity contract rests on
+    # shared code, not on a hand-copied formula staying in sync
     from repro.core.metrics import centroid_shift
-    from repro.kernels.ref import divide_or_keep
+    from repro.kernels.ref import divide_or_keep, reseed_farthest
     t, s_pad, d_pad = x_ref.shape
     k_pad = c0_ref.shape[0]
     x = x_ref[...].astype(jnp.float32)                     # (t, s_pad, d_pad)
     w = w_ref[...].astype(jnp.float32)                     # (t, s_pad)
     x2 = jnp.sum(x * x, axis=2)                            # (t, s_pad)
     col = jax.lax.broadcasted_iota(jnp.int32, (t, s_pad, k_pad), 2)
+    kk = min(k_actual, s_actual)                           # reseed candidates
 
-    def assign_and_reduce(c):
-        """One group-batched Lloyd pass -> (sums, counts, sse) — the
-        single-subset resident pass with a batch dim over the group, so the
-        MXU contractions are (t, s, d) x (t, k, d) batched dots."""
+    def score_points(c):
+        """Masked per-lane score matrix + min distances against ``c``: the
+        group-batched MXU contraction every pass is built from."""
         cn = jnp.sum(c * c, axis=2)[:, None, :]            # (t, 1, k_pad)
         xc = jax.lax.dot_general(
             x, c, (((2,), (2,)), ((0,), (0,))),
@@ -118,14 +125,46 @@ def _batched_kernel(x_ref, c0_ref, w_ref,
         s = cn - 2.0 * xc
         s = jnp.where(col < k_actual, s, jnp.inf)          # mask padded centroids
         best = jnp.min(s, axis=2)
+        mind = jnp.maximum(best + x2, 0.0)                 # row-constant restored
+        return s, mind
+
+    def assign_and_reduce(c):
+        """One group-batched Lloyd pass -> (sums, counts, sse) — the
+        single-subset resident pass with a batch dim over the group, so the
+        MXU contractions are (t, s, d) x (t, k, d) batched dots."""
+        s, mind = score_points(c)
         idx = jnp.argmin(s, axis=2).astype(jnp.int32)
         onehot = (idx[:, :, None] == col).astype(jnp.float32) * w[:, :, None]
         sums = jax.lax.dot_general(
             onehot, x, (((1,), (1,)), ((0,), (0,))),
             preferred_element_type=jnp.float32)            # (t, k_pad, d_pad)
         counts = jnp.sum(onehot, axis=1)                   # (t, k_pad)
-        mind = jnp.maximum(best + x2, 0.0)                 # row-constant restored
         return sums, counts, jnp.sum(w * mind, axis=1)     # sse (t,)
+
+    def reseed(new_c, counts, active):
+        """In-kernel farthest-point reseed, per lane: one extra group-batched
+        score pass against the candidate centroids, then the shared
+        ``reseed_farthest`` selection (a per-lane masked argmax chain over
+        the group's score matrix) vmapped over the group.  Lanes without
+        empties pass through untouched (all-False ``take``), so the
+        bit-for-bit contract with the single-subset kernel holds lane by
+        lane.  Gated behind ``lax.cond`` on any-empty-among-active — trips
+        with every cluster of every live lane populated pay nothing."""
+        empty = jnp.logical_and(counts <= 0.0,
+                                col[:, 0, :] < k_actual)   # (t, k_pad)
+
+        def do_reseed(c):
+            _, mind = score_points(c)
+            score = jnp.where(w > 0.0, mind, -jnp.inf)     # (t, s_pad)
+            take, picks = jax.vmap(
+                lambda xi, si, ei: reseed_farthest(xi, si, ei, kk))(
+                    x, score, empty)
+            # picks round-trip the carry dtype like every centroid update
+            picks = picks.astype(carry_dtype).astype(jnp.float32)
+            return jnp.where(take[:, :, None], picks, c)
+
+        fire = jnp.any(jnp.logical_and(empty, active[:, None]))
+        return jax.lax.cond(fire, do_reseed, lambda c: c, new_c)
 
     def cond(carry):
         _, it, shift = carry
@@ -142,6 +181,8 @@ def _batched_kernel(x_ref, c0_ref, w_ref,
         # round-trip through the caller's carry dtype so feasible, fallback
         # and single-subset solves are bit-for-bit consistent (f32 identity)
         new_c = new_c.astype(carry_dtype).astype(jnp.float32)
+        if reseed_empty:
+            new_c = reseed(new_c, counts, active)
         new_shift = jax.vmap(centroid_shift)(new_c, c)
         c = jnp.where(active[:, None, None], new_c, c)
         it = it + active.astype(jnp.int32)
@@ -170,7 +211,7 @@ def _batched_kernel(x_ref, c0_ref, w_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("group_t", "max_iters", "tol",
-                                    "interpret"))
+                                    "interpret", "reseed_empty"))
 def _lloyd_solve_batched(subsets: jnp.ndarray,
                          centroids: jnp.ndarray,
                          weights: jnp.ndarray | None = None,
@@ -178,7 +219,8 @@ def _lloyd_solve_batched(subsets: jnp.ndarray,
                          group_t: int,
                          max_iters: int = 300,
                          tol: float = 1e-6,
-                         interpret: bool = False):
+                         interpret: bool = False,
+                         reseed_empty: bool = False):
     m, s, d = subsets.shape
     k = centroids.shape[0]
     t = max(1, min(int(group_t), m))
@@ -193,9 +235,10 @@ def _lloyd_solve_batched(subsets: jnp.ndarray,
                          else weights.astype(jnp.float32))
 
     c_out, sse, iters, conv = pl.pallas_call(
-        functools.partial(_batched_kernel, k_actual=k,
+        functools.partial(_batched_kernel, k_actual=k, s_actual=s,
                           max_iters=max_iters, tol=tol,
-                          carry_dtype=centroids.dtype),
+                          carry_dtype=centroids.dtype,
+                          reseed_empty=reseed_empty),
         grid=(m_pad // t,),
         in_specs=[
             pl.BlockSpec((t, s_pad, d_pad), lambda g: (g, 0, 0)),
@@ -230,14 +273,16 @@ def lloyd_solve_batched(subsets: jnp.ndarray,
                         max_iters: int = 300,
                         tol: float = 1e-6,
                         interpret: bool | None = None,
-                        spec: specs.KernelSpec | None = None):
+                        spec: specs.KernelSpec | None = None,
+                        reseed_empty: bool = False):
     """A whole STACK of Lloyd solves in ONE kernel launch:
     (M,S,d),(k,d)[,(M,S)] -> (centroids (M,k,d), sse (M,), iters (M,) i32,
     converged (M,) bool).
 
     Per-subset semantics are exactly :func:`~repro.kernels.resident
     .lloyd_solve_resident`'s — same stop criterion, same keep-old-centroid
-    policy, same carry-dtype round-trip — so every lane matches the
+    policy, same carry-dtype round-trip, same in-kernel farthest-point
+    reseed under ``reseed_empty=True`` — so every lane matches the
     vmap-of-resident oracle bit-for-bit, including groups whose subsets
     converge at different iterations.  ``group_t`` is the subsets-per-grid-
     step batch (default: fill the DeviceProfile budget via
@@ -272,4 +317,5 @@ def lloyd_solve_batched(subsets: jnp.ndarray,
     return _lloyd_solve_batched(subsets, centroids, weights,
                                 group_t=int(group_t),
                                 max_iters=max_iters, tol=tol,
-                                interpret=bool(interpret))
+                                interpret=bool(interpret),
+                                reseed_empty=bool(reseed_empty))

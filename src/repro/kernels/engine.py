@@ -77,25 +77,25 @@ def reseed_empty_clusters(engine: "LloydEngine", points, weights,
     takes the ``e``-th farthest point, so multiple empties land on distinct
     points.  The whole pass is gated behind ``lax.cond`` on any-empty —
     solves that never produce an empty cluster pay nothing (outside vmap).
+
+    The selection itself (which rows to replace, with which points) is
+    ``ref.reseed_farthest`` — the SAME function the resident and batched
+    megakernels trace on-chip, so the in-kernel reseed matches this oracle
+    bit-for-bit given the same score vector.  An empty cluster keeps its old
+    centroid when there are fewer candidate points than empty clusters
+    (subset smaller than k, or valid rows exhausted into ``-inf`` scores)
+    rather than duplicating a pick or leaking padding coordinates.
     """
     k = centroids.shape[0]
     w = _as_weights(points, weights)
     empty = counts <= 0.0
-
-    kk = min(k, points.shape[0])                       # top_k needs kk <= n
+    kk = min(k, points.shape[0])                       # candidate budget
 
     def do_reseed(c):
         _, mind = engine.assign(points, c)
         score = jnp.where(w > 0.0, mind.astype(jnp.float32), -jnp.inf)
-        vals, far = jax.lax.top_k(score, kk)           # kk farthest valid points
-        picks = points[far].astype(c.dtype)            # (kk, d)
-        raw = jnp.cumsum(empty.astype(jnp.int32)) - 1
-        slot = jnp.clip(raw, 0, kk - 1)
-        # fewer candidate points than empty clusters (subset smaller than k,
-        # or valid rows exhausted into -inf scores): keep the old centroid
-        # rather than duplicate a pick or leak padding coordinates
-        ok = jnp.logical_and(raw < kk, jnp.isfinite(vals[slot]))
-        return jnp.where((empty & ok)[:, None], picks[slot], c)
+        take, picks = ref.reseed_farthest(points, score, empty, kk)
+        return jnp.where(take[:, None], picks.astype(c.dtype), c)
 
     return jax.lax.cond(jnp.any(empty), do_reseed, lambda c: c, centroids)
 
@@ -251,10 +251,12 @@ class ResidentEngine(FusedEngine):
     convergence loop on-chip, so the points stream from HBM once per *solve*
     instead of once per iteration.  Per-step behaviour (``step``/``assign``/
     ``sse``) is inherited from the fused engine; only the solve moves
-    on-chip.  Falls back to the fused per-step loop when (n, d, k) does not
-    fit the local chip's DeviceProfile VMEM budget (``resident_feasible``),
-    or when empty-cluster reseeding is on (reseeding needs the host-side
-    loop's per-iteration assign pass)."""
+    on-chip.  Empty-cluster reseeding runs *inside* the kernel (the shared
+    ``ref.reseed_farthest`` selection, gated on any-empty per trip), so
+    ``reseed_empty=True`` keeps the one-launch-per-solve property.  The only
+    fallback to the fused per-step loop left is a genuinely infeasible
+    shape: (n, d, k) exceeding the local chip's DeviceProfile VMEM budget
+    (``resident_feasible``)."""
 
     name = "resident"
 
@@ -263,12 +265,14 @@ class ResidentEngine(FusedEngine):
         from repro.kernels import ops, resident
         n, d = points.shape
         k = init_centroids.shape[0]
-        if reseed_empty or not resident.resident_feasible(n, d, k):
+        if not resident.resident_feasible(n, d, k):
             return super().solve(points, init_centroids, weights,
                                  max_iters=max_iters, tol=tol,
                                  reseed_empty=reseed_empty)
         final_c, total, iters, conv = ops.lloyd_solve_resident(
-            points, init_centroids, weights, max_iters=max_iters, tol=tol)
+            points, init_centroids, weights, max_iters=max_iters, tol=tol,
+            reseed_empty=reseed_empty,
+            spec=self.resolve_spec(points, init_centroids))
         return final_c.astype(init_centroids.dtype), total, iters, conv
 
 
@@ -278,11 +282,15 @@ class BatchedEngine(ResidentEngine):
     step running its whole group's convergence loop on-chip with
     group-batched MXU matmuls while Pallas double-buffers the next group's
     points from HBM.  Per-stack launch count drops M -> ceil(M/T); per-
-    subset semantics stay bit-for-bit the resident kernel's.  Single solves
-    (``solve``) inherit the resident path; only the stack moves into the
-    megakernel.  Falls back to the vmap-of-solve path (and from there to
-    fused per-step loops) when even a T=1 group busts the DeviceProfile
-    VMEM budget, or when empty-cluster reseeding is on."""
+    subset semantics stay bit-for-bit the resident kernel's — including
+    empty-cluster reseeding, which runs inside the group loop (per-lane
+    masked argmax over the group's score matrix, the shared
+    ``ref.reseed_farthest`` selection), so the paper-pipeline workloads that
+    actually produce empty clusters keep the one-launch-per-stack property.
+    Single solves (``solve``) inherit the resident path; only the stack
+    moves into the megakernel.  The only fallback left (to vmap-of-solve,
+    and from there to fused per-step loops) is a genuinely infeasible
+    shape: even a T=1 group busting the DeviceProfile VMEM budget."""
 
     name = "batched"
 
@@ -308,15 +316,16 @@ class BatchedEngine(ResidentEngine):
         from repro.kernels import ops
         m, s, d = subsets.shape
         k = init_centroids.shape[0]
-        t = (0 if reseed_empty
-             else self.resolve_group_size(m, s, d, k, subsets.dtype))
+        # reseed_empty no longer gates the kernel: the tuning cache's
+        # group_t winner resolves exactly as on the reseed-off path
+        t = self.resolve_group_size(m, s, d, k, subsets.dtype)
         if t <= 0:
             return super().solve_batched(subsets, init_centroids, weights,
                                          max_iters=max_iters, tol=tol,
                                          reseed_empty=reseed_empty)
         final_c, sse, iters, conv = ops.lloyd_solve_batched(
             subsets, init_centroids, weights, group_t=t,
-            max_iters=max_iters, tol=tol,
+            max_iters=max_iters, tol=tol, reseed_empty=reseed_empty,
             spec=self.resolve_spec(subsets, init_centroids))
         return final_c.astype(init_centroids.dtype), sse, iters, conv
 

@@ -83,30 +83,37 @@ def lloyd_assign_fused(points, centroids, *,
 def lloyd_solve_resident(points, centroids, weights=None, *,
                          max_iters: int = 300, tol: float = 1e-6,
                          spec: KernelSpec | None = None,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         reseed_empty: bool = False):
     """Whole Lloyd solve in ONE kernel launch (VMEM-resident loop) ->
     (centroids (k,d), sse (), iters () i32, converged () bool).  Points
-    stream from HBM once per solve; see kernels/resident.py for the
-    feasibility contract (budget from the chip's DeviceProfile)."""
+    stream from HBM once per solve; ``reseed_empty`` folds the farthest-
+    point empty-cluster reseed into the on-chip loop (still one launch);
+    see kernels/resident.py for the feasibility contract (budget from the
+    chip's DeviceProfile)."""
     if interpret is None:
         interpret = (spec.interpret if spec is not None else None)
     if interpret is None:
         interpret = _interpret_default()
     return _lloyd_solve_resident(points, centroids, weights,
                                  max_iters=max_iters, tol=tol,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 reseed_empty=reseed_empty)
 
 
 def lloyd_solve_batched(subsets, centroids, weights=None, *,
                         group_t: int | None = None,
                         max_iters: int = 300, tol: float = 1e-6,
                         spec: KernelSpec | None = None,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        reseed_empty: bool = False):
     """A whole STACK of Lloyd solves in ONE pipelined kernel launch:
     (M,S,d),(k,d)[,(M,S)] -> (centroids (M,k,d), sse (M,), iters (M,) i32,
     converged (M,) bool).  ``group_t`` is the subsets-per-grid-step batch
     (default: the spec's tuned ``group_t``, else fill the DeviceProfile
-    budget); see kernels/batch_resident.py for the feasibility contract."""
+    budget); ``reseed_empty`` folds the per-lane farthest-point reseed into
+    the group loop (still one launch per stack); see
+    kernels/batch_resident.py for the feasibility contract."""
     if interpret is None:
         interpret = (spec.interpret if spec is not None else None)
     if interpret is None:
@@ -114,7 +121,8 @@ def lloyd_solve_batched(subsets, centroids, weights=None, *,
     return _lloyd_solve_batched_kernel(subsets, centroids, weights,
                                        group_t=group_t,
                                        max_iters=max_iters, tol=tol,
-                                       spec=spec, interpret=interpret)
+                                       spec=spec, interpret=interpret,
+                                       reseed_empty=reseed_empty)
 
 
 # re-export oracles so callers can switch implementations uniformly

@@ -16,6 +16,69 @@ def divide_or_keep(sums: jnp.ndarray, counts: jnp.ndarray,
                      old_centroids)
 
 
+def reseed_farthest(points: jnp.ndarray, score: jnp.ndarray,
+                    empty: jnp.ndarray, kk: int):
+    """Farthest-point re-selection core: which centroid rows to replace, and
+    with which points.  ONE definition shared by the host-side oracle
+    (``engine.reseed_empty_clusters``) and the in-kernel reseed of the
+    resident / batched-resident solvers, so their bit-for-bit parity contract
+    rests on shared code — exactly like ``divide_or_keep``.
+
+    Semantics (Bahmani et al.-style D^2 extremes): the ``e``-th empty cluster
+    (in index order) takes the ``e``-th farthest valid point — equal scores
+    break to the lowest point index, matching ``jax.lax.top_k``'s stable
+    order.  A slot is consumed per empty cluster whether or not it can be
+    served; an empty cluster keeps its old centroid when the candidate pool
+    is exhausted (``e >= kk``) or the next score is not finite (all valid
+    rows already consumed into ``-inf``).
+
+    Args:
+      points: (n, d) candidate rows (any dtype — picks are exact copies:
+        the one-hot select multiplies by 0/1 and sums zeros, both exact).
+      score: (n,) f32 re-selection score, ``-inf`` for invalid rows.
+      empty: (k,) bool — centroid rows to re-seed (padded rows ``False``).
+      kk: static candidate budget, ``min(k_actual, n_actual)``.
+
+    Returns ``(take (k,) bool, picks (k, d))``: replace row ``j`` with
+    ``picks[j]`` where ``take[j]``.  Pure jnp built from masked max/min
+    reductions and 2-D iotas only, so it traces on-chip (Pallas/Mosaic) as
+    well as on host.
+    """
+    n, d = points.shape
+    k = empty.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
+    clu = jax.lax.broadcasted_iota(jnp.int32, (k, 1), 0)[:, 0]
+
+    def body(j, carry):
+        take, picks, live, e = carry
+        at_j = clu == j
+
+        def grab(args):
+            take, picks, live, e = args
+            best = jnp.max(live)
+            # first-index tie-break, same stable order as lax.top_k
+            first = jnp.min(jnp.where(live == best, row, n))
+            ok = jnp.logical_and(e < kk, jnp.isfinite(best))
+            sel = jnp.logical_and(row == first, ok)             # (n,)
+            pick = jnp.sum(points * sel[:, None].astype(points.dtype),
+                           axis=0)                              # exact copy
+            take = jnp.logical_or(take, jnp.logical_and(at_j, ok))
+            picks = jnp.where(jnp.logical_and(at_j, ok)[:, None],
+                              pick[None, :], picks)
+            live = jnp.where(sel, -jnp.inf, live)
+            return take, picks, live, e + 1
+
+        is_empty = jnp.any(jnp.logical_and(empty, at_j))
+        return jax.lax.cond(is_empty, grab, lambda a: a,
+                            (take, picks, live, e))
+
+    take, picks, _, _ = jax.lax.fori_loop(
+        0, k, body,
+        (jnp.zeros((k,), bool), jnp.zeros((k, d), points.dtype),
+         score.astype(jnp.float32), jnp.int32(0)))
+    return take, picks
+
+
 def assign_ref(points: jnp.ndarray, centroids: jnp.ndarray):
     """Nearest-centroid assignment: (n,d),(k,d) -> labels (n,) i32, min sq
     distances (n,) f32.  Ties break to the lowest index (argmin semantics)."""

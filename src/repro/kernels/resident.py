@@ -19,7 +19,16 @@ TPU mapping (no grid — the whole subset is one block):
     predicate — is scalar state, carried through SMEM scratch
     (``pltpu.SMEM``), not vector registers;
   * after the loop, one extra on-chip assignment pass scores the converged
-    centroids, matching the host solver's final-statistics pass.
+    centroids, matching the host solver's final-statistics pass;
+  * with ``reseed_empty=True`` each trip re-seeds zero-count centroids at
+    the farthest in-subset points without leaving the kernel: one extra
+    masked score pass against the candidate centroids feeds the shared
+    ``ref.reseed_farthest`` selection (the same function the host-side
+    ``engine.reseed_empty_clusters`` oracle calls — bit-for-bit parity
+    rests on shared code), gated behind ``lax.cond`` on any-empty so trips
+    with every cluster populated pay nothing.  The reseed's score matrix
+    reuses the assignment pass's working-set shape, so the VMEM byte model
+    below is unchanged.
 
 Padding follows the other kernels: d zero-padded to the 128-lane boundary
 (exact for squared euclidean), n to the 8-sublane boundary, k to 8; padded
@@ -107,32 +116,58 @@ def max_resident_points(d: int, k: int,
 def _resident_kernel(x_ref, c0_ref, w_ref,
                      c_out_ref, sse_ref, iters_ref, conv_ref,
                      state_scr, *,
-                     k_actual: int, max_iters: int, tol: float,
-                     carry_dtype):
+                     k_actual: int, n_actual: int, max_iters: int,
+                     tol: float, carry_dtype, reseed_empty: bool):
     # deferred (trace-time) import: core imports the kernels package at its
     # own import time.  centroid_shift is pure jnp, so it traces on-chip —
     # the stop criterion has ONE definition across host loop/oracle/kernel.
     from repro.core.metrics import centroid_shift
-    from repro.kernels.ref import divide_or_keep
+    from repro.kernels.ref import divide_or_keep, reseed_farthest
     x = x_ref[...].astype(jnp.float32)                     # (n_pad, d_pad)
     w = w_ref[...].astype(jnp.float32)                     # (n_pad,)
     x2 = jnp.sum(x * x, axis=1)                            # (n_pad,)
     k_pad = c0_ref.shape[0]
     col = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k_pad), 1)
+    kk = min(k_actual, n_actual)                           # reseed candidates
 
-    def assign_and_reduce(c):
-        """One on-chip Lloyd pass -> (sums, counts, sse) — the fused kernel's
-        phase 1 + phase 2, minus the HBM traffic."""
+    def score_points(c):
+        """Masked per-point scores against a centroid set: (best, mind)."""
         cn = jnp.sum(c * c, axis=1)[None, :]               # (1, k_pad)
         s = cn - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
         s = jnp.where(col < k_actual, s, jnp.inf)          # mask padded centroids
         best = jnp.min(s, axis=1)
+        mind = jnp.maximum(best + x2, 0.0)                 # row-constant restored
+        return s, mind
+
+    def assign_and_reduce(c):
+        """One on-chip Lloyd pass -> (sums, counts, sse) — the fused kernel's
+        phase 1 + phase 2, minus the HBM traffic."""
+        s, mind = score_points(c)
         idx = jnp.argmin(s, axis=1).astype(jnp.int32)
         onehot = (idx[:, None] == col).astype(jnp.float32) * w[:, None]
         sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
         counts = jnp.sum(onehot, axis=0)
-        mind = jnp.maximum(best + x2, 0.0)                 # row-constant restored
         return sums, counts, jnp.sum(w * mind)
+
+    def reseed(new_c, counts):
+        """In-kernel farthest-point reseed of zero-count centroids: ONE extra
+        masked assignment pass against the candidate centroids, then the
+        shared ``reseed_farthest`` selection — the same score and the same
+        selection the host-side ``engine.reseed_empty_clusters`` oracle
+        computes, so the kernel path is bit-for-bit the old fallback's.
+        Gated behind ``lax.cond`` on any-empty: trips with every cluster
+        populated pay nothing."""
+        empty = jnp.logical_and(counts <= 0.0, col[0] < k_actual)
+
+        def do_reseed(c):
+            _, mind = score_points(c)
+            score = jnp.where(w > 0.0, mind, -jnp.inf)
+            take, picks = reseed_farthest(x, score, empty, kk)
+            # picks round-trip the carry dtype like every centroid update
+            picks = picks.astype(carry_dtype).astype(jnp.float32)
+            return jnp.where(take[:, None], picks, c)
+
+        return jax.lax.cond(jnp.any(empty), do_reseed, lambda c: c, new_c)
 
     def cond(carry):
         c, it, shift = carry
@@ -146,6 +181,8 @@ def _resident_kernel(x_ref, c0_ref, w_ref,
         # through it so feasible and fallback solves are bit-for-bit
         # consistent (identity for f32)
         new_c = new_c.astype(carry_dtype).astype(jnp.float32)
+        if reseed_empty:
+            new_c = reseed(new_c, counts)
         shift = centroid_shift(new_c, c)
         # scalar loop state lives in SMEM: trip count + converged predicate
         state_scr[0] = it + 1
@@ -169,14 +206,16 @@ def _resident_kernel(x_ref, c0_ref, w_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("max_iters", "tol", "interpret"))
+                   static_argnames=("max_iters", "tol", "interpret",
+                                    "reseed_empty"))
 def _lloyd_solve_resident(points: jnp.ndarray,
                           centroids: jnp.ndarray,
                           weights: jnp.ndarray | None = None,
                           *,
                           max_iters: int = 300,
                           tol: float = 1e-6,
-                          interpret: bool = False):
+                          interpret: bool = False,
+                          reseed_empty: bool = False):
     n, d = points.shape
     k = centroids.shape[0]
     n_pad, k_pad, d_pad = resident_tile_shapes(n, d, k)
@@ -187,9 +226,10 @@ def _lloyd_solve_resident(points: jnp.ndarray,
     w = w.at[:n].set(1.0 if weights is None else weights.astype(jnp.float32))
 
     c_out, sse, iters, conv = pl.pallas_call(
-        functools.partial(_resident_kernel, k_actual=k,
+        functools.partial(_resident_kernel, k_actual=k, n_actual=n,
                           max_iters=max_iters, tol=tol,
-                          carry_dtype=centroids.dtype),
+                          carry_dtype=centroids.dtype,
+                          reseed_empty=reseed_empty),
         out_shape=[
             jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
@@ -213,15 +253,22 @@ def lloyd_solve_resident(points: jnp.ndarray,
                          max_iters: int = 300,
                          tol: float = 1e-6,
                          interpret: bool | None = None,
-                         spec: KernelSpec | None = None):
+                         spec: KernelSpec | None = None,
+                         reseed_empty: bool = False):
     """Full Lloyd solve in ONE kernel launch: (n,d),(k,d)[,(n,)] ->
     (centroids (k,d), sse (), iters () i32, converged () bool).
 
     Semantics match ``core.kmeans``'s host loop exactly: iterate while
     ``iters < max_iters and shift > tol`` with keep-old-centroid handling of
-    empty clusters, then score the final centroids.  Callers MUST check
-    :func:`resident_feasible` first — the engine layer does, and falls back
-    to the per-step fused path when the subset does not fit VMEM.
+    empty clusters, then score the final centroids.  With
+    ``reseed_empty=True`` each trip additionally re-seeds zero-count
+    centroids at the farthest in-subset points *on-chip* (the shared
+    ``ref.reseed_farthest`` selection over one extra masked assignment pass,
+    gated on any-empty), matching the host-side
+    ``engine.reseed_empty_clusters`` oracle — the solve stays one launch.
+    Callers MUST check :func:`resident_feasible` first — the engine layer
+    does, and falls back to the per-step fused path when the subset does not
+    fit VMEM.
 
     This kernel has no block geometry (the whole subset is one block), so of
     a :class:`KernelSpec` only the interpret flag applies; on-chip arithmetic
@@ -233,4 +280,5 @@ def lloyd_solve_resident(points: jnp.ndarray,
                      and spec.interpret is not None else False)
     return _lloyd_solve_resident(points, centroids, weights,
                                  max_iters=max_iters, tol=tol,
-                                 interpret=bool(interpret))
+                                 interpret=bool(interpret),
+                                 reseed_empty=bool(reseed_empty))

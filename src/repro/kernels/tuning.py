@@ -312,6 +312,7 @@ def autotune_batched(m: int, s: int, d: int, k: int, *,
                      interpret: bool | None = None,
                      group_ts=GROUP_TS,
                      solve_iters: int = 8,
+                     reseed_empty: bool = False,
                      measure=None,
                      seed: int = 0):
     """Sweep the group-size axis of the batched-resident megakernel for one
@@ -321,7 +322,10 @@ def autotune_batched(m: int, s: int, d: int, k: int, *,
 
     ``measure(t) -> seconds`` may be injected; the default times one whole
     fixed-trip stack solve (``tol=0`` so every candidate pays identical
-    iteration counts).
+    iteration counts).  ``reseed_empty`` times the in-kernel reseed path
+    instead — the paper-pipeline configuration — under the SAME cache key:
+    group size is a geometry knob, and the reseed pass scales with the
+    group exactly like the assignment pass it mirrors.
     """
     from repro.kernels import batch_resident
     profile = profile or specs.get_profile()
@@ -338,7 +342,7 @@ def autotune_batched(m: int, s: int, d: int, k: int, *,
             return _timeit(
                 lambda: ops.lloyd_solve_batched(
                     x, c, group_t=t, max_iters=solve_iters, tol=0.0,
-                    interpret=interpret)[0],
+                    interpret=interpret, reseed_empty=reseed_empty)[0],
                 repeats=repeats)
 
     rows = []

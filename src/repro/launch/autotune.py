@@ -76,6 +76,11 @@ def main(argv=None):
                          "with group_t set under the |m<bucket> key)")
     ap.add_argument("--stack-m", type=int, default=8, metavar="M",
                     help="reducer-stack size for the --group-ts sweep")
+    ap.add_argument("--reseed-empty", action="store_true",
+                    help="time the --group-ts sweep through the in-kernel "
+                         "empty-cluster reseed path (the paper-pipeline "
+                         "configuration; winners land under the same key — "
+                         "group size is a geometry knob either way)")
     ap.add_argument("--cache", default=None,
                     help="cache path (default: REPRO_TUNING_CACHE or "
                          "experiments/tuning/kernel_specs.json)")
@@ -122,7 +127,7 @@ def main(argv=None):
                 args.stack_m, s, d, k, dtype=dtype, profile=profile,
                 cache=cache, repeats=args.repeats,
                 interpret=True if args.interpret else None,
-                group_ts=args.group_ts)
+                group_ts=args.group_ts, reseed_empty=args.reseed_empty)
             if best is None:
                 print(f"m{args.stack_m} s{s} d{d} k{k}: no feasible group "
                       f"(budget {profile.budget_bytes >> 20} MiB) — skipped")

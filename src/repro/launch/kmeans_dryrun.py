@@ -98,7 +98,8 @@ def _record(name, mesh_tag, lowered, compiled, extra=None):
     return rec
 
 
-def lower_all(multi_pod: bool, backend: str = "jnp"):
+def lower_all(multi_pod: bool, backend: str = "jnp",
+              reseed_empty: bool = False):
     """Lower the dry-run cells.  ``backend`` names the Lloyd engine for
     pkmeans-iter and s2s3 (any name in the ``kernels.engine`` registry —
     'jnp' | 'pallas' | 'fused' | 'resident' | 'batched' | 'tuned');
@@ -109,10 +110,16 @@ def lower_all(multi_pod: bool, backend: str = "jnp"):
     launch per solve (the engine's feasibility guard decides — infeasible
     shapes lower the fused per-step loop instead); with 'batched', the whole
     per-device reducer stack lowers as one pipelined multi-group launch
-    (same guard, vmap-of-solve fallback)."""
+    (same guard, vmap-of-solve fallback).  ``reseed_empty`` lowers the S2
+    solvers with in-kernel farthest-point empty-cluster reseeding — the
+    configuration that matches PKMeans quality end to end — and suffixes
+    the records ``__reseed``; the whole-solve engines KEEP their kernels
+    (the reseed runs inside the convergence loop)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "x".join(map(str, mesh.devices.shape))
     file_tag = mesh_tag if backend == "jnp" else f"{mesh_tag}__{backend}"
+    if reseed_empty:
+        file_tag += "__reseed"
     axes = tuple(mesh.axis_names)
     flat = P(axes)
     n_dev = 512 if multi_pod else 256
@@ -185,7 +192,8 @@ def lower_all(multi_pod: bool, backend: str = "jnp"):
     msk_shape = jax.ShapeDtypeStruct((M, 2 ** depth), bool)
     shard_m = NamedSharding(mesh, P(axes, None, None))
     shard_mm = NamedSharding(mesh, P(axes, None))
-    params = KMeansParams(max_iters=MAX_ITERS, backend=backend)
+    params = KMeansParams(max_iters=MAX_ITERS, backend=backend,
+                          reseed_empty=reseed_empty)
 
     def s2s3(subsets, masks, init_centroids):
         def body(sub, msk):
@@ -215,6 +223,7 @@ def lower_all(multi_pod: bool, backend: str = "jnp"):
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     for rec in results:
         rec["backend"] = backend
+        rec["reseed_empty"] = reseed_empty
         path = OUT_DIR / f"{rec['arch']}__{file_tag}.json"
         path.write_text(json.dumps(rec, indent=2))
         rf = rec["roofline"]
@@ -231,8 +240,13 @@ def main():
     from repro.kernels.engine import available
     ap.add_argument("--backend", default="jnp", choices=list(available()),
                     help="Lloyd engine lowered into the programs")
+    ap.add_argument("--reseed-empty", action="store_true",
+                    help="lower the S2 solvers with in-kernel empty-cluster "
+                         "reseeding (the paper-pipeline quality knob; "
+                         "whole-solve engines keep their kernels)")
     args = ap.parse_args()
-    lower_all(args.multi_pod, backend=args.backend)
+    lower_all(args.multi_pod, backend=args.backend,
+              reseed_empty=args.reseed_empty)
 
 
 if __name__ == "__main__":

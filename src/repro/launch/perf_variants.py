@@ -96,31 +96,63 @@ KMEANS_VARIANTS = {
                     "groups of T subsets, group-batched MXU matmuls, next "
                     "group's points DMA'd while the current group iterates) "
                     "— launches drop M -> ceil(M/T) vs the vmap'd C3"),
+    "C5": dict(backend="batched", reseed_empty=True,
+               baseline=dict(backend="fused", reseed_empty=True),
+               note="reseed-on batched megakernel vs the OLD vmap fallback "
+                    "(host-side fused loop with per-iteration host reseed, "
+                    "what reseed_empty used to force): the in-kernel "
+                    "farthest-point reseed keeps the one-launch-per-stack "
+                    "property on the paper-pipeline quality configuration"),
 }
+
+
+def _kmeans_variant_suffix(backend: str, reseed_empty: bool) -> str:
+    """Record-name suffix kmeans_dryrun writes for a (backend, reseed)
+    pair — mirrors its ``file_tag`` rule exactly: the jnp baseline carries
+    no backend suffix, reseed appends ``__reseed`` either way."""
+    suffix = "" if backend == "jnp" else f"__{backend}"
+    return suffix + ("__reseed" if reseed_empty else "")
 
 
 def run_kmeans(tag: str, force: bool = False):
     """Lower the kmeans dry-run with a non-default kernel backend and diff
-    its roofline terms against the jnp baseline records."""
+    its roofline terms against the baseline records (the jnp lowering, or a
+    variant-specific baseline — C5 diffs reseed-on batched against the old
+    host-loop fallback path)."""
     from repro.launch import kmeans_dryrun
 
     v = KMEANS_VARIANTS[tag]
     backend = v["backend"]
+    reseed = bool(v.get("reseed_empty"))
     mesh_tag = "16x16"
     stages = ("kmeans-pkmeans-iter", "kmeans-ipkmeans-s2s3")
+    suffix = _kmeans_variant_suffix(backend, reseed)
 
-    if force or not all((OUT_DIR / f"{s}__{mesh_tag}__{backend}.json").exists()
-                        for s in stages):
-        kmeans_dryrun.lower_all(multi_pod=False, backend=backend)
-    if not all((OUT_DIR / f"{s}__{mesh_tag}.json").exists() for s in stages):
-        kmeans_dryrun.lower_all(multi_pod=False, backend="jnp")
+    if force or not all(
+            (OUT_DIR / f"{s}__{mesh_tag}{suffix}.json").exists()
+            for s in stages):
+        kmeans_dryrun.lower_all(multi_pod=False, backend=backend,
+                                reseed_empty=reseed)
+    base_cfg = v.get("baseline", dict(backend="jnp"))
+    base_suffix = _kmeans_variant_suffix(base_cfg["backend"],
+                                         bool(base_cfg.get("reseed_empty")))
+    # the jnp baseline is the slowest compile of the sweep — only --force a
+    # re-lower for variant-specific baselines
+    refresh = force and base_cfg["backend"] != "jnp"
+    if refresh or not all(
+            (OUT_DIR / f"{s}__{mesh_tag}{base_suffix}.json").exists()
+            for s in stages):
+        kmeans_dryrun.lower_all(
+            multi_pod=False, backend=base_cfg["backend"],
+            reseed_empty=bool(base_cfg.get("reseed_empty")))
 
     print(f"[{tag}] {v['note']}")
     out = []
     for stage in stages:
-        base = json.loads((OUT_DIR / f"{stage}__{mesh_tag}.json").read_text())
+        base = json.loads(
+            (OUT_DIR / f"{stage}__{mesh_tag}{base_suffix}.json").read_text())
         rec = json.loads(
-            (OUT_DIR / f"{stage}__{mesh_tag}__{backend}.json").read_text())
+            (OUT_DIR / f"{stage}__{mesh_tag}{suffix}.json").read_text())
         print(f"  {stage}:")
         for term in ("compute_s", "memory_s", "collective_s"):
             b, n = base["roofline"][term], rec["roofline"][term]
@@ -165,12 +197,15 @@ def run_kmeans(tag: str, force: bool = False):
         n_dev = math.prod(int(v) for v in mesh_tag.split("x"))
         m_loc = kmeans_dryrun.M // n_dev             # subsets per device
         t = batched_group_size(m_loc, n_sub, d, k)
-        print(f"  per-stack launch model (m_loc={m_loc} reducers/device, "
-              f"subset n={n_sub}, d={d}, k={k}):")
+        mode = "reseed-on " if reseed else ""
+        print(f"  per-stack launch model ({mode}m_loc={m_loc} "
+              f"reducers/device, subset n={n_sub}, d={d}, k={k}):")
         if t:
             print(f"    group_t={t} "
                   f"({batched_group_vmem_bytes(t, n_sub, d, k):.3e} B/group)"
-                  f": {m_loc} launches -> {-(-m_loc // t)}")
+                  f": {m_loc} launches -> {-(-m_loc // t)}"
+                  + (" (the reseed runs inside the group loop — no host "
+                     "fallback, no extra launches)" if reseed else ""))
         else:
             print(f"    -> one subset alone busts the VMEM budget; stack "
                   f"falls back to the vmap-of-solve path (size subsets via "

@@ -59,14 +59,17 @@ def test_batched_engine_registered():
 
 # ------------------------------------------------------- single-launch form --
 
-def test_stack_lowers_to_single_pallas_call():
+@pytest.mark.parametrize("reseed", [False, True])
+def test_stack_lowers_to_single_pallas_call(reseed):
     """The acceptance contract: a whole (M, S, d) stack is ONE pallas_call
-    in the jaxpr — the per-reducer launches are gone, not hidden."""
+    in the jaxpr — the per-reducer launches are gone, not hidden.  With
+    ``reseed_empty=True`` too: the farthest-point reseed runs inside the
+    megakernel's group loop, not in a host-side fallback."""
     x, c = _stack(6, 64, 3, 4)
     w = jnp.ones((6, 64), jnp.float32)
     eng = engines.get_engine("batched")
     jaxpr = jax.make_jaxpr(lambda s_, w_, c_: eng.solve_batched(
-        s_, c_, w_, max_iters=10, tol=1e-6))(x, w, c)
+        s_, c_, w_, max_iters=10, tol=1e-6, reseed_empty=reseed))(x, w, c)
     assert _count_pallas_eqns(jaxpr.jaxpr) == 1
 
 
@@ -252,14 +255,14 @@ def test_fallback_when_group_over_budget(monkeypatch):
                                    rtol=1e-4)
 
 
-def test_reseed_empty_forces_vmap_fallback(monkeypatch):
-    """Reseeding needs the per-iteration assign pass, so the stack must take
-    the vmap-of-solve path — and still rescue the frozen centroid in every
-    subset of the stack."""
-    def boom(*args, **kwargs):
-        raise AssertionError("batched kernel launched with reseed_empty")
+def test_reseed_empty_stays_on_megakernel(monkeypatch):
+    """Reseeding now runs INSIDE the group loop: the stack must keep the
+    megakernel path (never the vmap-of-solve fallback the flag used to
+    force) — and still rescue the frozen centroid in every subset."""
+    def boom(self, *args, **kwargs):
+        raise AssertionError("reseed_empty forced the vmap-of-solve fallback")
 
-    monkeypatch.setattr(ops, "lloyd_solve_batched", boom)
+    monkeypatch.setattr(engines.LloydEngine, "solve_batched", boom)
     pts = jnp.concatenate([
         jax.random.normal(jax.random.key(0), (30, 2)),
         jax.random.normal(jax.random.key(1), (30, 2)) + 10.0])

@@ -60,3 +60,33 @@ def test_trip_expansion_factors_reasonable():
            "flops": 1e12, "bytes_accessed": 1e12, "collective_bytes": {}}
     out = expand_record(dict(rec))
     assert out["trip_expansion_factor"] == 1.0   # fully unrolled layers
+
+
+def test_perf_variants_c5_reseed_cell(monkeypatch, tmp_path, capsys):
+    """The C5 cell must lower BOTH the reseed-on batched variant and its
+    baseline (the old host-loop fallback path: fused + reseed), diff them,
+    and print the reseed-on launch model — without ever touching the jnp
+    records."""
+    import json
+
+    from repro.launch import kmeans_dryrun, perf_variants
+
+    calls = []
+
+    def fake_lower_all(multi_pod, backend="jnp", reseed_empty=False):
+        calls.append((backend, reseed_empty))
+        suffix = perf_variants._kmeans_variant_suffix(backend, reseed_empty)
+        rec = {"roofline": {"compute_s": 1.0, "memory_s": 2.0,
+                            "collective_s": 3.0, "dominant": "collective_s"}}
+        for stage in ("kmeans-pkmeans-iter", "kmeans-ipkmeans-s2s3"):
+            (tmp_path / f"{stage}__16x16{suffix}.json").write_text(
+                json.dumps(rec))
+
+    monkeypatch.setattr(perf_variants, "OUT_DIR", tmp_path)
+    monkeypatch.setattr(kmeans_dryrun, "lower_all", fake_lower_all)
+    perf_variants.run_kmeans("C5")
+    assert ("batched", True) in calls          # the variant
+    assert ("fused", True) in calls            # the old-fallback baseline
+    assert ("jnp", False) not in [c for c in calls]
+    out = capsys.readouterr().out
+    assert "reseed-on" in out and "per-stack launch model" in out

@@ -1,0 +1,388 @@
+"""In-kernel empty-cluster reseeding: the megakernels stay on the paper's
+hot path with ``reseed_empty=True``.
+
+The contract under test: the resident and batched-resident kernels fold the
+farthest-point reseed into their on-chip convergence loops, and the result is
+bit-for-bit the host-side ``engine.reseed_empty_clusters`` oracle path (the
+old fused-fallback loop) — both run the SAME ``ref.reseed_farthest``
+selection, so parity rests on shared code.  Plus the nasty corners: the
+all-padding subset, an every-cluster-empty lane, reseed firing on the final
+iteration, more clusters than points, and bf16 carries.  All in interpret
+mode (the CI kernel gate).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import KMeansParams, kmeans, kmeans_batched
+from repro.kernels import ops, ref, resident
+from repro.kernels import engine as engines
+
+
+def _data(n, d, k, dtype=jnp.float32, scale=3.0, seed=1):
+    kx, kc = jax.random.split(jax.random.key(n * d * k + seed))
+    x = (jax.random.normal(kx, (n, d)) * scale).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * scale).astype(dtype)
+    return x, c
+
+
+def _far_init(d, k, dtype=jnp.float32):
+    """Init centroids planted far outside the data so early iterations
+    reliably produce empty clusters (the reseed trigger)."""
+    return (jax.random.normal(jax.random.key(99), (k, d)) * 5
+            + 100.0).astype(dtype)
+
+
+def _assert_results_equal(a, b):
+    for field, va, vb in zip(a._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(va, np.float32) if va.dtype == jnp.bfloat16 else
+            np.asarray(va),
+            np.asarray(vb, np.float32) if vb.dtype == jnp.bfloat16 else
+            np.asarray(vb),
+            err_msg=field)
+
+
+# ------------------------------------------ the shared selection function --
+
+def _reseed_topk_reference(points, score, empty, kk):
+    """The pre-refactor host implementation (lax.top_k + gather), kept here
+    as an independent oracle for the shared masked-argmax selection: the
+    e-th empty cluster takes the e-th farthest point, slots are consumed
+    positionally, exhausted/infinite slots keep the old centroid."""
+    vals, far = jax.lax.top_k(score, kk)
+    picks = points[far]
+    raw = jnp.cumsum(empty.astype(jnp.int32)) - 1
+    slot = jnp.clip(raw, 0, kk - 1)
+    ok = jnp.logical_and(raw < kk, jnp.isfinite(vals[slot]))
+    return empty & ok, picks[slot]
+
+
+@pytest.mark.parametrize("n,k,n_empty", [(16, 4, 2), (8, 12, 9), (6, 6, 6)])
+def test_reseed_farthest_matches_topk_reference(n, k, n_empty):
+    """``ref.reseed_farthest`` (the kernel-traceable masked-argmax chain)
+    is bit-for-bit the top_k formulation, including multiple empties taking
+    DISTINCT points in farthest-first order."""
+    d = 3
+    points = jax.random.normal(jax.random.key(n * k), (n, d))
+    score = jax.random.uniform(jax.random.key(7), (n,))
+    empty = jnp.zeros((k,), bool).at[jnp.arange(n_empty)].set(True)
+    kk = min(n, k)
+    take, picks = ref.reseed_farthest(points, score, empty, kk)
+    take_r, picks_r = _reseed_topk_reference(points, score, empty, kk)
+    np.testing.assert_array_equal(np.asarray(take), np.asarray(take_r))
+    # non-taken rows are caller's responsibility; compare the taken picks
+    np.testing.assert_array_equal(np.asarray(picks)[np.asarray(take)],
+                                  np.asarray(picks_r)[np.asarray(take_r)])
+
+
+def test_reseed_farthest_tie_break_and_exhaustion():
+    """Equal scores break to the lowest point index (lax.top_k's stable
+    order), and empties past the candidate budget keep the old centroid."""
+    points = jnp.arange(8.0)[:, None] * jnp.ones((1, 2))
+    score = jnp.array([5.0, 5.0, 5.0, -jnp.inf, 1.0,
+                       -jnp.inf, -jnp.inf, -jnp.inf])
+    empty = jnp.array([True] * 5)
+    take, picks = ref.reseed_farthest(points, score, empty, kk=5)
+    # picks 0,1,2 (ties, index order), then 4 (score 1.0), then exhausted
+    np.testing.assert_array_equal(np.asarray(take),
+                                  [True, True, True, True, False])
+    np.testing.assert_array_equal(np.asarray(picks[:4, 0]), [0.0, 1.0, 2.0, 4.0])
+
+
+def test_reseed_farthest_property_vs_topk():
+    """hypothesis sweep: random scores (with forced ties and -inf rows) and
+    random empty sets — shared selection vs the top_k oracle, bit-for-bit."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the 'dev' extra (pip install -e '.[dev]')")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(4, 24), st.integers(2, 10), st.integers(0, 2 ** 31 - 1),
+           st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def prop(n, k, seed, quantize):
+        kq, ke, kv = jax.random.split(jax.random.key(seed), 3)
+        score = jax.random.uniform(kq, (n,)) * 10
+        if quantize:                       # integer scores force ties
+            score = jnp.floor(score)
+        score = jnp.where(jax.random.uniform(kv, (n,)) < 0.25,
+                          -jnp.inf, score)
+        empty = jax.random.uniform(ke, (k,)) < 0.5
+        points = jax.random.normal(kv, (n, 3))
+        kk = min(n, k)
+        take, picks = ref.reseed_farthest(points, score, empty, kk)
+        take_r, picks_r = _reseed_topk_reference(points, score, empty, kk)
+        np.testing.assert_array_equal(np.asarray(take), np.asarray(take_r))
+        np.testing.assert_array_equal(np.asarray(picks)[np.asarray(take)],
+                                      np.asarray(picks_r)[np.asarray(take_r)])
+
+    prop()
+
+
+# ------------------------------------- in-kernel vs the host-side oracle --
+
+def _assert_solve_matches_oracle(got, want):
+    """Kernel solve vs host-oracle solve: centroids, iteration count and
+    converged flag are bit-for-bit (the reseed picks are exact point copies
+    and divide_or_keep is shared code); the final scalar SSE is a global
+    (n,) -> () reduction whose tree shape depends on the padded length, so
+    the kernel (n_pad) and the fused host path (block_n tile) may differ in
+    the last ulp — allow exactly that, nothing more."""
+    c_g, sse_g, it_g, conv_g = got
+    c_w, sse_w, it_w, conv_w = want
+    np.testing.assert_array_equal(np.asarray(c_g), np.asarray(c_w))
+    np.testing.assert_array_equal(np.asarray(it_g), np.asarray(it_w))
+    np.testing.assert_array_equal(np.asarray(conv_g), np.asarray(conv_w))
+    np.testing.assert_allclose(np.asarray(sse_g), np.asarray(sse_w),
+                               rtol=1e-6)
+
+
+def _host_loop_solve(points, init, w, *, max_iters, tol):
+    """The old fallback: the generic host-side while_loop over the fused
+    engine's step/assign with per-iteration ``reseed_empty_clusters`` — what
+    ``resident``/``batched`` used to drop to whenever reseeding was on."""
+    eng = engines.get_engine("fused")
+    return engines.LloydEngine.solve(eng, points, init, w,
+                                     max_iters=max_iters, tol=tol,
+                                     reseed_empty=True)
+
+
+@pytest.mark.parametrize("n,d,k", [(60, 2, 3), (48, 5, 8), (33, 3, 6)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_resident_reseed_matches_host_oracle(n, d, k, masked):
+    """The in-kernel reseed is bit-for-bit the host-side
+    ``reseed_empty_clusters`` oracle loop through the whole solve."""
+    x, _ = _data(n, d, k)
+    init = _far_init(d, k)                      # guarantees empty clusters
+    w = None
+    if masked:
+        w = (jax.random.uniform(jax.random.key(5), (n,)) > 0.25).astype(
+            jnp.float32)
+    got = ops.lloyd_solve_resident(x, init, w, max_iters=25, tol=1e-6,
+                                   reseed_empty=True)
+    want = _host_loop_solve(x, init, w, max_iters=25, tol=1e-6)
+    _assert_solve_matches_oracle(got, want)
+    # the far-planted centroids actually moved (reseed fired, not a no-op)
+    assert float(jnp.abs(got[0]).max()) < 60.0
+
+
+def test_reseed_property_in_kernel_vs_host_oracle():
+    """hypothesis sweep: random subsets/shapes/masks — resident-kernel and
+    batched-megakernel reseed vs the host-side oracle loop, bit-for-bit on
+    every engine's whole KMeansResult."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the 'dev' extra (pip install -e '.[dev]')")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.sampled_from([(40, 2, 5), (32, 3, 8), (24, 4, 4)]),
+           st.booleans(), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def prop(shape, masked, seed):
+        n, d, k = shape
+        x, _ = _data(n, d, k, seed=seed % 1000)
+        init = _far_init(d, k)
+        w = None
+        if masked:
+            w = (jax.random.uniform(jax.random.key(seed % 997), (n,))
+                 > 0.3).astype(jnp.float32)
+        want = _host_loop_solve(x, init, w, max_iters=15, tol=1e-6)
+        got_res = ops.lloyd_solve_resident(x, init, w, max_iters=15,
+                                           tol=1e-6, reseed_empty=True)
+        got_bat = ops.lloyd_solve_batched(x[None], init, None if w is None
+                                          else w[None], group_t=1,
+                                          max_iters=15, tol=1e-6,
+                                          reseed_empty=True)
+        _assert_solve_matches_oracle(got_res, want)
+        # batched lane 0 vs the single-subset kernel: fully bitwise
+        for g, b in zip(got_res, got_bat):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(b[0]))
+
+    prop()
+
+
+def test_batched_reseed_matches_vmap_resident_bitwise():
+    """backend='batched' == backend='resident' with reseed on — bit-for-bit
+    through the stacked KMeansResult, groups mixing lanes with and without
+    empty clusters."""
+    m, s, d, k = 5, 40, 3, 6
+    x, _ = _data(s * m, d, k)
+    x = x.reshape(m, s, d)
+    # lane 0 clusters normally; the far init empties clusters in every lane
+    masks = jnp.ones((m, s), bool).at[3, 20:].set(False)
+    init = _far_init(d, k)
+    p = KMeansParams(max_iters=20, reseed_empty=True)
+    r_bat = kmeans_batched(x, masks, init, p._replace(backend="batched"))
+    r_vm = kmeans_batched(x, masks, init, p._replace(backend="resident"))
+    _assert_results_equal(r_bat, r_vm)
+    # reseed actually fired: no centroid left stranded at the far init
+    assert float(jnp.abs(r_bat.centroids).max()) < 60.0
+
+
+# ----------------------------------------------------------- nasty corners --
+
+def test_all_padding_subset_with_reseed():
+    """An all-padding lane has every cluster empty AND every score -inf:
+    reseed must keep the old centroids (never leak padding coordinates),
+    converge on trip 1, and report sse 0 / ASSE +inf."""
+    m, s, d, k = 3, 16, 2, 4
+    x, _ = _data(s * m, d, k)
+    x = x.reshape(m, s, d)
+    masks = jnp.ones((m, s), bool).at[1].set(False)
+    init = _far_init(d, k)
+    p = KMeansParams(max_iters=10, reseed_empty=True)
+    r_bat = kmeans_batched(x, masks, init, p._replace(backend="batched"))
+    r_vm = kmeans_batched(x, masks, init, p._replace(backend="resident"))
+    _assert_results_equal(r_bat, r_vm)
+    np.testing.assert_array_equal(np.asarray(r_bat.centroids[1]),
+                                  np.asarray(init))
+    assert float(r_bat.sse[1]) == 0.0 and np.isinf(float(r_bat.asse[1]))
+    assert int(r_bat.iters[1]) == 1 and bool(r_bat.converged[1])
+
+
+def test_more_empty_clusters_than_points():
+    """k > n valid points: nearest-centroid assignment populates p >= 1
+    clusters and leaves k - p empty, but only kk = n candidate points exist
+    — min(k - p, n) empties reseed onto distinct points, the rest keep the
+    old (far) centroid.  Kernel vs host oracle, bit-for-bit."""
+    n, d, k = 5, 2, 9
+    x = jax.random.normal(jax.random.key(3), (n, d))
+    init = _far_init(d, k)
+    got = ops.lloyd_solve_resident(x, init, max_iters=8, tol=1e-6,
+                                   reseed_empty=True)
+    want = _host_loop_solve(x, init, None, max_iters=8, tol=1e-6)
+    _assert_solve_matches_oracle(got, want)
+    # after the FIRST iteration: the p populated clusters moved to their
+    # point means and exactly min(k - p, n) empties were served a pick —
+    # the candidate pool is exhausted after n, so the rest stay far
+    labels, _ = ref.assign_ref(x, init)
+    p = len(np.unique(np.asarray(labels)))
+    served = min(k - p, n)
+    first = ops.lloyd_solve_resident(x, init, max_iters=1, tol=1e-6,
+                                     reseed_empty=True)
+    far = np.abs(np.asarray(first[0])).max(axis=1) > 60.0
+    assert (~far).sum() == p + served and far.sum() == k - p - served
+    # served picks are EXACT copies of in-subset points (a populated
+    # singleton cluster's mean may coincide with its point too, hence >=)
+    exact = sum(any(np.array_equal(row, pt) for pt in np.asarray(x))
+                for row in np.asarray(first[0]))
+    assert exact >= served
+
+
+def test_reseed_fires_on_final_iteration():
+    """max_iters=1 with a guaranteed-empty init: the reseed lands on the
+    LAST trip and the final statistics pass must score the reseeded
+    centroids — identical between kernel and host loop."""
+    n, d, k = 30, 2, 4
+    x, _ = _data(n, d, k)
+    init = _far_init(d, k)
+    got = ops.lloyd_solve_resident(x, init, max_iters=1, tol=1e-6,
+                                   reseed_empty=True)
+    want = _host_loop_solve(x, init, None, max_iters=1, tol=1e-6)
+    _assert_solve_matches_oracle(got, want)
+    assert int(got[2]) == 1
+    # the reseeded rows are exact in-subset points, not averages
+    moved = np.abs(np.asarray(got[0])).max(axis=1) < 60.0
+    assert moved.any()
+
+
+def test_bf16_carry_reseed_roundtrip():
+    """bf16 stacks: picks round-trip the carry dtype exactly like centroid
+    updates, so batched and vmap-of-resident stay bit-for-bit in bf16."""
+    m, s, d, k = 4, 32, 4, 5
+    x, _ = _data(s * m, d, k, dtype=jnp.bfloat16)
+    x = x.reshape(m, s, d)
+    masks = jnp.ones((m, s), bool).at[2, 20:].set(False)
+    init = _far_init(d, k, dtype=jnp.bfloat16)
+    p = KMeansParams(max_iters=12, reseed_empty=True)
+    r_bat = kmeans_batched(x, masks, init, p._replace(backend="batched"))
+    r_vm = kmeans_batched(x, masks, init, p._replace(backend="resident"))
+    assert r_bat.centroids.dtype == jnp.bfloat16
+    _assert_results_equal(r_bat, r_vm)
+
+
+# ----------------------------------------- engines stay on their kernels --
+
+def test_resident_engine_keeps_kernel_with_reseed(monkeypatch):
+    """reseed_empty=True must NOT push the resident engine onto the host
+    fused loop anymore — the kernel launches exactly once per solve."""
+    calls = {"resident": 0}
+    real = ops.lloyd_solve_resident
+
+    def counting(*args, **kwargs):
+        calls["resident"] += 1
+        assert kwargs.get("reseed_empty") is True
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lloyd_solve_resident", counting)
+    x, _ = _data(64, 2, 4)
+    engines.get_engine("resident").solve(x, _far_init(2, 4), max_iters=6,
+                                         tol=1e-6, reseed_empty=True)
+    assert calls["resident"] == 1
+
+
+def test_resident_engine_still_falls_back_when_infeasible(monkeypatch):
+    """The ONLY remaining fallback is a genuinely infeasible shape — and it
+    still honors reseed_empty through the host loop."""
+    def boom(*args, **kwargs):
+        raise AssertionError("resident kernel launched on infeasible shape")
+
+    monkeypatch.setattr(ops, "lloyd_solve_resident", boom)
+    monkeypatch.setattr(resident, "resident_feasible",
+                        lambda n, d, k, budget=None: False)
+    x, _ = _data(64, 2, 3)
+    init = jnp.array([[0.0, 0.0], [0.5, 0.5], [500.0, 500.0]])
+    c, _, _, _ = engines.get_engine("resident").solve(
+        x, init, max_iters=15, tol=1e-6, reseed_empty=True)
+    assert float(jnp.abs(c[2]).max()) < 50.0          # reseed still rescued it
+
+
+def test_tuned_engine_keeps_kernel_and_cache_with_reseed(monkeypatch,
+                                                         tmp_path):
+    """`tuned` + reseed_empty: the solve stays on the resident kernel and
+    the batched stack path still resolves group_t from the autotuning cache
+    instead of dropping to the fallback (the old ``t=0`` short-circuit)."""
+    from repro.kernels import specs, tuning
+
+    x, _ = _data(64, 2, 4)
+    calls = {"resident": 0}
+    real = ops.lloyd_solve_resident
+
+    def counting(*args, **kwargs):
+        calls["resident"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lloyd_solve_resident", counting)
+    engines.get_engine("tuned").solve(x, _far_init(2, 4), max_iters=5,
+                                      tol=1e-6, reseed_empty=True)
+    assert calls["resident"] == 1
+
+    # batched stack: seed a cached group_t winner and watch it reach the
+    # kernel launch with reseed on
+    m, s, d, k = 6, 32, 3, 4
+    path = tmp_path / "kernel_specs.json"
+    cache = tuning.TuningCache.load(path)
+    kind = specs.get_profile().device_kind
+    cache.put(tuning.cache_key(kind, jnp.float32, s, d, k, m=m),
+              specs.DEFAULT_SPEC.replace(group_t=3))
+    cache.save()
+    monkeypatch.setenv(tuning.ENV_CACHE_PATH, str(path))
+    tuning.reload_cache()
+
+    seen = {}
+    real_b = ops.lloyd_solve_batched
+
+    def spy(*args, **kwargs):
+        seen["group_t"] = kwargs.get("group_t")
+        seen["reseed_empty"] = kwargs.get("reseed_empty")
+        return real_b(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lloyd_solve_batched", spy)
+    xs, _ = _data(s * m, d, k)
+    engines.get_engine("batched").solve_batched(
+        xs.reshape(m, s, d), _far_init(d, k), max_iters=5, tol=1e-6,
+        reseed_empty=True)
+    assert seen == {"group_t": 3, "reseed_empty": True}
+    tuning.reload_cache()
