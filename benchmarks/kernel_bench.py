@@ -16,7 +16,11 @@ grid steps (vs M serialized single-block steps under vmap) with the whole
 stack's points still read once per solve — including with
 ``reseed_empty=True``, where the in-kernel farthest-point reseed keeps the
 launch count at ceil(M/T) instead of the vmap-of-host-solve fallback the
-flag used to force (the reseed-on row times both paths head-to-head).
+flag used to force (the reseed-on row times both paths head-to-head).  The
+pruned row runs the same resident solve with ``prune="bounds"`` and reports
+the per-iteration fraction of point blocks whose score matmul the bound
+gate skipped — rising toward convergence on a clustering workload — along
+with the bitwise-equality check the pruning contract requires.
 
 ``benchmarks.run --smoke`` snapshots this module's rows to
 ``BENCH_kernel.json`` at the repo root, so the perf trajectory accumulates
@@ -278,6 +282,57 @@ def run():
     }
     rows.append(reseed_row)
 
+    # bound-pruned vs exact resident solve: identical solve, except
+    # prune="bounds" carries per-block margins + accumulated centroid drift
+    # through the on-chip loop and skips a block's score matmul whenever the
+    # triangle-inequality bound proves no assignment in it can change.
+    # The workload is built to show the knob's regime: rows grouped by true
+    # cluster (so point blocks are spatially coherent and carry wide
+    # margins) with a perturbed-centers seed that takes several iterations
+    # to settle — the skip fraction RISES toward convergence, exactly the
+    # late-iteration behaviour the bound gate monetizes.  The contract is
+    # bitwise equality with the exact path, asserted here on every output
+    # field.
+    import numpy as np
+    n_p, d_p, k_p = 2048, 8, 8
+    prune_iters = 24
+    bound_block = 256
+    kc, kn, ki = jax.random.split(jax.random.key(7), 3)
+    centers = 8.0 * jax.random.normal(kc, (k_p, d_p), jnp.float32)
+    ids = jnp.sort(jnp.arange(n_p) % k_p)       # block-coherent clusters
+    xs = centers[ids] + 2.0 * jax.random.normal(kn, (n_p, d_p), jnp.float32)
+    init_p = centers + 6.0 * jax.random.normal(ki, (k_p, d_p), jnp.float32)
+    exact_fn = jax.jit(lambda x, c: ops.lloyd_solve_resident(
+        x, c, max_iters=prune_iters, tol=0.0))
+    pruned_fn = jax.jit(lambda x, c: ops.lloyd_solve_resident(
+        x, c, max_iters=prune_iters, tol=0.0, prune="bounds",
+        bound_block=bound_block, return_skips=True))
+    t_exact = timeit(lambda x, c: exact_fn(x, c)[0], xs, init_p)
+    t_pruned = timeit(lambda x, c: pruned_fn(x, c)[0], xs, init_p)
+    exact_out = exact_fn(xs, init_p)
+    pruned_out = pruned_fn(xs, init_p)
+    bitwise_equal = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(exact_out, pruned_out[:4]))
+    iters_run = int(exact_out[2])
+    skips = np.asarray(pruned_out[4])[:iters_run]
+    skip_frac = [round(float(s) / t, 4) if t else 0.0 for s, t in skips]
+    pruned_row = {
+        "n": n_p, "d": d_p, "k": k_p,
+        "mode": "interpret-pruned-vs-exact-resident",
+        "solve_iters": iters_run, "bound_block": bound_block,
+        "exact_solve_us": t_exact * 1e6,
+        "pruned_solve_us": t_pruned * 1e6,
+        "bitwise_equal": bitwise_equal,
+        "skip_fraction_by_iter": skip_frac,
+        "blocks_skipped_total": int(skips[:, 0].sum()),
+        "blocks_total": int(skips[:, 1].sum()),
+        "prune_vmem_bytes": resident_vmem_bytes(n_p, d_p, k_p,
+                                                prune="bounds"),
+        "exact_vmem_bytes": resident_vmem_bytes(n_p, d_p, k_p),
+    }
+    rows.append(pruned_row)
+
     # tuned vs default geometry: the fused step under the cache's winner for
     # this shape (specs.DEFAULT_SPEC on a cache miss — the tuned engine's
     # fallback) head-to-head with the default spec.  Run
@@ -325,6 +380,11 @@ def run():
             f"{reseed_row['batched_reseed_stack_us']:.0f}",
             f"launches={reseed_row['launches_batched_reseed']}/"
             f"{reseed_row['launches_old_fallback']}"))
+    record("kernel_bench", rows,
+           ("kernel_pruned_vs_exact",
+            f"{pruned_row['pruned_solve_us']:.0f}",
+            f"bitwise={pruned_row['bitwise_equal']} "
+            f"skip_last={pruned_row['skip_fraction_by_iter'][-1]:.2f}"))
     record("kernel_bench", rows,
            ("kernel_tuned_vs_default", f"{tuned_row['tuned_us']:.0f}",
             f"from_cache={tuned_row['tuned_from_cache']}"))

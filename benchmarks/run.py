@@ -42,7 +42,19 @@ def main() -> None:
         try:
             rows = fn()
             if name == "kernel_bench":
-                # repo-root snapshot: the perf-trajectory artifact
+                # repo-root snapshot: the perf-trajectory artifact.  The
+                # pruned-vs-exact row's skip-fraction trace is part of the
+                # contract the snapshot tracks — refuse to write one without
+                # it (a silently vanished row would read as "still covered").
+                pruned = [r for r in rows if r.get("mode")
+                          == "interpret-pruned-vs-exact-resident"]
+                if not pruned or not pruned[0].get("skip_fraction_by_iter"):
+                    raise RuntimeError(
+                        "kernel_bench rows lack the pruned-vs-exact "
+                        "skip-fraction columns; snapshot not written")
+                if not pruned[0].get("bitwise_equal"):
+                    raise RuntimeError(
+                        "pruned-vs-exact row reports bitwise_equal=False")
                 (REPO_ROOT / "BENCH_kernel.json").write_text(
                     json.dumps(rows, indent=2) + "\n")
         except Exception:

@@ -52,6 +52,19 @@ class IPKMeansConfig:
         return dataclasses.replace(
             self, kmeans=self.kmeans._replace(backend=backend))
 
+    def with_prune(self, prune: str) -> "IPKMeansConfig":
+        """Same config, different pruning mode ('none' | 'bounds').
+
+        ``"bounds"`` turns on Hamerly-style bound-gated block skipping
+        inside the whole-solve kernels' convergence loops (the
+        ``resident``/``batched``/``tuned`` engines): late iterations of each
+        S2 reducer skip the score pass for point blocks whose assignments
+        provably cannot change.  Results are bit-for-bit identical to
+        ``"none"`` — this is a pure perf knob, safe to flip on any config.
+        """
+        return dataclasses.replace(
+            self, kmeans=self.kmeans._replace(prune=prune))
+
     def subset_capacity(self, n: int) -> int:
         """Static bound on points per subset (tensor packing size)."""
         if self.partition == "random":

@@ -54,6 +54,9 @@ class KMeansParams(NamedTuple):
     backend: str = "jnp"          # any name in engines.available(): 'jnp'|
                                   # 'pallas'|'fused'|'resident'|'batched'|'tuned'
     reseed_empty: bool = False    # re-seed empty clusters at farthest points
+    prune: str = "none"           # 'none' | 'bounds': bound-gated block
+                                  # skipping in the whole-solve kernels
+                                  # (bit-for-bit-identical results)
 
 
 class KMeansResult(NamedTuple):
@@ -93,7 +96,7 @@ def kmeans(points: jnp.ndarray,
     final_c, total_sse, iters, converged = engine.solve(
         points, init_centroids, w,
         max_iters=params.max_iters, tol=params.tol,
-        reseed_empty=params.reseed_empty)
+        reseed_empty=params.reseed_empty, prune=params.prune)
 
     cnt = metrics.masked_count(mask, points.shape[0])
     # empty shards must never win the min-ASSE merge: ASSE = +inf
@@ -131,7 +134,7 @@ def kmeans_batched(subsets: jnp.ndarray,
     final_c, total_sse, iters, converged = engine.solve_batched(
         subsets, init_centroids, w,
         max_iters=params.max_iters, tol=params.tol,
-        reseed_empty=params.reseed_empty)
+        reseed_empty=params.reseed_empty, prune=params.prune)
 
     if masks is None:
         cnt = jnp.full((subsets.shape[0],), float(subsets.shape[1]),

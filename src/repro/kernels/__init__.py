@@ -71,6 +71,22 @@ is a vmap of ``solve`` (every per-subset engine composes unchanged), and
 delegates whole stacks there, so the choice is one backend string away for
 ``ipkmeans`` / ``ipkmeans_distributed`` / ``kmeans_dryrun`` alike.
 
+**Pruning** (``KMeansParams.prune`` / ``IPKMeansConfig.with_prune``;
+``'none' | 'bounds'``): with ``'bounds'``, the whole-solve kernels
+(``resident`` / ``batched`` / ``tuned``) carry a Hamerly-style bound per
+point block — the block's smallest best-vs-second-best distance margin —
+plus the accumulated max centroid drift since that block was last scored,
+and wrap each block's score matmul in a ``lax.cond`` that skips it when the
+triangle inequality proves no assignment in the block can change.  Skipped
+blocks reuse their cached labels in the SAME full segment-sum contraction
+the exact path runs, so results are bit-for-bit identical — pruning is a
+pure perf knob (see docs/kernels.md for the state layout and the proof
+obligation; ``ref.lloyd_solve_bounds_ref`` is the jnp oracle, and the
+kernels' ``return_skips=True`` exposes per-iteration [skipped, total] block
+counters that ``benchmarks/kernel_bench.py`` snapshots).  Host-loop engines
+validate and ignore the flag: their exact per-step loop already IS the
+pruned result.
+
 CI exercises all of them: the kernel-correctness job sweeps ``pallas``,
 ``fused``, ``resident``, ``batched`` and ``tuned`` in interpret mode against
 the oracles in ``ref.py`` (tests/test_kernels.py, tests/test_fused.py,
@@ -78,7 +94,9 @@ tests/test_engines.py, tests/test_tuning.py, tests/test_batched.py — the
 last covers stack-vs-vmap-oracle parity incl. heterogeneous convergence and
 the single-``pallas_call`` lowering guarantee with reseeding on and off —
 plus tests/test_reseed.py: in-kernel reseed vs the host-side
-``reseed_empty_clusters`` oracle, bit-for-bit), and an autotune smoke job
+``reseed_empty_clusters`` oracle, bit-for-bit, and tests/test_prune.py:
+pruned-vs-exact bitwise parity across engines/dtypes/paddings plus a
+directed nonzero-late-skip check), and an autotune smoke job
 runs a tiny sweep — including the ``--group-ts`` group-size axis through
 the reseed-on megakernel (``--reseed-empty``) — end to end and re-reads the
 cache it wrote.  On non-TPU hosts ``ops.py`` transparently falls back to
@@ -92,8 +110,8 @@ from repro.kernels.batch_resident import (batched_feasible,
 from repro.kernels.centroid_update import centroid_update_pallas
 from repro.kernels.engine import LloydEngine, available, get_engine, register
 from repro.kernels.fused import lloyd_step_fused
-from repro.kernels.resident import (lloyd_solve_resident, resident_feasible,
-                                    resident_vmem_bytes)
+from repro.kernels.resident import (check_prune, lloyd_solve_resident,
+                                    resident_feasible, resident_vmem_bytes)
 from repro.kernels.specs import DeviceProfile, KernelSpec, get_profile
 from repro.kernels.tuning import TuningCache, autotune_step, lookup_spec
 
@@ -101,6 +119,7 @@ __all__ = ["batch_resident", "engine", "ops", "ref", "specs", "tuning",
            "assign_pallas", "centroid_update_pallas",
            "batched_feasible", "batched_group_size", "lloyd_solve_batched",
            "lloyd_step_fused", "lloyd_solve_resident", "resident_feasible",
-           "resident_vmem_bytes", "LloydEngine", "available", "get_engine",
+           "resident_vmem_bytes", "check_prune",
+           "LloydEngine", "available", "get_engine",
            "register", "DeviceProfile", "KernelSpec", "get_profile",
            "TuningCache", "autotune_step", "lookup_spec"]

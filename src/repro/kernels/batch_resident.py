@@ -58,55 +58,67 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import specs
-from repro.kernels.resident import resident_tile_shapes, resident_vmem_bytes
+from repro.kernels.resident import (bound_block_rows, check_prune,
+                                    resident_tile_shapes,
+                                    resident_vmem_bytes)
 from repro.kernels.specs import F32
 
 
-def batched_group_vmem_bytes(t: int, s: int, d: int, k: int) -> int:
+def batched_group_vmem_bytes(t: int, s: int, d: int, k: int,
+                             prune: str = "none") -> int:
     """f32 working-set bytes of one grid step holding a group of ``t``
-    subsets: t subset-solve working sets plus the shared (k, d) init block."""
+    subsets: t subset-solve working sets plus the shared (k, d) init block.
+    ``prune="bounds"`` folds each lane's bound state into the per-subset
+    cost (see :func:`resident_vmem_bytes`)."""
     _, k_pad, d_pad = resident_tile_shapes(s, d, k)
-    return t * resident_vmem_bytes(s, d, k) + k_pad * d_pad * F32
+    return (t * resident_vmem_bytes(s, d, k, prune=prune)
+            + k_pad * d_pad * F32)
 
 
 def batched_feasible(s: int, d: int, k: int,
-                     budget: int | None = None) -> bool:
+                     budget: int | None = None,
+                     prune: str = "none") -> bool:
     """Can at least a T=1 group stay VMEM-resident for this subset shape?"""
     if budget is None:
         budget = specs.get_profile().budget_bytes
-    return batched_group_vmem_bytes(1, s, d, k) <= budget
+    return batched_group_vmem_bytes(1, s, d, k, prune=prune) <= budget
 
 
 def batched_group_size(m: int, s: int, d: int, k: int,
-                       budget: int | None = None) -> int:
+                       budget: int | None = None,
+                       prune: str = "none") -> int:
     """Largest group size T <= M that fits the device budget (0: infeasible).
 
     This is the budget-filling knob: one subset's working set is typically a
     few percent of VMEM, so the group batches as many reducers per grid step
     as the :class:`DeviceProfile` budget affords — the tuner can override
-    the result with a cached ``KernelSpec.group_t`` winner.
+    the result with a cached ``KernelSpec.group_t`` winner.  ``prune``
+    charges the bound state to each lane, so pruned stacks derive a
+    (slightly) smaller T instead of busting the budget.
     """
     if budget is None:
         budget = specs.get_profile().budget_bytes
     _, k_pad, d_pad = resident_tile_shapes(s, d, k)
     fixed = k_pad * d_pad * F32                   # shared init-centroid block
-    per_t = resident_vmem_bytes(s, d, k)
+    per_t = resident_vmem_bytes(s, d, k, prune=prune)
     if fixed + per_t > budget:
         return 0
     return min(m, (budget - fixed) // per_t)
 
 
 def _batched_kernel(x_ref, c0_ref, w_ref,
-                    c_out_ref, sse_ref, iters_ref, conv_ref, *,
+                    c_out_ref, sse_ref, iters_ref, conv_ref, skips_ref, *,
                     k_actual: int, s_actual: int, max_iters: int, tol: float,
-                    carry_dtype, reseed_empty: bool):
+                    carry_dtype, reseed_empty: bool, bound_block: int = 0):
     # deferred (trace-time) imports, exactly like the single-subset kernel:
     # divide_or_keep, centroid_shift and reseed_farthest have ONE definition
     # across host loop / oracle / resident kernel / this kernel — vmap gives
     # them the group batch dim, so the bit-for-bit parity contract rests on
     # shared code, not on a hand-copied formula staying in sync
     from repro.core.metrics import centroid_shift
-    from repro.kernels.ref import divide_or_keep, reseed_farthest
+    from repro.kernels.ref import (bound_gap, bound_second_best,
+                                   bounds_may_skip, divide_or_keep,
+                                   reseed_farthest)
     t, s_pad, d_pad = x_ref.shape
     k_pad = c0_ref.shape[0]
     x = x_ref[...].astype(jnp.float32)                     # (t, s_pad, d_pad)
@@ -166,8 +178,26 @@ def _batched_kernel(x_ref, c0_ref, w_ref,
         fire = jnp.any(jnp.logical_and(empty, active[:, None]))
         return jax.lax.cond(fire, do_reseed, lambda c: c, new_c)
 
+    def update_centroids(c, idx, active):
+        """Group-batched segment-sum + division from a full assignment
+        tensor — ONE expression for the exact and pruned loops, so a skipped
+        block's cached assignments contribute bitwise what a fresh pass
+        would have (the pruned-parity argument, lane by lane)."""
+        onehot = (idx[:, :, None] == col).astype(jnp.float32) * w[:, :, None]
+        sums = jax.lax.dot_general(
+            onehot, x, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)            # (t, k_pad, d_pad)
+        counts = jnp.sum(onehot, axis=1)                   # (t, k_pad)
+        new_c = jax.vmap(divide_or_keep)(sums, counts, c)
+        # round-trip through the caller's carry dtype so feasible, fallback
+        # and single-subset solves are bit-for-bit consistent (f32 identity)
+        new_c = new_c.astype(carry_dtype).astype(jnp.float32)
+        if reseed_empty:
+            new_c = reseed(new_c, counts, active)
+        return new_c
+
     def cond(carry):
-        _, it, shift = carry
+        _, it, shift = carry[:3]
         return jnp.any(jnp.logical_and(it < max_iters, shift > tol))
 
     def body(carry):
@@ -176,13 +206,9 @@ def _batched_kernel(x_ref, c0_ref, w_ref,
         # trip count and shift freeze while its groupmates keep iterating —
         # this is what makes each lane bit-for-bit the single-subset solve
         active = jnp.logical_and(it < max_iters, shift > tol)        # (t,)
-        sums, counts, _ = assign_and_reduce(c)
-        new_c = jax.vmap(divide_or_keep)(sums, counts, c)
-        # round-trip through the caller's carry dtype so feasible, fallback
-        # and single-subset solves are bit-for-bit consistent (f32 identity)
-        new_c = new_c.astype(carry_dtype).astype(jnp.float32)
-        if reseed_empty:
-            new_c = reseed(new_c, counts, active)
+        s, _ = score_points(c)
+        idx = jnp.argmin(s, axis=2).astype(jnp.int32)
+        new_c = update_centroids(c, idx, active)
         new_shift = jax.vmap(centroid_shift)(new_c, c)
         c = jnp.where(active[:, None, None], new_c, c)
         it = it + active.astype(jnp.int32)
@@ -191,10 +217,92 @@ def _batched_kernel(x_ref, c0_ref, w_ref,
 
     c0 = jnp.broadcast_to(c0_ref[...].astype(jnp.float32),
                           (t, k_pad, d_pad))
-    final_c, final_it, final_shift = jax.lax.while_loop(
-        cond, body,
-        (c0, jnp.zeros((t,), jnp.int32), jnp.full((t,), jnp.inf,
-                                                  jnp.float32)))
+    iters_rows = skips_ref.shape[1]
+    init3 = (c0, jnp.zeros((t,), jnp.int32),
+             jnp.full((t,), jnp.inf, jnp.float32))
+
+    if not bound_block:
+        final_c, final_it, final_shift = jax.lax.while_loop(
+            cond, body, init3)
+        skips_ref[...] = jnp.zeros((1, iters_rows, 2), jnp.int32)
+    else:
+        # ---- bound-gated block skipping (prune="bounds") ----
+        # Same triangle-inequality gate as the single-subset kernel, but a
+        # block here is a (t, bound_block) slab shared by the whole group:
+        # it is skipped only when EVERY lane clears it — an active lane's
+        # stored margin beats twice its accumulated drift, or the lane is
+        # frozen (its update is discarded by the ``where(active)`` masks, so
+        # whatever its cached assignments produce is dead work either way).
+        # Skipped slabs reuse cached assignments; the group-batched
+        # segment-sum is the SAME contraction either way, so every active
+        # lane stays bit-for-bit the exact solve.
+        bb = bound_block
+        nb = s_pad // bb
+        colb = col[:, :bb, :]                              # (t, bb, k_pad)
+
+        def score_blocks(c, idx, margin, skip_b):
+            cn = jnp.sum(c * c, axis=2)[:, None, :]        # (t, 1, k_pad)
+
+            def blk(b, carry):
+                def compute(args):
+                    idx, margin = args
+                    xb = jax.lax.dynamic_slice_in_dim(x, b * bb, bb, 1)
+                    x2b = jax.lax.dynamic_slice_in_dim(x2, b * bb, bb, 1)
+                    wb = jax.lax.dynamic_slice_in_dim(w, b * bb, bb, 1)
+                    sc = cn - 2.0 * jax.lax.dot_general(
+                        xb, c, (((2,), (2,)), ((0,), (0,))),
+                        preferred_element_type=jnp.float32)
+                    sc = jnp.where(colb < k_actual, sc, jnp.inf)
+                    ib = jnp.argmin(sc, axis=2).astype(jnp.int32)
+                    gap = bound_gap(jnp.min(sc, axis=2) + x2b,
+                                    bound_second_best(sc, ib) + x2b,
+                                    wb > 0.0)              # (t, bb)
+                    idx = jax.lax.dynamic_update_slice_in_dim(
+                        idx, ib, b * bb, 1)
+                    margin = jax.lax.dynamic_update_slice_in_dim(
+                        margin, jnp.min(gap, axis=1)[:, None], b, 1)
+                    return idx, margin
+
+                return jax.lax.cond(skip_b[b], lambda a: a, compute, carry)
+
+            return jax.lax.fori_loop(0, nb, blk, (idx, margin))
+
+        def body_pruned(carry):
+            c, it, shift, trip, idx, margin, dacc, skips = carry
+            active = jnp.logical_and(it < max_iters, shift > tol)    # (t,)
+            lane_ok = jnp.logical_or(
+                jnp.logical_not(active)[:, None],
+                bounds_may_skip(margin, dacc))             # (t, nb)
+            skip_b = jnp.all(lane_ok, axis=0)              # (nb,)
+            idx, margin = score_blocks(c, idx, margin, skip_b)
+            new_c = update_centroids(c, idx, active)
+            new_shift = jax.vmap(centroid_shift)(new_c, c)
+            # drift state advances only on active lanes; frozen lanes keep
+            # their (now irrelevant) margins — they skip via ~active
+            dacc = jnp.where(
+                active[:, None],
+                jnp.where(skip_b[None, :], dacc + new_shift[:, None],
+                          new_shift[:, None]),
+                dacc)
+            c = jnp.where(active[:, None, None], new_c, c)
+            it = it + active.astype(jnp.int32)
+            shift = jnp.where(active, new_shift, shift)
+            # counters weight blocks by live lanes so a mostly-converged
+            # group reads as mostly-skipped, matching the work it does
+            n_act = jnp.sum(active.astype(jnp.int32))
+            skips = skips.at[trip, 0].set(
+                jnp.sum(skip_b.astype(jnp.int32)) * n_act)
+            skips = skips.at[trip, 1].set(nb * n_act)
+            return c, it, shift, trip + 1, idx, margin, dacc, skips
+
+        init = init3 + (jnp.int32(0),
+                        jnp.zeros((t, s_pad), jnp.int32),
+                        jnp.full((t, nb), -jnp.inf, jnp.float32),
+                        jnp.zeros((t, nb), jnp.float32),
+                        jnp.zeros((iters_rows, 2), jnp.int32))
+        final_c, final_it, final_shift, _, _, _, _, skips = \
+            jax.lax.while_loop(cond, body_pruned, init)
+        skips_ref[...] = skips[None]
 
     # final statistics with the converged centroids — one extra group-batched
     # assignment pass that never leaves VMEM
@@ -211,7 +319,8 @@ def _batched_kernel(x_ref, c0_ref, w_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("group_t", "max_iters", "tol",
-                                    "interpret", "reseed_empty"))
+                                    "interpret", "reseed_empty", "prune",
+                                    "bound_block"))
 def _lloyd_solve_batched(subsets: jnp.ndarray,
                          centroids: jnp.ndarray,
                          weights: jnp.ndarray | None = None,
@@ -220,12 +329,17 @@ def _lloyd_solve_batched(subsets: jnp.ndarray,
                          max_iters: int = 300,
                          tol: float = 1e-6,
                          interpret: bool = False,
-                         reseed_empty: bool = False):
+                         reseed_empty: bool = False,
+                         prune: str = "none",
+                         bound_block: int | None = None):
     m, s, d = subsets.shape
     k = centroids.shape[0]
     t = max(1, min(int(group_t), m))
     s_pad, k_pad, d_pad = resident_tile_shapes(s, d, k)
     m_pad = -(-m // t) * t                    # pad with zero-weight subsets
+    bb = bound_block_rows(s_pad, bound_block) if prune == "bounds" else 0
+    iters_rows = max(int(max_iters), 1)
+    n_groups = m_pad // t
 
     x = jnp.zeros((m_pad, s_pad, d_pad), subsets.dtype)
     x = x.at[:m, :s, :d].set(subsets)
@@ -234,12 +348,12 @@ def _lloyd_solve_batched(subsets: jnp.ndarray,
     w = w.at[:m, :s].set(1.0 if weights is None
                          else weights.astype(jnp.float32))
 
-    c_out, sse, iters, conv = pl.pallas_call(
+    c_out, sse, iters, conv, skips = pl.pallas_call(
         functools.partial(_batched_kernel, k_actual=k, s_actual=s,
                           max_iters=max_iters, tol=tol,
                           carry_dtype=centroids.dtype,
-                          reseed_empty=reseed_empty),
-        grid=(m_pad // t,),
+                          reseed_empty=reseed_empty, bound_block=bb),
+        grid=(n_groups,),
         in_specs=[
             pl.BlockSpec((t, s_pad, d_pad), lambda g: (g, 0, 0)),
             pl.BlockSpec((k_pad, d_pad), lambda g: (0, 0)),
@@ -251,18 +365,21 @@ def _lloyd_solve_batched(subsets: jnp.ndarray,
             # per-subset (trips, converged) is scalar loop state -> SMEM
             pl.BlockSpec((t, 1), lambda g: (g, 0), memory_space=pltpu.SMEM),
             pl.BlockSpec((t, 1), lambda g: (g, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, iters_rows, 2), lambda g: (g, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m_pad, k_pad, d_pad), jnp.float32),
             jax.ShapeDtypeStruct((m_pad, 1), jnp.float32),
             jax.ShapeDtypeStruct((m_pad, 1), jnp.int32),
             jax.ShapeDtypeStruct((m_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_groups, iters_rows, 2), jnp.int32),
         ],
         interpret=interpret,
     )(x, c, w)
 
+    # per-group counters sum into one stack-level (max_iters, 2) trajectory
     return (c_out[:m, :k, :d].astype(centroids.dtype), sse[:m, 0],
-            iters[:m, 0], conv[:m, 0].astype(bool))
+            iters[:m, 0], conv[:m, 0].astype(bool), jnp.sum(skips, axis=0))
 
 
 def lloyd_solve_batched(subsets: jnp.ndarray,
@@ -274,7 +391,10 @@ def lloyd_solve_batched(subsets: jnp.ndarray,
                         tol: float = 1e-6,
                         interpret: bool | None = None,
                         spec: specs.KernelSpec | None = None,
-                        reseed_empty: bool = False):
+                        reseed_empty: bool = False,
+                        prune: str = "none",
+                        bound_block: int | None = None,
+                        return_skips: bool = False):
     """A whole STACK of Lloyd solves in ONE kernel launch:
     (M,S,d),(k,d)[,(M,S)] -> (centroids (M,k,d), sse (M,), iters (M,) i32,
     converged (M,) bool).
@@ -293,13 +413,22 @@ def lloyd_solve_batched(subsets: jnp.ndarray,
     ``batched`` engine does, and falls back to the vmap-of-solve path.
     An explicit ``group_t`` is always honored (interpret-mode benches and
     tests rely on that).
+
+    ``prune="bounds"`` turns on the bound-gated block skipping of the
+    single-subset kernel at group granularity: a (T, bound_block) slab of
+    points skips its score pass when every live lane's stored margin clears
+    twice its accumulated drift — results stay bit-for-bit the exact
+    stack's.  ``return_skips=True`` appends a ``(max_iters, 2)`` int32
+    counter, [lane-blocks skipped, lane-blocks live] per iteration summed
+    over groups (all zeros for ``prune="none"``).
     """
+    check_prune(prune)
     m, s, d = subsets.shape
     k = centroids.shape[0]
     if group_t is None and spec is not None:
         group_t = spec.group_t
     if group_t is None:
-        group_t = batched_group_size(m, s, d, k)
+        group_t = batched_group_size(m, s, d, k, prune=prune)
         if group_t <= 0:
             # never silently clamp an infeasible auto-derivation to T=1 and
             # launch over budget — an explicit group_t is the caller taking
@@ -314,8 +443,10 @@ def lloyd_solve_batched(subsets: jnp.ndarray,
     if interpret is None:
         interpret = (spec.interpret if spec is not None
                      and spec.interpret is not None else False)
-    return _lloyd_solve_batched(subsets, centroids, weights,
-                                group_t=int(group_t),
-                                max_iters=max_iters, tol=tol,
-                                interpret=bool(interpret),
-                                reseed_empty=bool(reseed_empty))
+    out = _lloyd_solve_batched(subsets, centroids, weights,
+                               group_t=int(group_t),
+                               max_iters=max_iters, tol=tol,
+                               interpret=bool(interpret),
+                               reseed_empty=bool(reseed_empty),
+                               prune=prune, bound_block=bound_block)
+    return out if return_skips else out[:4]

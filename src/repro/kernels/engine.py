@@ -12,13 +12,16 @@ protocol:
     reseeding).
   * ``sse(points, centroids, weights) -> ()`` — score a centroid set.
     Defaults to one ``step`` (so fused-style engines pay one sweep, not two).
-  * ``solve(points, init, weights, max_iters, tol, reseed_empty) ->
+  * ``solve(points, init, weights, max_iters, tol, reseed_empty, prune) ->
     (centroids, sse, iters, converged)`` — a whole solve.  The default drives
     ``step`` from a host-side ``lax.while_loop``; engines that own their
     convergence loop (``resident``) override it, which is how the loop moves
-    from core/ down into the kernel layer.
-  * ``solve_batched(subsets, init, weights, max_iters, tol, reseed_empty) ->
-    (centroids (M,k,d), sse (M,), iters (M,), converged (M,))`` — a whole
+    from core/ down into the kernel layer.  ``prune`` ("none" | "bounds")
+    selects the bound-gated block-skipping variant of the whole-solve
+    kernels — a pure perf knob with a bit-for-bit-identical result, so
+    per-step engines validate it and run their (always-exact) loop.
+  * ``solve_batched(subsets, init, weights, max_iters, tol, reseed_empty,
+    prune) -> (centroids (M,k,d), sse (M,), iters (M,), converged (M,))`` — a whole
     STACK of solves (one device's S2 reducer stack).  The default is a vmap
     of ``solve`` (so per-subset engines behave exactly as before — for
     ``resident`` that means a serialized grid of single-block kernels); the
@@ -136,15 +139,23 @@ class LloydEngine:
         return jnp.sum(w * mind)
 
     def solve(self, points, init_centroids, weights=None, *,
-              max_iters: int, tol: float, reseed_empty: bool = False):
+              max_iters: int, tol: float, reseed_empty: bool = False,
+              prune: str = "none"):
         """Lloyd to convergence -> (centroids, sse, iters, converged).
 
         The default host-side loop; ``max_iters``/``tol`` are static.
+        ``prune`` is validated but otherwise ignored here: bound-gated
+        skipping is an on-chip perf variant of the whole-solve kernels with
+        a bit-for-bit-identical result (see kernels/resident.py), and the
+        host-side per-step loop has no block state to skip — re-running the
+        exact loop IS the pruned result.
         """
         # deferred import (like the lazy ops imports below): core imports
         # this module at its own import time.  ONE stop criterion everywhere
         # — pkmeans, the solve oracle and the resident kernel share it.
         from repro.core.metrics import centroid_shift
+        from repro.kernels.resident import check_prune
+        check_prune(prune)
 
         def cond(carry):
             c, it, shift = carry
@@ -168,22 +179,24 @@ class LloydEngine:
         return final_c, total, iters, shift <= tol
 
     def solve_batched(self, subsets, init_centroids, weights=None, *,
-                      max_iters: int, tol: float, reseed_empty: bool = False):
+                      max_iters: int, tol: float, reseed_empty: bool = False,
+                      prune: str = "none"):
         """A stack of solves: (M,S,d),(k,d)[,(M,S)] ->
         (centroids (M,k,d), sse (M,), iters (M,) i32, converged (M,) bool).
 
         Default: vmap of ``solve`` over the stack — every per-subset engine
         composes under vmap unchanged (for ``resident`` this is the
         serialized grid of single-block kernels the ``batched`` engine
-        replaces with one pipelined multi-group launch).
+        replaces with one pipelined multi-group launch).  ``prune`` threads
+        into each lane's solve (see ``solve``).
         """
         if weights is None:
             return jax.vmap(lambda p: self.solve(
                 p, init_centroids, None, max_iters=max_iters, tol=tol,
-                reseed_empty=reseed_empty))(subsets)
+                reseed_empty=reseed_empty, prune=prune))(subsets)
         return jax.vmap(lambda p, w: self.solve(
             p, init_centroids, w, max_iters=max_iters, tol=tol,
-            reseed_empty=reseed_empty))(subsets, weights)
+            reseed_empty=reseed_empty, prune=prune))(subsets, weights)
 
 
 class JnpEngine(LloydEngine):
@@ -261,17 +274,21 @@ class ResidentEngine(FusedEngine):
     name = "resident"
 
     def solve(self, points, init_centroids, weights=None, *,
-              max_iters: int, tol: float, reseed_empty: bool = False):
+              max_iters: int, tol: float, reseed_empty: bool = False,
+              prune: str = "none"):
         from repro.kernels import ops, resident
+        resident.check_prune(prune)
         n, d = points.shape
         k = init_centroids.shape[0]
-        if not resident.resident_feasible(n, d, k):
+        # the bound state is part of the working set, so a pruned solve can
+        # be infeasible where the exact one fits — the guard knows
+        if not resident.resident_feasible(n, d, k, prune=prune):
             return super().solve(points, init_centroids, weights,
                                  max_iters=max_iters, tol=tol,
                                  reseed_empty=reseed_empty)
         final_c, total, iters, conv = ops.lloyd_solve_resident(
             points, init_centroids, weights, max_iters=max_iters, tol=tol,
-            reseed_empty=reseed_empty,
+            reseed_empty=reseed_empty, prune=prune,
             spec=self.resolve_spec(points, init_centroids))
         return final_c.astype(init_centroids.dtype), total, iters, conv
 
@@ -294,39 +311,44 @@ class BatchedEngine(ResidentEngine):
 
     name = "batched"
 
-    def resolve_group_size(self, m: int, s: int, d: int, k: int, dtype):
+    def resolve_group_size(self, m: int, s: int, d: int, k: int, dtype,
+                           prune: str = "none"):
         """Subsets per grid step for an (M, S, d, k) stack — 0: infeasible.
 
         The tuning cache's ``group_t`` winner (keyed with the ``|m<bucket>``
         stack extension) takes precedence; otherwise fill the DeviceProfile
         budget via ``batched_group_size``.  Cached winners clamp to what the
         local budget actually affords, so a cache tuned on a bigger chip is
-        always safe to consume.
+        always safe to consume.  ``prune`` charges the bound state to the
+        budget-derived cap (and clamps cached winners the same way).
         """
         from repro.kernels import batch_resident
         from repro.kernels import tuning      # deferred: tuning imports us
-        cap = batch_resident.batched_group_size(m, s, d, k)
+        cap = batch_resident.batched_group_size(m, s, d, k, prune=prune)
         if cap <= 0:
             return 0
         cached = tuning.lookup_group_t(s, d, k, m, dtype)
         return min(cached, cap) if cached else cap
 
     def solve_batched(self, subsets, init_centroids, weights=None, *,
-                      max_iters: int, tol: float, reseed_empty: bool = False):
-        from repro.kernels import ops
+                      max_iters: int, tol: float, reseed_empty: bool = False,
+                      prune: str = "none"):
+        from repro.kernels import ops, resident
+        resident.check_prune(prune)
         m, s, d = subsets.shape
         k = init_centroids.shape[0]
         # reseed_empty no longer gates the kernel: the tuning cache's
         # group_t winner resolves exactly as on the reseed-off path
-        t = self.resolve_group_size(m, s, d, k, subsets.dtype)
+        t = self.resolve_group_size(m, s, d, k, subsets.dtype, prune=prune)
         if t <= 0:
             return super().solve_batched(subsets, init_centroids, weights,
                                          max_iters=max_iters, tol=tol,
-                                         reseed_empty=reseed_empty)
+                                         reseed_empty=reseed_empty,
+                                         prune=prune)
         final_c, sse, iters, conv = ops.lloyd_solve_batched(
             subsets, init_centroids, weights, group_t=t,
             max_iters=max_iters, tol=tol, reseed_empty=reseed_empty,
-            spec=self.resolve_spec(subsets, init_centroids))
+            prune=prune, spec=self.resolve_spec(subsets, init_centroids))
         return final_c.astype(init_centroids.dtype), sse, iters, conv
 
 

@@ -84,12 +84,18 @@ def lloyd_solve_resident(points, centroids, weights=None, *,
                          max_iters: int = 300, tol: float = 1e-6,
                          spec: KernelSpec | None = None,
                          interpret: bool | None = None,
-                         reseed_empty: bool = False):
+                         reseed_empty: bool = False,
+                         prune: str = "none",
+                         bound_block: int | None = None,
+                         return_skips: bool = False):
     """Whole Lloyd solve in ONE kernel launch (VMEM-resident loop) ->
     (centroids (k,d), sse (), iters () i32, converged () bool).  Points
     stream from HBM once per solve; ``reseed_empty`` folds the farthest-
     point empty-cluster reseed into the on-chip loop (still one launch);
-    see kernels/resident.py for the feasibility contract (budget from the
+    ``prune="bounds"`` adds Hamerly-style bound-gated block skipping to the
+    on-chip loop (bit-for-bit-identical result; ``return_skips=True``
+    appends the (max_iters, 2) [skipped, total] block counters); see
+    kernels/resident.py for the feasibility contract (budget from the
     chip's DeviceProfile)."""
     if interpret is None:
         interpret = (spec.interpret if spec is not None else None)
@@ -98,7 +104,9 @@ def lloyd_solve_resident(points, centroids, weights=None, *,
     return _lloyd_solve_resident(points, centroids, weights,
                                  max_iters=max_iters, tol=tol,
                                  interpret=interpret,
-                                 reseed_empty=reseed_empty)
+                                 reseed_empty=reseed_empty,
+                                 prune=prune, bound_block=bound_block,
+                                 return_skips=return_skips)
 
 
 def lloyd_solve_batched(subsets, centroids, weights=None, *,
@@ -106,14 +114,20 @@ def lloyd_solve_batched(subsets, centroids, weights=None, *,
                         max_iters: int = 300, tol: float = 1e-6,
                         spec: KernelSpec | None = None,
                         interpret: bool | None = None,
-                        reseed_empty: bool = False):
+                        reseed_empty: bool = False,
+                        prune: str = "none",
+                        bound_block: int | None = None,
+                        return_skips: bool = False):
     """A whole STACK of Lloyd solves in ONE pipelined kernel launch:
     (M,S,d),(k,d)[,(M,S)] -> (centroids (M,k,d), sse (M,), iters (M,) i32,
     converged (M,) bool).  ``group_t`` is the subsets-per-grid-step batch
     (default: the spec's tuned ``group_t``, else fill the DeviceProfile
     budget); ``reseed_empty`` folds the per-lane farthest-point reseed into
-    the group loop (still one launch per stack); see
-    kernels/batch_resident.py for the feasibility contract."""
+    the group loop (still one launch per stack); ``prune="bounds"`` adds
+    bound-gated block skipping at group granularity (bit-for-bit-identical
+    results; ``return_skips=True`` appends the (max_iters, 2) stack-summed
+    [skipped, live] lane-block counters); see kernels/batch_resident.py for
+    the feasibility contract."""
     if interpret is None:
         interpret = (spec.interpret if spec is not None else None)
     if interpret is None:
@@ -122,7 +136,9 @@ def lloyd_solve_batched(subsets, centroids, weights=None, *,
                                        group_t=group_t,
                                        max_iters=max_iters, tol=tol,
                                        spec=spec, interpret=interpret,
-                                       reseed_empty=reseed_empty)
+                                       reseed_empty=reseed_empty,
+                                       prune=prune, bound_block=bound_block,
+                                       return_skips=return_skips)
 
 
 # re-export oracles so callers can switch implementations uniformly
@@ -130,3 +146,4 @@ assign_ref = ref.assign_ref
 centroid_update_ref = ref.centroid_update_ref
 lloyd_step_ref = ref.lloyd_step_ref
 lloyd_solve_ref = ref.lloyd_solve_ref
+lloyd_solve_bounds_ref = ref.lloyd_solve_bounds_ref

@@ -116,6 +116,128 @@ def lloyd_step_ref(points: jnp.ndarray, centroids: jnp.ndarray,
     return sums, counts, sse
 
 
+# --------------------------------------------------------------- pruning --
+#
+# Hamerly-style triangle-inequality bounds (see "Improving The Performance
+# Of The K-means Algorithm", PAPERS.md), at point-BLOCK granularity: a block
+# whose worst-case margin (second-best distance minus best distance, min'd
+# over the block) exceeds twice the centroid drift accumulated since the
+# block was last scored provably keeps every assignment, so its score pass
+# can be skipped.  The three helpers below are pure jnp (2-D iota only), so
+# they trace on-chip — the resident/batched kernels and the jnp oracle share
+# ONE definition of the skip condition, exactly like ``divide_or_keep``.
+
+
+def bound_second_best(scores: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Min score over the non-assigned centroids: (..., k), (...) -> (...).
+
+    With k == 1 (or every other column masked to +inf) this is +inf — the
+    gap is unbounded and the block is skippable forever, which is correct:
+    a single centroid can never steal an assignment.
+    """
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, scores.ndim - 1)
+    masked = jnp.where(col == labels[..., None], jnp.inf, scores)
+    return jnp.min(masked, axis=-1)
+
+
+def bound_gap(best_sq: jnp.ndarray, second_sq: jnp.ndarray,
+              valid: jnp.ndarray) -> jnp.ndarray:
+    """Per-point reassignment margin in DISTANCE units: d2 - d1 from the
+    squared best/second-best distances, +inf for invalid (padding) rows so
+    they never constrain a block's margin."""
+    gap = (jnp.sqrt(jnp.maximum(second_sq, 0.0))
+           - jnp.sqrt(jnp.maximum(best_sq, 0.0)))
+    return jnp.where(valid, gap, jnp.inf)
+
+
+def bounds_may_skip(margin: jnp.ndarray, drift: jnp.ndarray) -> jnp.ndarray:
+    """The triangle-inequality skip condition.  ``margin`` is the block's
+    stored worst-case gap (d2 - d1 at the last scored iteration); ``drift``
+    the total max per-centroid movement accumulated since.  Every point's
+    best distance grew by at most ``drift`` and its second-best shrank by at
+    most ``drift``, so ``margin > 2 * drift`` proves no assignment in the
+    block can change.  Strict inequality: a fresh block carries ``-inf``
+    margin and never skips its first pass."""
+    return margin > 2.0 * drift
+
+
+def lloyd_solve_bounds_ref(points: jnp.ndarray, centroids: jnp.ndarray,
+                           weights: jnp.ndarray | None = None,
+                           *, max_iters: int = 300, tol: float = 1e-6,
+                           block_rows: int = 64):
+    """Bound-pruned solve oracle: ``lloyd_solve_ref`` with the block-skip
+    logic of the pruned kernels -> (centroids, sse, iters, converged,
+    skips (max_iters, 2) i32 — [blocks skipped, blocks total] per iteration).
+
+    The oracle computes the full score matrix every iteration (it is ground
+    truth, not a fast path) but SELECTS the cached assignment for blocks the
+    bound declares skippable — so an unsound bound (a "skipped" block that
+    would in fact reassign) diverges from :func:`lloyd_solve_ref` and the
+    bit-for-bit parity assertion catches it.  The compute path (assignment,
+    segment-sum, stop criterion, final statistics) is structurally identical
+    to ``lloyd_solve_ref`` — no padding, same expressions — which is why
+    parity is exact, not approximate.
+    """
+    from repro.core.metrics import centroid_shift
+    n, d = points.shape
+    k = centroids.shape[0]
+    bb = max(1, min(int(block_rows), n))
+    n_pad = -(-n // bb) * bb
+    nb = n_pad // bb
+    iters_rows = max(int(max_iters), 1)
+    w = (jnp.ones(n, jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    x = points.astype(jnp.float32)
+
+    def full_assign(c):
+        # assign_ref's expression inlined: the bound pass needs the full d2
+        # matrix (for second-best distances), which assign_ref does not
+        # expose.  Same ops in the same order keep labels/mind bitwise.
+        x2 = jnp.sum(x ** 2, axis=-1, keepdims=True)
+        c2 = jnp.sum(c ** 2, axis=-1)[None, :]
+        d2 = jnp.maximum(x2 - 2.0 * (x @ c.T) + c2, 0.0)
+        labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+        mind = jnp.take_along_axis(d2, labels[:, None], axis=-1)[:, 0]
+        return d2, labels, mind
+
+    def block_min(v):
+        # per-block min of a per-point vector; +inf padding only feeds this
+        # derived reduction, never the exact compute path
+        vp = jnp.full((n_pad,), jnp.inf, jnp.float32).at[:n].set(v)
+        return jnp.min(vp.reshape(nb, bb), axis=1)
+
+    def cond(carry):
+        _, it, shift, *_ = carry
+        return jnp.logical_and(it < max_iters, shift > tol)
+
+    def body(carry):
+        c, it, _, idx, margin, dacc, skips = carry
+        skip_b = bounds_may_skip(margin, dacc)                      # (nb,)
+        d2, labels, mind = full_assign(c)
+        second = bound_second_best(d2, labels)
+        new_margin = block_min(bound_gap(mind, second, w > 0.0))
+        skip_rows = jnp.repeat(skip_b, bb, total_repeat_length=n_pad)[:n]
+        idx = jnp.where(skip_rows, idx, labels)
+        margin = jnp.where(skip_b, margin, new_margin)
+        sums, counts = centroid_update_ref(x, idx, w, k)
+        new_c = divide_or_keep(sums, counts, c)
+        shift = centroid_shift(new_c, c)
+        dacc = jnp.where(skip_b, dacc + shift, shift)
+        skips = skips.at[it, 0].set(jnp.sum(skip_b.astype(jnp.int32)))
+        skips = skips.at[it, 1].set(nb)
+        return new_c, it + 1, shift, idx, margin, dacc, skips
+
+    init = (centroids.astype(jnp.float32), jnp.int32(0),
+            jnp.float32(jnp.inf), jnp.zeros((n,), jnp.int32),
+            jnp.full((nb,), -jnp.inf, jnp.float32),
+            jnp.zeros((nb,), jnp.float32),
+            jnp.zeros((iters_rows, 2), jnp.int32))
+    final_c, iters, shift, _, _, _, skips = jax.lax.while_loop(
+        cond, body, init)
+    _, mind = assign_ref(points, final_c)
+    return final_c, jnp.sum(w * mind), iters, shift <= tol, skips
+
+
 def lloyd_solve_ref(points: jnp.ndarray, centroids: jnp.ndarray,
                     weights: jnp.ndarray | None = None,
                     *, max_iters: int = 300, tol: float = 1e-6):

@@ -58,6 +58,10 @@ from repro.kernels import specs
 from repro.kernels.specs import F32, KernelSpec
 
 
+DEFAULT_BOUND_BLOCK = 256   # target point-block rows for bound-gated pruning
+BOUND_ITER_ROWS = 304       # nominal skip-counter rows in the VMEM byte model
+
+
 def resident_tile_shapes(n: int, d: int, k: int):
     """Padded (n_pad, k_pad, d_pad) for the single-block resident kernel."""
     n_pad = -(-n // 8) * 8
@@ -66,35 +70,63 @@ def resident_tile_shapes(n: int, d: int, k: int):
     return n_pad, k_pad, d_pad
 
 
-def resident_vmem_bytes(n: int, d: int, k: int) -> int:
+def bound_block_rows(n_pad: int, bound_block: int | None = None) -> int:
+    """Pruning block size actually used for an ``n_pad``-row tile: the
+    largest multiple-of-8 divisor of ``n_pad`` that is <= ``bound_block``
+    (>= 8).  Dividing exactly keeps the pruned path's padded row count — and
+    therefore its segment-sum reduction — IDENTICAL to the exact path's,
+    which is half of the bit-for-bit parity argument."""
+    if bound_block is None:
+        bound_block = DEFAULT_BOUND_BLOCK
+    q = n_pad // 8
+    best = 8
+    for f in range(1, q + 1):
+        if q % f == 0 and 8 * f <= bound_block:
+            best = 8 * f
+    return best
+
+
+def resident_vmem_bytes(n: int, d: int, k: int,
+                        prune: str = "none") -> int:
     """f32 working-set bytes of one resident solve (everything on-chip).
 
     Counts the points tile, the (n, k) score + one-hot matrices, three (k, d)
     centroid-sized arrays (current, sums, new), and the (n,)/(k,) vectors
-    (weights, ||x||^2, best, index, counts).
+    (weights, ||x||^2, best, index, counts).  ``prune="bounds"`` adds the
+    bound state the pruned loop carries: cached per-point assignments, the
+    per-block margin/drift pair (worst case: 8-row blocks), and the
+    skip-counter rows.
     """
     n_pad, k_pad, d_pad = resident_tile_shapes(n, d, k)
-    return (n_pad * d_pad                       # points
-            + 2 * n_pad * k_pad                 # scores + one-hot
-            + 3 * k_pad * d_pad                 # centroids, sums, new centroids
-            + 4 * n_pad + 2 * k_pad) * F32      # w, x2, best, idx / counts, cn
+    total = (n_pad * d_pad                      # points
+             + 2 * n_pad * k_pad                # scores + one-hot
+             + 3 * k_pad * d_pad                # centroids, sums, new centroids
+             + 4 * n_pad + 2 * k_pad) * F32     # w, x2, best, idx / counts, cn
+    if prune == "bounds":
+        total += (n_pad                         # cached assignments
+                  + 2 * (n_pad // 8)            # margin + drift, 8-row blocks
+                  + 2 * BOUND_ITER_ROWS) * F32  # skipped/total counters
+    return total
 
 
 def resident_feasible(n: int, d: int, k: int,
-                      budget: int | None = None) -> bool:
+                      budget: int | None = None,
+                      prune: str = "none") -> bool:
     """Can the whole solve stay resident in VMEM for this (n, d, k)?
 
     ``budget`` defaults to the local chip's :class:`DeviceProfile` working-
     set budget (``specs.get_profile().budget_bytes``) — the guard matches
-    the hardware it runs on, not a hardcoded constant.
+    the hardware it runs on, not a hardcoded constant.  ``prune`` folds the
+    bound-state bytes into the feasibility check.
     """
     if budget is None:
         budget = specs.get_profile().budget_bytes
-    return resident_vmem_bytes(n, d, k) <= budget
+    return resident_vmem_bytes(n, d, k, prune=prune) <= budget
 
 
 def max_resident_points(d: int, k: int,
-                        budget: int | None = None) -> int:
+                        budget: int | None = None,
+                        prune: str = "none") -> int:
     """Largest subset size n that keeps a (d, k) solve VMEM-resident.
 
     This is the sizing knob for IPKMeans S2: the paper's answer to a subset
@@ -106,23 +138,29 @@ def max_resident_points(d: int, k: int,
         budget = specs.get_profile().budget_bytes
     _, k_pad, d_pad = resident_tile_shapes(8, d, k)
     fixed = (3 * k_pad * d_pad + 2 * k_pad) * F32
-    per_n = (d_pad + 2 * k_pad + 4) * F32
+    per_n8 = 8 * (d_pad + 2 * k_pad + 4) * F32   # bytes per 8-row granule
+    if prune == "bounds":
+        fixed += 2 * BOUND_ITER_ROWS * F32
+        per_n8 += (8 + 2) * F32                  # cached idx + margin/drift
     if fixed >= budget:
         return 0
-    n = (budget - fixed) // per_n
-    return max(0, int(n - n % 8))
+    n = 8 * ((budget - fixed) // per_n8)
+    return max(0, int(n))
 
 
 def _resident_kernel(x_ref, c0_ref, w_ref,
-                     c_out_ref, sse_ref, iters_ref, conv_ref,
+                     c_out_ref, sse_ref, iters_ref, conv_ref, skips_ref,
                      state_scr, *,
                      k_actual: int, n_actual: int, max_iters: int,
-                     tol: float, carry_dtype, reseed_empty: bool):
+                     tol: float, carry_dtype, reseed_empty: bool,
+                     bound_block: int = 0):
     # deferred (trace-time) import: core imports the kernels package at its
     # own import time.  centroid_shift is pure jnp, so it traces on-chip —
     # the stop criterion has ONE definition across host loop/oracle/kernel.
     from repro.core.metrics import centroid_shift
-    from repro.kernels.ref import divide_or_keep, reseed_farthest
+    from repro.kernels.ref import (bound_gap, bound_second_best,
+                                   bounds_may_skip, divide_or_keep,
+                                   reseed_farthest)
     x = x_ref[...].astype(jnp.float32)                     # (n_pad, d_pad)
     w = w_ref[...].astype(jnp.float32)                     # (n_pad,)
     x2 = jnp.sum(x * x, axis=1)                            # (n_pad,)
@@ -169,13 +207,15 @@ def _resident_kernel(x_ref, c0_ref, w_ref,
 
         return jax.lax.cond(jnp.any(empty), do_reseed, lambda c: c, new_c)
 
-    def cond(carry):
-        c, it, shift = carry
-        return jnp.logical_and(it < max_iters, shift > tol)
-
-    def body(carry):
-        c, it, _ = carry
-        sums, counts, _ = assign_and_reduce(c)
+    def update_centroids(c, idx):
+        """Segment-sum + division from a full assignment vector.  ONE
+        expression for the exact and pruned loops: the pruned path feeds
+        cached assignments through the SAME contraction, so a skipped
+        block's contribution is bitwise the contribution a fresh (provably
+        identical) assignment would have made."""
+        onehot = (idx[:, None] == col).astype(jnp.float32) * w[:, None]
+        sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+        counts = jnp.sum(onehot, axis=0)
         new_c = divide_or_keep(sums, counts, c)
         # the host loop carries centroids in the caller's dtype; round-trip
         # through it so feasible and fallback solves are bit-for-bit
@@ -183,18 +223,98 @@ def _resident_kernel(x_ref, c0_ref, w_ref,
         new_c = new_c.astype(carry_dtype).astype(jnp.float32)
         if reseed_empty:
             new_c = reseed(new_c, counts)
+        return new_c
+
+    def cond(carry):
+        c, it, shift = carry[:3]
+        return jnp.logical_and(it < max_iters, shift > tol)
+
+    def body(carry):
+        c, it, _ = carry
+        s, _ = score_points(c)
+        idx = jnp.argmin(s, axis=1).astype(jnp.int32)
+        new_c = update_centroids(c, idx)
         shift = centroid_shift(new_c, c)
         # scalar loop state lives in SMEM: trip count + converged predicate
         state_scr[0] = it + 1
         state_scr[1] = jnp.where(shift <= tol, 1, 0)
         return new_c, it + 1, shift
 
+    n_pad = x.shape[0]
+    iters_rows = skips_ref.shape[0]
+    c0 = c0_ref[...].astype(jnp.float32)
     state_scr[0] = 0                                       # iterations executed
     state_scr[1] = 0                                       # converged flag
-    final_c, _, _ = jax.lax.while_loop(
-        cond, body,
-        (c0_ref[...].astype(jnp.float32), jnp.int32(0),
-         jnp.float32(jnp.inf)))
+
+    if not bound_block:
+        final_c, _, _ = jax.lax.while_loop(
+            cond, body, (c0, jnp.int32(0), jnp.float32(jnp.inf)))
+        skips_ref[...] = jnp.zeros((iters_rows, 2), jnp.int32)
+    else:
+        # ---- bound-gated block skipping (prune="bounds") ----
+        # Extra carried state: cached per-point assignments, per-block
+        # reassignment margin (worst-case d2 - d1 at the last scored trip),
+        # per-block drift accumulated since, and the skip counters.  Each
+        # trip re-scores only the blocks the triangle inequality cannot
+        # clear (ref.bounds_may_skip); skipped blocks reuse their cached
+        # assignments, and the centroid update is the SAME full segment-sum
+        # either way — which is why pruned == exact bit for bit.
+        bb = bound_block
+        nb = n_pad // bb
+        colb = col[:bb]                                    # (bb, k_pad)
+
+        def score_blocks(c, idx, margin, skip_b):
+            """Re-score the non-skippable blocks; cached blocks pass
+            through untouched behind ``lax.cond`` (a real branch — no grid,
+            no vmap — so a skipped block costs no MXU work)."""
+            cn = jnp.sum(c * c, axis=1)[None, :]
+
+            def blk(b, carry):
+                def compute(args):
+                    idx, margin = args
+                    xb = jax.lax.dynamic_slice_in_dim(x, b * bb, bb, 0)
+                    x2b = jax.lax.dynamic_slice_in_dim(x2, b * bb, bb, 0)
+                    wb = jax.lax.dynamic_slice_in_dim(w, b * bb, bb, 0)
+                    s = cn - 2.0 * jnp.dot(xb, c.T,
+                                           preferred_element_type=jnp.float32)
+                    s = jnp.where(colb < k_actual, s, jnp.inf)
+                    ib = jnp.argmin(s, axis=1).astype(jnp.int32)
+                    gap = bound_gap(jnp.min(s, axis=1) + x2b,
+                                    bound_second_best(s, ib) + x2b,
+                                    wb > 0.0)
+                    idx = jax.lax.dynamic_update_slice_in_dim(
+                        idx, ib, b * bb, 0)
+                    margin = jax.lax.dynamic_update_slice_in_dim(
+                        margin, jnp.min(gap)[None], b, 0)
+                    return idx, margin
+
+                return jax.lax.cond(skip_b[b], lambda a: a, compute, carry)
+
+            return jax.lax.fori_loop(0, nb, blk, (idx, margin))
+
+        def body_pruned(carry):
+            c, it, _, idx, margin, dacc, skips = carry
+            skip_b = bounds_may_skip(margin, dacc)         # (nb,)
+            idx, margin = score_blocks(c, idx, margin, skip_b)
+            new_c = update_centroids(c, idx)
+            shift = centroid_shift(new_c, c)
+            # a scored block's drift restarts at this trip's shift; a
+            # skipped block keeps accumulating against its stored margin
+            dacc = jnp.where(skip_b, dacc + shift, shift)
+            skips = skips.at[it, 0].set(jnp.sum(skip_b.astype(jnp.int32)))
+            skips = skips.at[it, 1].set(nb)
+            state_scr[0] = it + 1
+            state_scr[1] = jnp.where(shift <= tol, 1, 0)
+            return new_c, it + 1, shift, idx, margin, dacc, skips
+
+        init = (c0, jnp.int32(0), jnp.float32(jnp.inf),
+                jnp.zeros((n_pad,), jnp.int32),
+                jnp.full((nb,), -jnp.inf, jnp.float32),   # never skip pass 1
+                jnp.zeros((nb,), jnp.float32),
+                jnp.zeros((iters_rows, 2), jnp.int32))
+        final_c, _, _, _, _, _, skips = jax.lax.while_loop(
+            cond, body_pruned, init)
+        skips_ref[...] = skips
 
     # final statistics with the converged centroids (host solvers do the same
     # extra assignment pass — here it never leaves VMEM)
@@ -205,9 +325,18 @@ def _resident_kernel(x_ref, c0_ref, w_ref,
     conv_ref[0, 0] = state_scr[1]
 
 
+def check_prune(prune: str) -> str:
+    """Validate a ``prune`` mode string (shared by every layer that takes
+    one).  Returns the value so callers can inline it."""
+    if prune not in ("none", "bounds"):
+        raise ValueError(
+            f"unknown prune mode {prune!r} (expected 'none' or 'bounds')")
+    return prune
+
+
 @functools.partial(jax.jit,
                    static_argnames=("max_iters", "tol", "interpret",
-                                    "reseed_empty"))
+                                    "reseed_empty", "prune", "bound_block"))
 def _lloyd_solve_resident(points: jnp.ndarray,
                           centroids: jnp.ndarray,
                           weights: jnp.ndarray | None = None,
@@ -215,26 +344,31 @@ def _lloyd_solve_resident(points: jnp.ndarray,
                           max_iters: int = 300,
                           tol: float = 1e-6,
                           interpret: bool = False,
-                          reseed_empty: bool = False):
+                          reseed_empty: bool = False,
+                          prune: str = "none",
+                          bound_block: int | None = None):
     n, d = points.shape
     k = centroids.shape[0]
     n_pad, k_pad, d_pad = resident_tile_shapes(n, d, k)
+    bb = bound_block_rows(n_pad, bound_block) if prune == "bounds" else 0
+    iters_rows = max(int(max_iters), 1)
 
     x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
     c = jnp.zeros((k_pad, d_pad), centroids.dtype).at[:k, :d].set(centroids)
     w = jnp.zeros((n_pad,), jnp.float32)
     w = w.at[:n].set(1.0 if weights is None else weights.astype(jnp.float32))
 
-    c_out, sse, iters, conv = pl.pallas_call(
+    c_out, sse, iters, conv, skips = pl.pallas_call(
         functools.partial(_resident_kernel, k_actual=k, n_actual=n,
                           max_iters=max_iters, tol=tol,
                           carry_dtype=centroids.dtype,
-                          reseed_empty=reseed_empty),
+                          reseed_empty=reseed_empty, bound_block=bb),
         out_shape=[
             jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((iters_rows, 2), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.SMEM((2,), jnp.int32),          # (trip count, converged)
@@ -243,7 +377,7 @@ def _lloyd_solve_resident(points: jnp.ndarray,
     )(x, c, w)
 
     return (c_out[:k, :d].astype(centroids.dtype), sse[0, 0],
-            iters[0, 0], conv[0, 0].astype(bool))
+            iters[0, 0], conv[0, 0].astype(bool), skips)
 
 
 def lloyd_solve_resident(points: jnp.ndarray,
@@ -254,7 +388,10 @@ def lloyd_solve_resident(points: jnp.ndarray,
                          tol: float = 1e-6,
                          interpret: bool | None = None,
                          spec: KernelSpec | None = None,
-                         reseed_empty: bool = False):
+                         reseed_empty: bool = False,
+                         prune: str = "none",
+                         bound_block: int | None = None,
+                         return_skips: bool = False):
     """Full Lloyd solve in ONE kernel launch: (n,d),(k,d)[,(n,)] ->
     (centroids (k,d), sse (), iters () i32, converged () bool).
 
@@ -270,15 +407,29 @@ def lloyd_solve_resident(points: jnp.ndarray,
     does, and falls back to the per-step fused path when the subset does not
     fit VMEM.
 
+    ``prune="bounds"`` turns on Hamerly-style bound-gated block skipping
+    inside the on-chip loop: blocks of ``bound_block`` points (rounded to a
+    divisor of the padded tile; default ``DEFAULT_BOUND_BLOCK``) whose
+    stored reassignment margin exceeds twice the accumulated centroid drift
+    skip their score pass and reuse cached assignments.  The result is
+    bit-for-bit the exact solve's (see ``ref.lloyd_solve_bounds_ref``).
+    ``return_skips=True`` appends a ``(max_iters, 2)`` int32 counter —
+    [blocks skipped, blocks total] per iteration, zero rows past
+    convergence (and everywhere for ``prune="none"``).
+
     This kernel has no block geometry (the whole subset is one block), so of
     a :class:`KernelSpec` only the interpret flag applies; on-chip arithmetic
     is fixed f32 because the carry-dtype round-trip defines the fallback
     parity contract.
     """
+    check_prune(prune)
     if interpret is None:
         interpret = (spec.interpret if spec is not None
                      and spec.interpret is not None else False)
-    return _lloyd_solve_resident(points, centroids, weights,
-                                 max_iters=max_iters, tol=tol,
-                                 interpret=bool(interpret),
-                                 reseed_empty=bool(reseed_empty))
+    out = _lloyd_solve_resident(points, centroids, weights,
+                                max_iters=max_iters, tol=tol,
+                                interpret=bool(interpret),
+                                reseed_empty=bool(reseed_empty),
+                                prune=prune,
+                                bound_block=bound_block)
+    return out if return_skips else out[:4]

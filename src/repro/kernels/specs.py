@@ -221,23 +221,30 @@ class DeviceProfile:
     def fits(self, nbytes: int) -> bool:
         return nbytes <= self.budget_bytes
 
-    def resident_feasible(self, n: int, d: int, k: int) -> bool:
-        """Does a whole (n, d, k) Lloyd solve stay VMEM-resident here?"""
+    def resident_feasible(self, n: int, d: int, k: int,
+                          prune: str = "none") -> bool:
+        """Does a whole (n, d, k) Lloyd solve stay VMEM-resident here?
+        ``prune="bounds"`` charges the bound-state bytes too."""
         from repro.kernels import resident           # deferred: no cycle
-        return resident.resident_vmem_bytes(n, d, k) <= self.budget_bytes
+        return (resident.resident_vmem_bytes(n, d, k, prune=prune)
+                <= self.budget_bytes)
 
-    def max_resident_points(self, d: int, k: int) -> int:
+    def max_resident_points(self, d: int, k: int,
+                            prune: str = "none") -> int:
         """Largest n keeping a (d, k) solve resident — the S2 sizing knob."""
         from repro.kernels import resident
-        return resident.max_resident_points(d, k, self.budget_bytes)
+        return resident.max_resident_points(d, k, self.budget_bytes,
+                                            prune=prune)
 
-    def batched_group_size(self, m: int, s: int, d: int, k: int) -> int:
+    def batched_group_size(self, m: int, s: int, d: int, k: int,
+                           prune: str = "none") -> int:
         """Subsets per grid step that fill this chip's budget for an
         (M, S, d, k) reducer stack (0: even one subset does not fit) — the
         batched megakernel's group-sizing knob."""
         from repro.kernels import batch_resident
         return batch_resident.batched_group_size(m, s, d, k,
-                                                 self.budget_bytes)
+                                                 self.budget_bytes,
+                                                 prune=prune)
 
 
 # Approximate published per-core VMEM by device_kind (longest-prefix match on

@@ -280,7 +280,8 @@ def autotune_step(n: int, d: int, k: int, *,
 
 def candidate_group_ts(m: int, s: int, d: int, k: int,
                        profile: DeviceProfile | None = None,
-                       group_ts=GROUP_TS) -> list[int]:
+                       group_ts=GROUP_TS,
+                       prune: str = "none") -> list[int]:
     """The pruned group-size grid for one (m, s, d, k) reducer stack.
 
     Prunes groups whose per-grid-step working set busts the device budget
@@ -288,10 +289,12 @@ def candidate_group_ts(m: int, s: int, d: int, k: int,
     (``batched_group_size``) always competes so the sweep covers the
     fill-the-budget point even when the static grid stops short.  Returns
     ``[]`` when even a single subset does not fit (the engine's fallback).
+    ``prune`` charges the bound state to every candidate's working set.
     """
     from repro.kernels import batch_resident
     profile = profile or specs.get_profile()
-    cap = batch_resident.batched_group_size(m, s, d, k, profile.budget_bytes)
+    cap = batch_resident.batched_group_size(m, s, d, k, profile.budget_bytes,
+                                            prune=prune)
     if cap <= 0:
         return []
     out = []
@@ -313,6 +316,7 @@ def autotune_batched(m: int, s: int, d: int, k: int, *,
                      group_ts=GROUP_TS,
                      solve_iters: int = 8,
                      reseed_empty: bool = False,
+                     prune: str = "none",
                      measure=None,
                      seed: int = 0):
     """Sweep the group-size axis of the batched-resident megakernel for one
@@ -325,11 +329,16 @@ def autotune_batched(m: int, s: int, d: int, k: int, *,
     iteration counts).  ``reseed_empty`` times the in-kernel reseed path
     instead — the paper-pipeline configuration — under the SAME cache key:
     group size is a geometry knob, and the reseed pass scales with the
-    group exactly like the assignment pass it mirrors.
+    group exactly like the assignment pass it mirrors.  ``prune`` likewise
+    times (and budget-prunes) the bound-gated skipping variant under the
+    same key — results are bitwise identical either way, only the timing
+    and the bound-state bytes differ.
     """
     from repro.kernels import batch_resident
+    from repro.kernels.resident import check_prune
+    check_prune(prune)
     profile = profile or specs.get_profile()
-    cands = candidate_group_ts(m, s, d, k, profile, group_ts)
+    cands = candidate_group_ts(m, s, d, k, profile, group_ts, prune=prune)
     if not cands:
         return None, []
     if measure is None:
@@ -342,7 +351,8 @@ def autotune_batched(m: int, s: int, d: int, k: int, *,
             return _timeit(
                 lambda: ops.lloyd_solve_batched(
                     x, c, group_t=t, max_iters=solve_iters, tol=0.0,
-                    interpret=interpret, reseed_empty=reseed_empty)[0],
+                    interpret=interpret, reseed_empty=reseed_empty,
+                    prune=prune)[0],
                 repeats=repeats)
 
     rows = []
@@ -350,7 +360,8 @@ def autotune_batched(m: int, s: int, d: int, k: int, *,
         rows.append({
             "group_t": t, "time_us": measure(t) * 1e6,
             "launches": -(-m // t),
-            "vmem_bytes": batch_resident.batched_group_vmem_bytes(t, s, d, k),
+            "vmem_bytes": batch_resident.batched_group_vmem_bytes(
+                t, s, d, k, prune=prune),
         })
     rows.sort(key=lambda r: r["time_us"])
     best = specs.DEFAULT_SPEC.replace(group_t=rows[0]["group_t"])

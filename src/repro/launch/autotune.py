@@ -81,6 +81,12 @@ def main(argv=None):
                          "empty-cluster reseed path (the paper-pipeline "
                          "configuration; winners land under the same key — "
                          "group size is a geometry knob either way)")
+    ap.add_argument("--prune", default="none", choices=["none", "bounds"],
+                    help="time the --group-ts sweep through the bound-gated "
+                         "block-skipping solve path ('bounds'); results are "
+                         "bitwise identical to 'none', so winners land under "
+                         "the same key — but the bound state joins each "
+                         "candidate's VMEM working set")
     ap.add_argument("--cache", default=None,
                     help="cache path (default: REPRO_TUNING_CACHE or "
                          "experiments/tuning/kernel_specs.json)")
@@ -127,7 +133,8 @@ def main(argv=None):
                 args.stack_m, s, d, k, dtype=dtype, profile=profile,
                 cache=cache, repeats=args.repeats,
                 interpret=True if args.interpret else None,
-                group_ts=args.group_ts, reseed_empty=args.reseed_empty)
+                group_ts=args.group_ts, reseed_empty=args.reseed_empty,
+                prune=args.prune)
             if best is None:
                 print(f"m{args.stack_m} s{s} d{d} k{k}: no feasible group "
                       f"(budget {profile.budget_bytes >> 20} MiB) — skipped")

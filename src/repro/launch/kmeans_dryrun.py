@@ -99,7 +99,7 @@ def _record(name, mesh_tag, lowered, compiled, extra=None):
 
 
 def lower_all(multi_pod: bool, backend: str = "jnp",
-              reseed_empty: bool = False):
+              reseed_empty: bool = False, prune: str = "none"):
     """Lower the dry-run cells.  ``backend`` names the Lloyd engine for
     pkmeans-iter and s2s3 (any name in the ``kernels.engine`` registry —
     'jnp' | 'pallas' | 'fused' | 'resident' | 'batched' | 'tuned');
@@ -114,12 +114,17 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
     solvers with in-kernel farthest-point empty-cluster reseeding — the
     configuration that matches PKMeans quality end to end — and suffixes
     the records ``__reseed``; the whole-solve engines KEEP their kernels
-    (the reseed runs inside the convergence loop)."""
+    (the reseed runs inside the convergence loop).  ``prune="bounds"``
+    lowers the S2 solvers with bound-gated block skipping in the kernel
+    convergence loops (bit-for-bit-identical results — a pure perf knob)
+    and suffixes the records ``__prune``."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "x".join(map(str, mesh.devices.shape))
     file_tag = mesh_tag if backend == "jnp" else f"{mesh_tag}__{backend}"
     if reseed_empty:
         file_tag += "__reseed"
+    if prune != "none":
+        file_tag += "__prune"
     axes = tuple(mesh.axis_names)
     flat = P(axes)
     n_dev = 512 if multi_pod else 256
@@ -193,7 +198,7 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
     shard_m = NamedSharding(mesh, P(axes, None, None))
     shard_mm = NamedSharding(mesh, P(axes, None))
     params = KMeansParams(max_iters=MAX_ITERS, backend=backend,
-                          reseed_empty=reseed_empty)
+                          reseed_empty=reseed_empty, prune=prune)
 
     def s2s3(subsets, masks, init_centroids):
         def body(sub, msk):
@@ -224,6 +229,7 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
     for rec in results:
         rec["backend"] = backend
         rec["reseed_empty"] = reseed_empty
+        rec["prune"] = prune
         path = OUT_DIR / f"{rec['arch']}__{file_tag}.json"
         path.write_text(json.dumps(rec, indent=2))
         rf = rec["roofline"]
@@ -244,9 +250,13 @@ def main():
                     help="lower the S2 solvers with in-kernel empty-cluster "
                          "reseeding (the paper-pipeline quality knob; "
                          "whole-solve engines keep their kernels)")
+    ap.add_argument("--prune", default="none", choices=["none", "bounds"],
+                    help="lower the S2 solvers with bound-gated block "
+                         "skipping in the kernel convergence loops "
+                         "(bit-for-bit-identical results — a pure perf knob)")
     args = ap.parse_args()
     lower_all(args.multi_pod, backend=args.backend,
-              reseed_empty=args.reseed_empty)
+              reseed_empty=args.reseed_empty, prune=args.prune)
 
 
 if __name__ == "__main__":

@@ -103,15 +103,27 @@ KMEANS_VARIANTS = {
                     "what reseed_empty used to force): the in-kernel "
                     "farthest-point reseed keeps the one-launch-per-stack "
                     "property on the paper-pipeline quality configuration"),
+    "C6": dict(backend="batched", prune="bounds",
+               baseline=dict(backend="batched"),
+               note="bound-pruned batched megakernel vs the exact batched "
+                    "baseline: each group carries per-block margins + "
+                    "accumulated centroid drift and skips a block's score "
+                    "matmul when the triangle-inequality bound proves no "
+                    "assignment can change — bit-for-bit-identical results, "
+                    "late iterations trade MXU dots for a branch test "
+                    "(kernel_bench's pruned row measures the skip fraction)"),
 }
 
 
-def _kmeans_variant_suffix(backend: str, reseed_empty: bool) -> str:
-    """Record-name suffix kmeans_dryrun writes for a (backend, reseed)
-    pair — mirrors its ``file_tag`` rule exactly: the jnp baseline carries
-    no backend suffix, reseed appends ``__reseed`` either way."""
+def _kmeans_variant_suffix(backend: str, reseed_empty: bool,
+                           prune: str = "none") -> str:
+    """Record-name suffix kmeans_dryrun writes for a (backend, reseed,
+    prune) triple — mirrors its ``file_tag`` rule exactly: the jnp baseline
+    carries no backend suffix, reseed appends ``__reseed`` and pruning
+    ``__prune`` either way."""
     suffix = "" if backend == "jnp" else f"__{backend}"
-    return suffix + ("__reseed" if reseed_empty else "")
+    suffix += "__reseed" if reseed_empty else ""
+    return suffix + ("__prune" if prune != "none" else "")
 
 
 def run_kmeans(tag: str, force: bool = False):
@@ -124,18 +136,20 @@ def run_kmeans(tag: str, force: bool = False):
     v = KMEANS_VARIANTS[tag]
     backend = v["backend"]
     reseed = bool(v.get("reseed_empty"))
+    prune = v.get("prune", "none")
     mesh_tag = "16x16"
     stages = ("kmeans-pkmeans-iter", "kmeans-ipkmeans-s2s3")
-    suffix = _kmeans_variant_suffix(backend, reseed)
+    suffix = _kmeans_variant_suffix(backend, reseed, prune)
 
     if force or not all(
             (OUT_DIR / f"{s}__{mesh_tag}{suffix}.json").exists()
             for s in stages):
         kmeans_dryrun.lower_all(multi_pod=False, backend=backend,
-                                reseed_empty=reseed)
+                                reseed_empty=reseed, prune=prune)
     base_cfg = v.get("baseline", dict(backend="jnp"))
     base_suffix = _kmeans_variant_suffix(base_cfg["backend"],
-                                         bool(base_cfg.get("reseed_empty")))
+                                         bool(base_cfg.get("reseed_empty")),
+                                         base_cfg.get("prune", "none"))
     # the jnp baseline is the slowest compile of the sweep — only --force a
     # re-lower for variant-specific baselines
     refresh = force and base_cfg["backend"] != "jnp"
@@ -144,7 +158,8 @@ def run_kmeans(tag: str, force: bool = False):
             for s in stages):
         kmeans_dryrun.lower_all(
             multi_pod=False, backend=base_cfg["backend"],
-            reseed_empty=bool(base_cfg.get("reseed_empty")))
+            reseed_empty=bool(base_cfg.get("reseed_empty")),
+            prune=base_cfg.get("prune", "none"))
 
     print(f"[{tag}] {v['note']}")
     out = []
@@ -196,16 +211,22 @@ def run_kmeans(tag: str, force: bool = False):
         d, k = kmeans_dryrun.D, kmeans_dryrun.K
         n_dev = math.prod(int(v) for v in mesh_tag.split("x"))
         m_loc = kmeans_dryrun.M // n_dev             # subsets per device
-        t = batched_group_size(m_loc, n_sub, d, k)
-        mode = "reseed-on " if reseed else ""
+        t = batched_group_size(m_loc, n_sub, d, k, prune=prune)
+        mode = ("reseed-on " if reseed else "") + (
+            "bound-pruned " if prune != "none" else "")
         print(f"  per-stack launch model ({mode}m_loc={m_loc} "
               f"reducers/device, subset n={n_sub}, d={d}, k={k}):")
         if t:
-            print(f"    group_t={t} "
-                  f"({batched_group_vmem_bytes(t, n_sub, d, k):.3e} B/group)"
+            grp = batched_group_vmem_bytes(t, n_sub, d, k, prune=prune)
+            print(f"    group_t={t} ({grp:.3e} B/group)"
                   f": {m_loc} launches -> {-(-m_loc // t)}"
                   + (" (the reseed runs inside the group loop — no host "
                      "fallback, no extra launches)" if reseed else ""))
+            if prune != "none":
+                delta = grp - batched_group_vmem_bytes(t, n_sub, d, k)
+                print(f"    bound state: +{delta:.3e} B/group VMEM "
+                      f"(cached labels + margins + drift + skip counters) "
+                      f"buys skipped score matmuls in late iterations")
         else:
             print(f"    -> one subset alone busts the VMEM budget; stack "
                   f"falls back to the vmap-of-solve path (size subsets via "

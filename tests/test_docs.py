@@ -1,0 +1,93 @@
+"""The docs layer is executable and internally consistent: the README
+quickstart runs as-is, and every intra-repo link/path the docs cite
+exists.  This is CI's docs job (and part of tier-1)."""
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+DOC_FILES = [REPO / "README.md",
+             *sorted((REPO / "docs").glob("*.md"))]
+
+
+def test_docs_exist():
+    assert (REPO / "README.md").is_file()
+    assert (REPO / "docs" / "kernels.md").is_file()
+    assert (REPO / "docs" / "tuning.md").is_file()
+
+
+def _python_blocks(md: str):
+    return re.findall(r"```python\n(.*?)```", md, re.S)
+
+
+def test_readme_quickstart_runs():
+    """The quickstart is the first thing a user pastes — execute it
+    verbatim (its own asserts are the correctness check)."""
+    blocks = _python_blocks((REPO / "README.md").read_text())
+    assert blocks, "README.md lost its ```python quickstart block"
+    ns = {}
+    exec(compile(blocks[0], "README.md:quickstart", "exec"), ns)
+    assert "res" in ns, "quickstart no longer produces a result object"
+
+
+def test_readme_names_tier1_command():
+    md = (REPO / "README.md").read_text()
+    assert "PYTHONPATH=src python -m pytest -x -q" in md
+
+
+def test_readme_backend_table_covers_registry():
+    """The backend-selection table must name every registered engine —
+    a new engine without docs fails here, not in a user's terminal."""
+    from repro.kernels import engine as engines
+    from repro.kernels import tuning  # noqa: F401  (registers 'tuned')
+    md = (REPO / "README.md").read_text()
+    table = md[md.index("| backend"):]
+    for name in engines.available():
+        assert f"`{name}`" in table, f"engine {name!r} missing from README"
+
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]*)(#[^)\s]*)?\)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    h = heading.strip().lstrip("#").strip().lower()
+    h = re.sub(r"[`*\"'()=.,/\\|]", "", h)
+    return re.sub(r"\s+", "-", h.strip())
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_intra_repo_links_resolve(doc):
+    """Every relative link target (file and #anchor) in the user-facing
+    docs must exist; external URLs are out of scope."""
+    md = doc.read_text()
+    anchors_by_file = {}
+
+    def anchors_of(path: Path):
+        if path not in anchors_by_file:
+            heads = re.findall(r"^#+ .+$", path.read_text(), re.M)
+            anchors_by_file[path] = {_slug(h) for h in heads}
+        return anchors_by_file[path]
+
+    for m in _LINK.finditer(md):
+        target, frag = m.group(1), m.group(2)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        dest = doc if not target else (doc.parent / target).resolve()
+        assert dest.exists(), f"{doc.name}: broken link -> {target}"
+        if frag and dest.suffix == ".md":
+            assert frag[1:] in anchors_of(dest), \
+                f"{doc.name}: dead anchor -> {target or doc.name}{frag}"
+
+
+def test_docs_cite_real_code_paths():
+    """Backtick-quoted repo paths in the docs must exist on disk — docs
+    that name moved/renamed files rot silently otherwise.  experiments/
+    is exempt: those are run artifacts, not source."""
+    pat = re.compile(r"`((?:src|tests|benchmarks|docs)"
+                     r"/[A-Za-z0-9_./-]+)`")
+    for doc in DOC_FILES:
+        for m in pat.finditer(doc.read_text()):
+            p = REPO / m.group(1)
+            assert p.exists(), f"{doc.name}: cites missing path {m.group(1)}"

@@ -73,9 +73,11 @@ def test_perf_variants_c5_reseed_cell(monkeypatch, tmp_path, capsys):
 
     calls = []
 
-    def fake_lower_all(multi_pod, backend="jnp", reseed_empty=False):
+    def fake_lower_all(multi_pod, backend="jnp", reseed_empty=False,
+                       prune="none"):
         calls.append((backend, reseed_empty))
-        suffix = perf_variants._kmeans_variant_suffix(backend, reseed_empty)
+        suffix = perf_variants._kmeans_variant_suffix(backend, reseed_empty,
+                                                      prune)
         rec = {"roofline": {"compute_s": 1.0, "memory_s": 2.0,
                             "collective_s": 3.0, "dominant": "collective_s"}}
         for stage in ("kmeans-pkmeans-iter", "kmeans-ipkmeans-s2s3"):

@@ -200,7 +200,7 @@ def test_resident_solve_bf16_matches_fallback(monkeypatch):
     eng = engines.get_engine("resident")
     c_k, sse_k, it_k, conv_k = eng.solve(x, init, max_iters=30, tol=1e-3)
     monkeypatch.setattr(resident, "resident_feasible",
-                        lambda n, d, k, budget=None: False)
+                        lambda n, d, k, budget=None, prune="none": False)
     c_f, sse_f, it_f, conv_f = eng.solve(x, init, max_iters=30, tol=1e-3)
     assert int(it_k) == int(it_f)
     assert bool(conv_k) == bool(conv_f)
@@ -218,7 +218,7 @@ def test_resident_engine_falls_back_when_infeasible(monkeypatch):
 
     monkeypatch.setattr(ops, "lloyd_solve_resident", boom)
     monkeypatch.setattr(resident, "resident_feasible",
-                        lambda n, d, k, budget=None: False)
+                        lambda n, d, k, budget=None, prune="none": False)
     x, _ = _data(256, 4, 4)
     init = x[:4]
     c_f, sse_f, it_f, conv_f = engines.get_engine("resident").solve(

@@ -1,0 +1,286 @@
+"""Bound-gated block skipping (prune="bounds"): the pruned solve must be
+bit-for-bit identical to the exact solve — at the kernel, the oracle, and
+the engine level — while actually skipping score passes late in converging
+runs.  All in interpret mode (the CI kernel gate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import KMeansParams, kmeans, kmeans_batched
+from repro.kernels import ops, ref, resident
+from repro.kernels.resident import bound_block_rows, check_prune
+
+
+def _np(a):
+    """Bitwise-comparable numpy view (bf16 -> f32 is exact)."""
+    a = jnp.asarray(a)
+    if a.dtype == jnp.bfloat16:
+        a = a.astype(jnp.float32)
+    return np.asarray(a)
+
+
+def _assert_bitwise(exact, pruned, msg=""):
+    for i, (a, b) in enumerate(zip(exact, pruned)):
+        np.testing.assert_array_equal(_np(a), _np(b),
+                                      err_msg=f"{msg} output[{i}]")
+
+
+def _data(n, d, k, dtype=jnp.float32, seed=1):
+    kx, kc = jax.random.split(jax.random.key(n * d * k + seed))
+    x = (3.0 * jax.random.normal(kx, (n, d))).astype(dtype)
+    c = (3.0 * jax.random.normal(kc, (k, d))).astype(dtype)
+    return x, c
+
+
+def _clustered(n, d, k, noise=2.0, pert=6.0, seed=7):
+    """Block-coherent clusters (rows grouped by true cluster) + a perturbed
+    seed: converges over several iterations with wide per-block margins —
+    the regime where the bound gate actually fires."""
+    kc, kn, ki = jax.random.split(jax.random.key(seed), 3)
+    centers = 8.0 * jax.random.normal(kc, (k, d), jnp.float32)
+    ids = jnp.sort(jnp.arange(n) % k)
+    x = centers[ids] + noise * jax.random.normal(kn, (n, d), jnp.float32)
+    init = centers + pert * jax.random.normal(ki, (k, d), jnp.float32)
+    return x, init
+
+
+# ----------------------------------------------------------- validation ----
+
+def test_check_prune_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown prune mode"):
+        check_prune("nope")
+    check_prune("none")
+    check_prune("bounds")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "fused", "resident", "batched"])
+def test_engines_reject_unknown_prune(backend):
+    x, c = _data(64, 3, 4)
+    with pytest.raises(ValueError, match="unknown prune mode"):
+        kmeans(x, c, params=KMeansParams(max_iters=2, backend=backend,
+                                         prune="hamerly"))
+
+
+def test_bound_block_rows_divides_exactly():
+    # exact division keeps the pruned padded row count == the exact path's
+    for n_pad in (8, 64, 96, 256, 328, 2048):
+        bb = bound_block_rows(n_pad)
+        assert bb % 8 == 0 and n_pad % bb == 0
+    assert bound_block_rows(96, 64) == 48
+    assert bound_block_rows(2048, 256) == 256
+
+
+# -------------------------------------------------------------- oracle -----
+
+@pytest.mark.parametrize("n,d,k", [(300, 2, 5), (257, 17, 7)])
+def test_bounds_oracle_matches_exact_oracle(n, d, k):
+    """lloyd_solve_bounds_ref must reproduce lloyd_solve_ref bitwise: the
+    skipped blocks reuse cached labels in the SAME segment-sum contraction,
+    so an unsound bound shows up as a divergence here."""
+    x, _ = _data(n, d, k)
+    init = x[:k]
+    exact = ref.lloyd_solve_ref(x, init, max_iters=40, tol=1e-6)
+    pruned = ref.lloyd_solve_bounds_ref(x, init, max_iters=40, tol=1e-6,
+                                        block_rows=64)
+    _assert_bitwise(exact, pruned[:4], "bounds oracle")
+
+
+def test_bounds_oracle_skips_on_converging_workload():
+    x, init = _clustered(512, 4, 8)
+    out = ref.lloyd_solve_bounds_ref(x, init, max_iters=24, tol=0.0,
+                                     block_rows=64)
+    skips = np.asarray(out[4])[:int(out[2])]
+    assert skips[0, 0] == 0                     # no bounds yet at iter 0
+    assert skips[:, 0].sum() > 0                # ...but they fire later
+
+
+# ----------------------------------------------------- resident kernel -----
+
+@pytest.mark.parametrize("n,d,k", [(300, 2, 5), (512, 6, 8), (257, 17, 7)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_resident_pruned_bitwise_parity(n, d, k, masked):
+    x, _ = _data(n, d, k)
+    init = x[:k]
+    w = None
+    if masked:
+        w = (jax.random.uniform(jax.random.key(9), (n,)) > 0.2).astype(
+            jnp.float32)
+    exact = ops.lloyd_solve_resident(x, init, w, max_iters=30, tol=1e-6,
+                                     interpret=True)
+    pruned = ops.lloyd_solve_resident(x, init, w, max_iters=30, tol=1e-6,
+                                      interpret=True, prune="bounds",
+                                      bound_block=64)
+    _assert_bitwise(exact, pruned, f"resident n={n} masked={masked}")
+
+
+def test_resident_pruned_skip_counters_rise_late():
+    """Directed: on a block-coherent converging workload the per-iteration
+    skip fraction must start at zero and be NONZERO in the late iterations
+    (the whole point of carrying the bounds)."""
+    x, init = _clustered(2048, 8, 8)
+    out = ops.lloyd_solve_resident(x, init, max_iters=24, tol=0.0,
+                                   interpret=True, prune="bounds",
+                                   bound_block=256, return_skips=True)
+    iters = int(out[2])
+    skips = np.asarray(out[4])
+    assert skips.shape == (24, 2)
+    trace = skips[:iters]
+    assert iters >= 3
+    assert trace[0, 0] == 0                     # margins start at -inf
+    assert (trace[:, 0] <= trace[:, 1]).all()
+    late = trace[iters // 2:]
+    assert late[:, 0].sum() > 0, trace.tolist()
+    # fraction rises: the last iteration skips at least as much as the first
+    assert trace[-1, 0] >= trace[0, 0]
+    # rows past convergence stay zeroed
+    assert (skips[iters:] == 0).all()
+
+
+def test_resident_exact_skip_counters_are_zero():
+    x, _ = _data(256, 4, 4)
+    out = ops.lloyd_solve_resident(x, x[:4], max_iters=10, tol=1e-6,
+                                   interpret=True, return_skips=True)
+    assert np.asarray(out[4]).shape == (10, 2)
+    assert (np.asarray(out[4]) == 0).all()
+
+
+def test_resident_pruned_with_reseed_bitwise():
+    """Pruning composes with the in-kernel empty-cluster reseed: a
+    far-planted centroid forces reseeds to fire, and the pruned solve must
+    still match the exact reseeding solve bitwise."""
+    x, _ = _data(256, 2, 3)
+    init = jnp.array([[0.0, 0.0], [0.5, 0.5], [500.0, 500.0]], x.dtype)
+    exact = ops.lloyd_solve_resident(x, init, max_iters=20, tol=1e-6,
+                                     interpret=True, reseed_empty=True)
+    pruned = ops.lloyd_solve_resident(x, init, max_iters=20, tol=1e-6,
+                                      interpret=True, reseed_empty=True,
+                                      prune="bounds", bound_block=64)
+    _assert_bitwise(exact, pruned, "resident reseed-on")
+
+
+def test_resident_pruned_parity_property():
+    """hypothesis sweep: shapes x dtypes x masks x reseed, pruned vs exact
+    bitwise.  Shapes come from a small menu so the jit cache is shared."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the 'dev' extra (pip install -e '.[dev]')")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.sampled_from([(64, 4, 4), (96, 3, 8), (128, 5, 4), (61, 2, 3)]),
+           st.sampled_from([jnp.float32, jnp.bfloat16]),
+           st.booleans(), st.booleans(), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def prop(shape, dtype, masked, reseed, seed):
+        n, d, k = shape
+        x, _ = _data(n, d, k, dtype, seed=seed % 1000)
+        init = x[:k]
+        w = None
+        if masked:
+            w = (jax.random.uniform(jax.random.key(seed % 997), (n,))
+                 > 0.3).astype(jnp.float32)
+        exact = ops.lloyd_solve_resident(
+            x, init, w, max_iters=15, tol=1e-6, interpret=True,
+            reseed_empty=reseed)
+        pruned = ops.lloyd_solve_resident(
+            x, init, w, max_iters=15, tol=1e-6, interpret=True,
+            reseed_empty=reseed, prune="bounds", bound_block=64)
+        _assert_bitwise(exact, pruned, f"{shape} {dtype} m={masked}")
+
+    prop()
+
+
+# ------------------------------------------------------ batched kernel -----
+
+def _stack(m, s, d, dtype=jnp.float32, seed=0):
+    kx, kw = jax.random.split(jax.random.key(seed))
+    x = (3.0 * jax.random.normal(kx, (m, s, d))).astype(dtype)
+    w = (jax.random.uniform(kw, (m, s)) > 0.2).astype(jnp.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("m,s,d,k", [(4, 64, 4, 4), (6, 96, 3, 8)])
+def test_batched_pruned_bitwise_parity(m, s, d, k):
+    x, w = _stack(m, s, d)
+    init = x[0, :k]
+    exact = ops.lloyd_solve_batched(x, init, w, group_t=2, max_iters=20,
+                                    tol=1e-6, interpret=True)
+    pruned = ops.lloyd_solve_batched(x, init, w, group_t=2, max_iters=20,
+                                     tol=1e-6, interpret=True,
+                                     prune="bounds", bound_block=64)
+    _assert_bitwise(exact, pruned, f"batched m={m}")
+
+
+def test_batched_pruned_reseed_bitwise_and_counters():
+    x, w = _stack(4, 64, 2, seed=3)
+    init = jnp.array([[0.0, 0.0], [0.5, 0.5], [500.0, 500.0]], x.dtype)
+    exact = ops.lloyd_solve_batched(x, init, w, group_t=2, max_iters=20,
+                                    tol=1e-6, interpret=True,
+                                    reseed_empty=True)
+    pruned = ops.lloyd_solve_batched(x, init, w, group_t=2, max_iters=20,
+                                     tol=1e-6, interpret=True,
+                                     reseed_empty=True, prune="bounds",
+                                     bound_block=64, return_skips=True)
+    _assert_bitwise(exact, pruned[:4], "batched reseed-on")
+    skips = np.asarray(pruned[4])
+    assert skips.shape == (20, 2)
+    assert (skips >= 0).all() and (skips[:, 0] <= skips[:, 1]).all()
+
+
+# ------------------------------------------------------------ engines ------
+
+@pytest.mark.parametrize("backend", ["jnp", "fused", "resident", "batched",
+                                     "tuned"])
+def test_kmeans_prune_is_identity_on_every_engine(backend):
+    """KMeansParams.prune='bounds' must be result-invisible on EVERY
+    engine: kernel engines prune for real (bitwise contract), host-loop
+    engines validate-and-ignore (their exact loop IS the pruned result)."""
+    x, _ = _data(400, 3, 4)
+    init = x[:4]
+    base = kmeans(x, init, params=KMeansParams(max_iters=25, backend=backend))
+    pruned = kmeans(x, init, params=KMeansParams(max_iters=25,
+                                                 backend=backend,
+                                                 prune="bounds"))
+    _assert_bitwise(base, pruned, backend)
+
+
+def test_kmeans_batched_prune_is_identity():
+    x, w = _stack(4, 64, 4, seed=5)
+    init = x[0, :4]
+    base = kmeans_batched(x, w, init, params=KMeansParams(
+        max_iters=20, backend="batched"))
+    pruned = kmeans_batched(x, w, init, params=KMeansParams(
+        max_iters=20, backend="batched", prune="bounds"))
+    _assert_bitwise(base, pruned, "kmeans_batched")
+
+
+def test_ipkmeans_with_prune_threads_through():
+    from repro.core import IPKMeansConfig, ipkmeans
+    x, _ = _data(256, 3, 4)
+    key = jax.random.key(0)
+    cfg = IPKMeansConfig(num_clusters=4, num_subsets=4,
+                         kmeans=KMeansParams(max_iters=15))
+    base = ipkmeans(x, x[:4], key, cfg)
+    pruned = ipkmeans(x, x[:4], key, cfg.with_prune("bounds"))
+    assert cfg.with_prune("bounds").kmeans.prune == "bounds"
+    _assert_bitwise(
+        (base.centroids, base.sse, base.intermediate, base.asses),
+        (pruned.centroids, pruned.sse, pruned.intermediate, pruned.asses),
+        "ipkmeans")
+
+
+# -------------------------------------------------------- vmem model -------
+
+def test_prune_vmem_model_is_monotone():
+    for n, d, k in [(256, 4, 4), (2048, 8, 8), (4096, 64, 256)]:
+        exact = resident.resident_vmem_bytes(n, d, k)
+        pruned = resident.resident_vmem_bytes(n, d, k, prune="bounds")
+        assert pruned > exact
+    # the prune-aware inversion stays exact: the max feasible n still fits,
+    # the next 8-row granule does not
+    for d, k in [(2, 5), (16, 64)]:
+        n_max = resident.max_resident_points(d, k, prune="bounds")
+        assert resident.resident_feasible(n_max, d, k, prune="bounds")
+        assert not resident.resident_feasible(n_max + 8, d, k,
+                                              prune="bounds")
+        assert n_max <= resident.max_resident_points(d, k)

@@ -331,7 +331,7 @@ def test_resident_engine_still_falls_back_when_infeasible(monkeypatch):
 
     monkeypatch.setattr(ops, "lloyd_solve_resident", boom)
     monkeypatch.setattr(resident, "resident_feasible",
-                        lambda n, d, k, budget=None: False)
+                        lambda n, d, k, budget=None, prune="none": False)
     x, _ = _data(64, 2, 3)
     init = jnp.array([[0.0, 0.0], [0.5, 0.5], [500.0, 500.0]])
     c, _, _, _ = engines.get_engine("resident").solve(
