@@ -55,6 +55,23 @@ def main() -> None:
                 if not pruned[0].get("bitwise_equal"):
                     raise RuntimeError(
                         "pruned-vs-exact row reports bitwise_equal=False")
+                # likewise the init row: the k-means|| quality contract
+                # (SSE no worse, strictly fewer median Lloyd iterations
+                # than sample seeding, same data/key) is part of what the
+                # snapshot certifies commit over commit.
+                init_r = [r for r in rows if r.get("mode")
+                          == "interpret-kmeanspar-vs-sample-init"]
+                if not init_r:
+                    raise RuntimeError(
+                        "kernel_bench rows lack the kmeans||-vs-sample init "
+                        "row; snapshot not written")
+                if not (init_r[0].get("sse_not_worse")
+                        and init_r[0].get("fewer_median_iters")):
+                    raise RuntimeError(
+                        "kmeans|| init row fails its quality contract "
+                        f"(sse_not_worse={init_r[0].get('sse_not_worse')}, "
+                        f"fewer_median_iters="
+                        f"{init_r[0].get('fewer_median_iters')})")
                 (REPO_ROOT / "BENCH_kernel.json").write_text(
                     json.dumps(rows, indent=2) + "\n")
         except Exception:

@@ -1,9 +1,15 @@
 """Paper Table 1: SSE of PKMeans vs IPKMeans — 3000 pts, K=5, 5 initial
 centroid groups.  Claim: SSEs are very close (paper: 3.4817e4 vs 3.484xe4,
-a <0.1% gap)."""
+a <0.1% gap).
+
+Rider rows exercise the init axis on the same table: the pipeline deriving
+its own seeds (``cfg.with_init``) — k-means|| vs plain sampling, same key —
+reporting final SSE and the median per-reducer Lloyd iteration count the
+better seeds buy back."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from benchmarks.common import record, timeit
 from repro.core import IPKMeansConfig, ipkmeans, pkmeans
@@ -27,9 +33,29 @@ def run():
             "ipkmeans_kd_depth": int(res.kd_depth),
         })
     worst = max(r["gap_pct"] for r in rows)
+    # init axis: same pipeline, seeds derived from the key instead of the
+    # paper's externally fixed groups (kmeans|| rounds run the fused init
+    # sweeps; "sample" is the paper-style baseline)
+    init_stats = {}
+    for strategy in ("sample", "kmeans||"):
+        res = ipkmeans(pts, None, jax.random.key(0), cfg.with_init(strategy))
+        med_iters = float(np.median(np.asarray(res.subset_iters)))
+        init_stats[strategy] = (float(res.sse), med_iters)
+        rows.append({
+            "experiment": f"init:{strategy}",
+            "sse_ipkmeans": float(res.sse),
+            "median_subset_iters": med_iters,
+            "ipkmeans_kd_depth": int(res.kd_depth),
+        })
     t = timeit(lambda: ipkmeans(pts, inits[0], jax.random.key(0), cfg))
     record("table1_sse", rows,
            ("table1_sse", f"{t*1e6:.0f}", f"worst_gap_pct={worst:.3f}"))
+    record("table1_sse", rows,
+           ("table1_init_kmeanspar_vs_sample", f"{t*1e6:.0f}",
+            f"sse={init_stats['kmeans||'][0]:.0f}/"
+            f"{init_stats['sample'][0]:.0f} "
+            f"median_iters={init_stats['kmeans||'][1]:.0f}/"
+            f"{init_stats['sample'][1]:.0f}"))
     return rows
 
 

@@ -65,6 +65,30 @@ class IPKMeansConfig:
         return dataclasses.replace(
             self, kmeans=self.kmeans._replace(prune=prune))
 
+    def with_init(self, init: str) -> "IPKMeansConfig":
+        """Same config, different seeding strategy ('given' | 'sample' |
+        'kmeans++' | 'kmeans||').
+
+        Non-``"given"`` strategies let ``ipkmeans``/``ipkmeans_distributed``
+        derive the shared per-reducer seeds themselves (from their ``key``)
+        instead of taking externally supplied ``init_centroids``.
+        ``"kmeans||"`` is the oversampled Bahmani et al. init run as fused
+        kernel round sweeps (``core/init.py`` / ``kernels/init.py``) —
+        better seeds mean fewer Lloyd iterations per reducer, i.e. fewer
+        on-chip while-loop trips per megakernel launch.
+        """
+        from repro.core.init import INIT_METHODS
+        if init not in INIT_METHODS:
+            raise ValueError(f"unknown init: {init!r} "
+                             f"(expected one of {INIT_METHODS})")
+        return dataclasses.replace(
+            self, kmeans=self.kmeans._replace(init=init))
+
+    @property
+    def init(self) -> str:
+        """The seeding strategy (lives on the nested ``KMeansParams``)."""
+        return self.kmeans.init
+
     def subset_capacity(self, n: int) -> int:
         """Static bound on points per subset (tensor packing size)."""
         if self.partition == "random":
@@ -136,12 +160,48 @@ def _merge_stage(points, res: KMeansResult, cfg: IPKMeansConfig):
     return final, metrics.sse(points, final)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+def _resolve_init_stage(points, init_centroids, key, cfg: IPKMeansConfig,
+                        mesh=None, axis_names=("data",)):
+    """Seeding stage shared by both entry points: when ``cfg.init`` is not
+    ``"given"``, derive the shared per-reducer seeds on host (splitting the
+    key so partitioning randomness is unchanged only in the "given" path)
+    and hand back a ``"given"`` config for the jitted core.  With a mesh,
+    the k-means|| round sweeps run per-shard under ``shard_map``."""
+    if cfg.init == "given":
+        if init_centroids is None:
+            raise ValueError('cfg.init="given" needs init_centroids')
+        return points, init_centroids, key, cfg
+    from repro.core import init as init_mod
+    from repro.core.kmeans import _init_backend
+    key, ik = jax.random.split(key)
+    init_centroids = init_mod.resolve_init(
+        points, ik, cfg.num_clusters, cfg.init,
+        backend=_init_backend(cfg.kmeans.backend),
+        mesh=mesh, axis_names=tuple(axis_names))
+    return points, init_centroids, key, cfg.with_init("given")
+
+
 def ipkmeans(points: jnp.ndarray,
-             init_centroids: jnp.ndarray,
+             init_centroids: jnp.ndarray | None,
              key: jax.Array,
              cfg: IPKMeansConfig) -> IPKMeansResult:
-    """Single-process IPKMeans (also the distributed path's oracle)."""
+    """Single-process IPKMeans (also the distributed path's oracle).
+
+    With ``cfg.init != "given"`` the shared per-reducer seeds are derived
+    here on host (k-means|| rounds are a host loop over fused kernel
+    sweeps) before the jitted S1-S3 core runs; ``init_centroids`` may then
+    be ``None``.
+    """
+    points, init_centroids, key, cfg = _resolve_init_stage(
+        points, init_centroids, key, cfg)
+    return _ipkmeans_core(points, init_centroids, key, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _ipkmeans_core(points: jnp.ndarray,
+                   init_centroids: jnp.ndarray,
+                   key: jax.Array,
+                   cfg: IPKMeansConfig) -> IPKMeansResult:
     part, subsets, masks = _partition_and_pack(points, key, cfg)
     res = kmeans_batched(subsets, masks, init_centroids, cfg.kmeans)
     final, total_sse = _merge_stage(points, res, cfg)
@@ -151,7 +211,7 @@ def ipkmeans(points: jnp.ndarray,
 
 
 def ipkmeans_distributed(points: jnp.ndarray,
-                         init_centroids: jnp.ndarray,
+                         init_centroids: jnp.ndarray | None,
                          key: jax.Array,
                          cfg: IPKMeansConfig,
                          mesh,
@@ -168,7 +228,16 @@ def ipkmeans_distributed(points: jnp.ndarray,
     megakernel launch.  S3 is O(K*M) and runs replicated.
 
     ``num_subsets`` must be a multiple of the mesh size along ``axis_names``.
+
+    With ``cfg.init != "given"``, the seeding stage runs first: each
+    k-means|| round's fused sweep executes per-shard under ``shard_map``
+    (points sharded over ``axis_names``, the round's candidates replicated,
+    partial potentials psum'd), and the gathered candidates recluster on
+    host — the same rounds the single-host path runs, so on a 1-device
+    mesh the seeds (and hence the whole solve) match ``ipkmeans`` exactly.
     """
+    points, init_centroids, key, cfg = _resolve_init_stage(
+        points, init_centroids, key, cfg, mesh=mesh, axis_names=axis_names)
     n_dev = 1
     for a in axis_names:
         n_dev *= mesh.shape[a]

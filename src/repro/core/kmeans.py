@@ -57,6 +57,10 @@ class KMeansParams(NamedTuple):
     prune: str = "none"           # 'none' | 'bounds': bound-gated block
                                   # skipping in the whole-solve kernels
                                   # (bit-for-bit-identical results)
+    init: str = "given"           # 'given' | 'sample' | 'kmeans++' |
+                                  # 'kmeans||': centroid seeding, resolved
+                                  # on host at the pipeline entry points
+                                  # (kmeans/ipkmeans take a key for it)
 
 
 class KMeansResult(NamedTuple):
@@ -77,20 +81,58 @@ def lloyd_step(points, centroids, mask=None, backend: str = "jnp"):
     return new_c.astype(centroids.dtype), shard_sse
 
 
-@partial(jax.jit, static_argnames=("params",))
+def _init_backend(backend: str) -> str:
+    """Which k-means|| sweep implementation a Lloyd backend implies: the
+    jnp engine gets the jnp oracle sweep, every kernel engine the fused
+    Pallas sweep."""
+    return "ref" if backend == "jnp" else "kernel"
+
+
 def kmeans(points: jnp.ndarray,
-           init_centroids: jnp.ndarray,
+           init_centroids: jnp.ndarray | None = None,
            mask: jnp.ndarray | None = None,
-           params: KMeansParams = KMeansParams()) -> KMeansResult:
+           params: KMeansParams = KMeansParams(),
+           *, key: jax.Array | None = None,
+           k: int | None = None) -> KMeansResult:
     """Run Lloyd's algorithm to convergence on one shard of data.
 
     Args:
       points: (n, d) float array.  Padded rows allowed when ``mask`` given.
       init_centroids: (k, d) initial centroids (the paper uses the *same*
         initial centroids for every reducer, so callers broadcast these).
+        May be ``None`` when ``params.init != "given"``.
       mask: optional (n,) bool — False rows are padding and fully ignored.
-      params: loop controls + Lloyd engine selection.
+      params: loop controls + Lloyd engine selection + init strategy.
+      key: PRNG key for ``params.init != "given"`` (seeding runs on host at
+        this entry point — the k-means|| rounds are a host loop over fused
+        kernel launches, so they cannot live inside the jitted solver core).
+      k: cluster count for ``params.init != "given"`` (defaults to
+        ``init_centroids.shape[0]`` when centroids were also given).
     """
+    if params.init != "given":
+        from repro.core import init as init_mod
+        if key is None:
+            raise ValueError(f"params.init={params.init!r} needs key=")
+        kk = k if k is not None else (
+            None if init_centroids is None else init_centroids.shape[0])
+        if kk is None:
+            raise ValueError(f"params.init={params.init!r} needs k= (or "
+                             f"init_centroids to take the count from)")
+        w = None if mask is None else mask.astype(jnp.float32)
+        init_centroids = init_mod.resolve_init(
+            points, key, int(kk), params.init, weights=w,
+            backend=_init_backend(params.backend))
+        params = params._replace(init="given")
+    elif init_centroids is None:
+        raise ValueError('init="given" needs init_centroids')
+    return _kmeans_core(points, init_centroids, mask, params)
+
+
+@partial(jax.jit, static_argnames=("params",))
+def _kmeans_core(points: jnp.ndarray,
+                 init_centroids: jnp.ndarray,
+                 mask: jnp.ndarray | None = None,
+                 params: KMeansParams = KMeansParams()) -> KMeansResult:
     engine = engines.get_engine(params.backend)
     w = None if mask is None else mask.astype(points.dtype)
     final_c, total_sse, iters, converged = engine.solve(
@@ -128,7 +170,17 @@ def kmeans_batched(subsets: jnp.ndarray,
 
     Empty (all-padding) subsets keep the kmeans contract: sse 0 and
     ASSE=+inf, so they never win the min-ASSE merge.
+
+    Seeding note: stacks always take explicit ``init_centroids`` — the
+    paper feeds every reducer the SAME seeds, and this function runs inside
+    jit / ``shard_map`` where host-side init resolution cannot live.
+    Resolve ``init != "given"`` at the entry points (``kmeans`` /
+    ``ipkmeans`` / ``ipkmeans_distributed``) and pass the result down.
     """
+    if params.init != "given":          # params is static: trace-time guard
+        raise ValueError(
+            f"kmeans_batched requires init='given' (got {params.init!r}): "
+            f"resolve seeding at the kmeans/ipkmeans entry points")
     engine = engines.get_engine(params.backend)
     w = None if masks is None else masks.astype(subsets.dtype)
     final_c, total_sse, iters, converged = engine.solve_batched(

@@ -71,6 +71,18 @@ is a vmap of ``solve`` (every per-subset engine composes unchanged), and
 delegates whole stacks there, so the choice is one backend string away for
 ``ipkmeans`` / ``ipkmeans_distributed`` / ``kmeans_dryrun`` alike.
 
+**Initialization** (``init.py``; ``KMeansParams.init`` /
+``IPKMeansConfig.with_init``): seeding is not a Lloyd engine but rides the
+same machinery — the k-means|| oversampled init (Bahmani et al.) runs each
+of its O(log n) rounds as ONE fused distance+min+sample sweep
+(``ops.init_sweep``, KernelSpec-tiled like ``fused.py``, jnp oracle
+``ref.init_sweep_ref``, VMEM pricing ``KernelSpec.init_vmem_bytes``, tuner
+``tuning.autotune_init_sweep`` under ``|init`` cache keys), with the round
+loop and the weighted k-means++ recluster on host
+(``core.init.kmeans_parallel_init``).  Better seeds cut Lloyd
+iterations-to-converge — fewer on-chip while-loop trips per
+resident/batched launch.
+
 **Pruning** (``KMeansParams.prune`` / ``IPKMeansConfig.with_prune``;
 ``'none' | 'bounds'``): with ``'bounds'``, the whole-solve kernels
 (``resident`` / ``batched`` / ``tuned``) carry a Hamerly-style bound per
@@ -102,7 +114,7 @@ the reseed-on megakernel (``--reseed-empty``) — end to end and re-reads the
 cache it wrote.  On non-TPU hosts ``ops.py`` transparently falls back to
 ``interpret=True``.
 """
-from repro.kernels import batch_resident, engine, ops, ref, specs, tuning
+from repro.kernels import batch_resident, engine, init, ops, ref, specs, tuning
 from repro.kernels.assign import assign_pallas
 from repro.kernels.batch_resident import (batched_feasible,
                                           batched_group_size,
@@ -110,16 +122,20 @@ from repro.kernels.batch_resident import (batched_feasible,
 from repro.kernels.centroid_update import centroid_update_pallas
 from repro.kernels.engine import LloydEngine, available, get_engine, register
 from repro.kernels.fused import lloyd_step_fused
+from repro.kernels.init import init_sweep
 from repro.kernels.resident import (check_prune, lloyd_solve_resident,
                                     resident_feasible, resident_vmem_bytes)
 from repro.kernels.specs import DeviceProfile, KernelSpec, get_profile
-from repro.kernels.tuning import TuningCache, autotune_step, lookup_spec
+from repro.kernels.tuning import (TuningCache, autotune_init_sweep,
+                                  autotune_step, lookup_init_spec,
+                                  lookup_spec)
 
-__all__ = ["batch_resident", "engine", "ops", "ref", "specs", "tuning",
-           "assign_pallas", "centroid_update_pallas",
+__all__ = ["batch_resident", "engine", "init", "ops", "ref", "specs",
+           "tuning", "assign_pallas", "centroid_update_pallas",
            "batched_feasible", "batched_group_size", "lloyd_solve_batched",
            "lloyd_step_fused", "lloyd_solve_resident", "resident_feasible",
-           "resident_vmem_bytes", "check_prune",
+           "resident_vmem_bytes", "check_prune", "init_sweep",
            "LloydEngine", "available", "get_engine",
            "register", "DeviceProfile", "KernelSpec", "get_profile",
-           "TuningCache", "autotune_step", "lookup_spec"]
+           "TuningCache", "autotune_step", "autotune_init_sweep",
+           "lookup_spec", "lookup_init_spec"]

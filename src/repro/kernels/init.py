@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: fused k-means|| initialization round sweep.
+
+Scalable K-Means++ (Bahmani et al., PAPERS.md) replaces k-means++'s k
+sequential passes with O(log n) *rounds*: each round scores every point
+against the current candidate set and Bernoulli-samples an expected ~ell new
+candidates proportionally to their D^2 contribution.  Done naively a round is
+three sweeps over the points (score, reduce the potential, sample); this
+kernel is the paper's one-job argument applied to seeding — ONE grid sweep
+per round does all three:
+
+  * phase 1 (every ``j``): the same flash-attention-style online min
+    reduction as ``fused.py`` phase 1 — a ``(bn x d) @ (d x bc)`` MXU matmul
+    per candidate tile, running block minimum carried in VMEM scratch.  Only
+    the round's NEW candidates are scored: the per-point minimum distance to
+    all older candidates arrives as the streamed ``old_mind`` input, so each
+    round's work scales with the ~ell fresh candidates, not the whole set.
+  * phase 2 (``j == c_blocks-1``): with the candidate minimum complete for
+    this x-tile, fold in ``old_mind``, accumulate the new potential
+    ``psi = sum(w * mind)`` into a VMEM-resident (1, 1) output, and draw the
+    Bernoulli oversample on-chip: point ``x`` is sampled iff
+
+        ``u_x * psi_prev < ell * mind_x``      (i.e. with probability
+                                                ``min(1, ell*mind_x/psi_prev)``)
+
+    against a pre-streamed uniform ``u_x`` (host-supplied so the draw is
+    reproducible bit-for-bit against the jnp oracle and across backends).
+
+``psi_prev`` is the PREVIOUS round's potential — the one-sweep design choice:
+sampling against ``psi_{r-1}`` instead of the in-flight ``psi_r`` is what
+lets the potential reduction and the draw share one pass.  Since the
+potential is non-increasing in the candidate set, probabilities are only ever
+(slightly) conservative, preserving the oversampling guarantees; the driver
+(``core/init.py``) seeds ``psi_prev`` with a sampling-free round-0 sweep.
+A round whose candidate tile is entirely invalid (``cand_norms`` +inf) leaves
+``mind`` unchanged and still draws — exactly Bahmani's round 1, where the
+candidate set is just the uniformly-chosen first point.
+
+Padding follows the other kernels: d zero-padded to the 128-lane boundary
+(exact for squared euclidean), n/c padded to block multiples.  Invalid
+candidate columns carry +inf ``cand_norms`` so they never win the min;
+padded/masked points carry weight 0 so they contribute nothing to ``psi``
+and are never sampled.  Block geometry arrives as a
+:class:`~repro.kernels.specs.KernelSpec` (the candidate tile reuses the
+``block_k`` axis); ``KernelSpec.init_vmem_bytes`` prices the working set for
+the tuner's candidate pruning.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import specs
+from repro.kernels.specs import KernelSpec
+
+
+def _init_sweep_kernel(x_ref, c_ref, cn_ref, om_ref, u_ref, w_ref, pp_ref,
+                       mind_ref, samp_ref, psi_ref,
+                       best_scr,
+                       *, last_j: int, ell: float, acc):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    x = x_ref[...].astype(acc)                            # (bn, d)
+    c = c_ref[...].astype(acc)                            # (bc, d)
+    cn = cn_ref[...].astype(jnp.float32)                  # (1, bc), +inf pads
+
+    # --- phase 1: online min over candidate tiles (fused.py phase 1, no
+    # argmin — the round only needs the distance, not the label) ---
+    # score = ||c||^2 - 2 x.c   (row-constant ||x||^2 added back at flush);
+    # invalid candidates arrive with cn == +inf and can never win the min.
+    s = (cn.astype(acc)
+         - 2.0 * jnp.dot(x, c.T, preferred_element_type=acc)
+         ).astype(jnp.float32)
+    local_best = jnp.min(s, axis=1)                       # (bn,)
+
+    @pl.when(j == 0)
+    def _init_scratch():
+        best_scr[...] = local_best
+
+    @pl.when(j > 0)
+    def _accumulate_scratch():
+        best_scr[...] = jnp.minimum(best_scr[...], local_best)
+
+    # --- phase 2: candidate min is final — fold old_mind, accumulate the
+    # potential, and draw the Bernoulli oversample, all without the (n,)
+    # distances ever leaving VMEM mid-pass ---
+    @pl.when(j == last_j)
+    def _flush():
+        xf = x.astype(jnp.float32)
+        x2 = jnp.sum(xf * xf, axis=1)
+        cand_min = jnp.maximum(best_scr[...] + x2, 0.0)   # true sq distance
+        mind = jnp.minimum(om_ref[...], cand_min)
+        w = w_ref[...]
+        u = u_ref[...]
+        psi_prev = pp_ref[0, 0]
+        # sample iff u * psi_prev < ell * mind  (prob min(1, ell*mind/psi));
+        # weight-0 rows and a zero previous potential never sample
+        take = jnp.logical_and(u * psi_prev < ell * mind,
+                               jnp.logical_and(w > 0.0, psi_prev > 0.0))
+        mind_ref[...] = mind
+        samp_ref[...] = take.astype(jnp.int32)
+        local_psi = jnp.sum(w * mind)[None, None]         # (1, 1)
+
+        @pl.when(i == 0)
+        def _init_out():
+            psi_ref[...] = local_psi
+
+        @pl.when(i > 0)
+        def _accumulate_out():
+            psi_ref[...] += local_psi
+
+
+@functools.partial(jax.jit, static_argnames=("ell", "spec"))
+def _init_sweep(points: jnp.ndarray,
+                cands: jnp.ndarray,
+                cand_norms: jnp.ndarray,
+                old_mind: jnp.ndarray,
+                uniforms: jnp.ndarray,
+                weights: jnp.ndarray,
+                psi_prev: jnp.ndarray,
+                *,
+                ell: float,
+                spec: KernelSpec):
+    n, d = points.shape
+    c = cands.shape[0]
+    bn, bc, n_pad, c_pad, d_pad = spec.tile_shapes(n, d, c)
+
+    x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
+    cd = jnp.zeros((c_pad, d_pad), cands.dtype).at[:c, :d].set(cands)
+    # padded candidate columns must never win the min: +inf norms
+    cn = jnp.full((1, c_pad), jnp.inf, jnp.float32).at[0, :c].set(
+        cand_norms.astype(jnp.float32))
+    om = jnp.zeros((n_pad,), jnp.float32).at[:n].set(
+        old_mind.astype(jnp.float32))
+    u = jnp.ones((n_pad,), jnp.float32).at[:n].set(
+        uniforms.astype(jnp.float32))
+    w = jnp.zeros((n_pad,), jnp.float32).at[:n].set(
+        weights.astype(jnp.float32))
+    pp = jnp.reshape(psi_prev.astype(jnp.float32), (1, 1))
+
+    grid = (n_pad // bn, c_pad // bc)
+    mind, samp, psi = pl.pallas_call(
+        functools.partial(_init_sweep_kernel, last_j=grid[1] - 1,
+                          ell=float(ell), acc=jnp.dtype(spec.acc_dtype)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, d_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),               # running block min
+        ],
+        interpret=bool(spec.interpret),
+    )(x, cd, cn, om, u, w, pp)
+    return mind[:n], samp[:n] > 0, psi[0, 0]
+
+
+def init_sweep(points: jnp.ndarray,
+               cands: jnp.ndarray,
+               old_mind: jnp.ndarray,
+               uniforms: jnp.ndarray,
+               psi_prev,
+               *,
+               ell: float,
+               cand_valid: jnp.ndarray | None = None,
+               weights: jnp.ndarray | None = None,
+               spec: KernelSpec | None = None,
+               interpret: bool | None = None):
+    """One fused k-means|| round: (n,d),(c,d),(n,),(n,),() ->
+    (new_mind (n,) f32, sampled (n,) bool, psi () f32).
+
+    ``cands`` are the round's NEW candidates only (the running minimum
+    against all older candidates is ``old_mind``; pass ``+inf`` for the very
+    first sweep).  ``cand_valid`` masks padded candidate rows (None: all
+    valid); ``weights`` masks padded points and weights the potential (None:
+    all-ones).  ``uniforms`` are the round's pre-drawn U[0,1) variates — one
+    per point, host-supplied so kernel and oracle draw identically.
+    ``psi_prev`` is the previous round's potential; 0 disables sampling
+    (the driver's round-0 scoring sweep).  ``ell`` is the oversampling
+    factor (static).
+    """
+    spec = specs.coerce(spec, interpret=interpret)
+    if spec.interpret is None:
+        spec = spec.with_interpret(jax.default_backend() != "tpu")
+    n = points.shape[0]
+    c = cands.shape[0]
+    norms = jnp.sum(cands.astype(jnp.float32) ** 2, axis=-1)
+    if cand_valid is not None:
+        norms = jnp.where(cand_valid, norms, jnp.inf)
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    return _init_sweep(points, cands, norms, old_mind, uniforms, w,
+                       jnp.asarray(psi_prev, jnp.float32),
+                       ell=float(ell), spec=spec)

@@ -23,6 +23,7 @@ from repro.kernels.batch_resident import (
     lloyd_solve_batched as _lloyd_solve_batched_kernel)
 from repro.kernels.centroid_update import centroid_update_pallas
 from repro.kernels.fused import lloyd_step_fused as _lloyd_step_fused
+from repro.kernels.init import init_sweep as _init_sweep
 from repro.kernels.resident import lloyd_solve_resident as _lloyd_solve_resident
 from repro.kernels.specs import KernelSpec
 
@@ -78,6 +79,21 @@ def lloyd_assign_fused(points, centroids, *,
     _, _, _, labels, mind = _lloyd_step_fused(
         points, centroids, None, spec=spec, return_labels=True)
     return labels, mind
+
+
+def init_sweep(points, cands, old_mind, uniforms, psi_prev, *, ell: float,
+               cand_valid=None, weights=None,
+               spec: KernelSpec | None = None,
+               interpret: bool | None = None):
+    """One fused k-means|| init round (``kernels/init.py``): fold the round's
+    new candidates into the running per-point min squared distance, reduce
+    the new potential, and Bernoulli-oversample the next candidates — all in
+    ONE sweep over the points -> (new_mind (n,) f32, sampled (n,) bool,
+    psi () f32).  ``uniforms`` are host-drawn U[0,1) variates (one per
+    point), so results are bit-for-bit vs ``ref.init_sweep_ref``."""
+    spec = _resolve(spec, None, None, interpret, specs.DEFAULT_SPEC)
+    return _init_sweep(points, cands, old_mind, uniforms, psi_prev, ell=ell,
+                       cand_valid=cand_valid, weights=weights, spec=spec)
 
 
 def lloyd_solve_resident(points, centroids, weights=None, *,
@@ -147,3 +163,4 @@ centroid_update_ref = ref.centroid_update_ref
 lloyd_step_ref = ref.lloyd_step_ref
 lloyd_solve_ref = ref.lloyd_solve_ref
 lloyd_solve_bounds_ref = ref.lloyd_solve_bounds_ref
+init_sweep_ref = ref.init_sweep_ref

@@ -101,6 +101,71 @@ def centroid_update_ref(points: jnp.ndarray, labels: jnp.ndarray,
     return sums, counts
 
 
+def init_sweep_ref(points: jnp.ndarray, cands: jnp.ndarray,
+                   old_mind: jnp.ndarray, uniforms: jnp.ndarray,
+                   psi_prev, *, ell: float,
+                   cand_valid: jnp.ndarray | None = None,
+                   weights: jnp.ndarray | None = None,
+                   block_rows: int | None = None):
+    """Oracle for the fused k-means|| round sweep (``kernels/init.py``):
+    (n,d),(c,d),(n,),(n,),() -> (new_mind (n,) f32, sampled (n,) bool,
+    psi () f32).
+
+    Same expressions in the same order as the kernel — ``||c||^2 - 2 x.c``
+    with ``||x||^2`` added back post-min, invalid candidates masked to +inf
+    norms, the Bernoulli draw ``u * psi_prev < ell * new_mind`` gated on
+    positive weight and positive previous potential — so ``new_mind`` and
+    ``sampled`` are bitwise against the kernel.  ``block_rows`` (the kernel's
+    ``block_n``) makes the potential reduction bitwise too, by accumulating
+    per-block partial sums in the kernel's sequential grid order; ``None``
+    uses a flat ``jnp.sum`` (same value up to reduction order — the driver's
+    fast path).
+    """
+    xf = points.astype(jnp.float32)
+    cf = cands.astype(jnp.float32)
+    # norms from the UNPADDED candidates (the kernel wrapper streams them in
+    # precomputed exactly so)...
+    norms = jnp.sum(cf ** 2, axis=-1)
+    if cand_valid is not None:
+        norms = jnp.where(cand_valid, norms, jnp.inf)
+    # ...but the dot contractions padded like the kernel's tiles: d
+    # zero-padded to the 128-lane boundary and the candidate axis to the
+    # 8-column sublane minimum (+inf norms).  Both pads are value-neutral
+    # yet change XLA's lowering — a wider contraction re-trees the per-
+    # element reduction, and a 1-column dot lowers as a mat-vec with its
+    # own accumulation order — so matching them is what keeps parity
+    # bitwise at d > 128 and c < 8.
+    d = points.shape[1]
+    c = cands.shape[0]
+    d_pad = max(-(-d // 128) * 128, 128)
+    c_pad = max(c, 8)
+    xp = jnp.zeros((points.shape[0], d_pad), jnp.float32).at[:, :d].set(xf)
+    cp = jnp.zeros((c_pad, d_pad), jnp.float32).at[:c, :d].set(cf)
+    np_ = jnp.full((c_pad,), jnp.inf, jnp.float32).at[:c].set(norms)
+    best = jnp.min(np_[None, :] - 2.0 * (xp @ cp.T), axis=1)
+    x2 = jnp.sum(xp * xp, axis=1)
+    cand_min = jnp.maximum(best + x2, 0.0)
+    mind = jnp.minimum(old_mind.astype(jnp.float32), cand_min)
+    n = points.shape[0]
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    u = uniforms.astype(jnp.float32)
+    pp = jnp.asarray(psi_prev, jnp.float32)
+    take = jnp.logical_and(u * pp < ell * mind,
+                           jnp.logical_and(w > 0.0, pp > 0.0))
+    contrib = w * mind
+    if block_rows is None:
+        psi = jnp.sum(contrib)
+    else:
+        bb = max(1, min(int(block_rows), n))
+        n_pad = -(-n // bb) * bb
+        padded = jnp.zeros((n_pad,), jnp.float32).at[:n].set(contrib)
+        psi = jnp.float32(0.0)
+        for b in range(n_pad // bb):      # static grid: kernel's += order
+            psi = psi + jnp.sum(padded[b * bb:(b + 1) * bb])
+    return mind, take, psi
+
+
 def lloyd_step_ref(points: jnp.ndarray, centroids: jnp.ndarray,
                    weights: jnp.ndarray | None = None):
     """Oracle for the fused kernel: one Lloyd pass over the data ->

@@ -143,6 +143,17 @@ class KernelSpec:
         return ((bn * d_pad + 2 * bn + bn * k_pad) * self.acc_bytes
                 + (k_pad * d_pad + k_pad) * F32)
 
+    def init_vmem_bytes(self, n: int, d: int, c: int) -> int:
+        """Per-grid-step working set of the k-means|| init-sweep kernel
+        (``kernels/init.py``): x/candidate/norm tiles in acc dtype, plus the
+        f32 streamed per-point vectors (old_mind, uniforms, weights), the
+        (mind, sampled) output pair, the running-min scratch, and the
+        resident (1, 1) potential.  The candidate set reuses the ``block_k``
+        tiling axis."""
+        bn, bc, _, _, d_pad = self.tile_shapes(n, d, c)
+        return ((bn * d_pad + bc * d_pad + bc) * self.acc_bytes
+                + (6 * bn + 1) * F32)
+
     # ---- cache (de)serialization ----
 
     def to_json(self) -> dict:

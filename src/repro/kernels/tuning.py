@@ -76,13 +76,19 @@ def n_bucket(n: int) -> int:
 
 
 def cache_key(device_kind: str, dtype, n: int, d: int, k: int,
-              m: int | None = None) -> str:
+              m: int | None = None, kernel: str | None = None) -> str:
     """``m`` extends the key for batched-STACK entries (n is then the subset
-    size, m the stack's reducer count, bucketed like n) — single-solve keys
+    size, m the stack's reducer count, bucketed like n); ``kernel`` extends
+    it for non-Lloyd kernel families (``"init"``: the k-means|| round sweep,
+    where k is the candidate-tile capacity, bucketed like n — capacities are
+    power-of-two padded, so nearby pools share a winner) — single-solve keys
     are unchanged, so version-1 caches keep resolving."""
     dt = jnp.dtype(dtype).name
-    key = f"{device_kind.lower().strip()}|{dt}|n{n_bucket(n)}|d{d}|k{k}"
-    return key if m is None else f"{key}|m{n_bucket(m)}"
+    kk = n_bucket(k) if kernel == "init" else k
+    key = f"{device_kind.lower().strip()}|{dt}|n{n_bucket(n)}|d{d}|k{kk}"
+    if m is not None:
+        key = f"{key}|m{n_bucket(m)}"
+    return key if kernel is None else f"{key}|{kernel}"
 
 
 @dataclasses.dataclass
@@ -185,16 +191,30 @@ def lookup_group_t(s: int, d: int, k: int, m: int, dtype=jnp.float32,
     return None if spec is None else spec.group_t
 
 
+def lookup_init_spec(n: int, d: int, c: int, dtype=jnp.float32,
+                     device_kind: str | None = None) -> KernelSpec | None:
+    """Cached winner for the k-means|| init-sweep kernel at (n points, d
+    dims, c candidate-tile capacity), or ``None`` (module defaults) — what
+    ``core.init.kmeans_parallel_init`` consults when no spec is pinned."""
+    kind = device_kind or specs.get_profile().device_kind
+    return _active_cache().get(cache_key(kind, dtype, n, d, c,
+                                         kernel="init"))
+
+
 # ------------------------------------------------------------------ sweep ---
 
 def candidate_specs(n: int, d: int, k: int,
                     profile: DeviceProfile | None = None,
                     block_ns=BLOCK_NS, block_ks=BLOCK_KS,
-                    acc_dtypes=("float32",)) -> list[KernelSpec]:
+                    acc_dtypes=("float32",),
+                    vmem_bytes: str = "fused_vmem_bytes") -> list[KernelSpec]:
     """The pruned sweep grid for one launch shape.
 
-    Prunes (a) geometries whose fused working set busts the device budget
-    and (b) duplicates — block sizes clamp to the problem, so distinct
+    Prunes (a) geometries whose working set busts the device budget —
+    priced by the ``KernelSpec`` estimator named by ``vmem_bytes``
+    (``fused_vmem_bytes`` for the Lloyd sweep, ``init_vmem_bytes`` for the
+    k-means|| init sweep, where ``k`` is the candidate-tile capacity) — and
+    (b) duplicates — block sizes clamp to the problem, so distinct
     (block_n, block_k) pairs often launch identical tiles.  The module
     default always competes (and survives even if the budget would prune
     it, so the sweep can never return an empty grid).
@@ -205,7 +225,7 @@ def candidate_specs(n: int, d: int, k: int,
         for bn in block_ns:
             for bk in block_ks:
                 cand = KernelSpec(block_n=bn, block_k=bk, acc_dtype=acc)
-                if cand.fused_vmem_bytes(n, d, k) > profile.budget_bytes:
+                if getattr(cand, vmem_bytes)(n, d, k) > profile.budget_bytes:
                     continue
                 out.setdefault((cand.tile_shapes(n, d, k), acc), cand)
     fallback = specs.DEFAULT_SPEC.replace(acc_dtype=acc_dtypes[0])
@@ -275,6 +295,63 @@ def autotune_step(n: int, d: int, k: int, *,
     if cache is not None:
         cache.put(key, best["spec"], time_us=round(best["time_us"], 2),
                   n=n, d=d, k=k, candidates=len(cands))
+    return best["spec"], rows
+
+
+def autotune_init_sweep(n: int, d: int, c: int, *,
+                        dtype=jnp.float32,
+                        ell: float | None = None,
+                        profile: DeviceProfile | None = None,
+                        cache: TuningCache | None = None,
+                        repeats: int = 3,
+                        interpret: bool | None = None,
+                        block_ns=BLOCK_NS, block_ks=BLOCK_KS,
+                        acc_dtypes=("float32",),
+                        measure=None,
+                        seed: int = 0):
+    """Sweep the candidate grid for the k-means|| init-sweep kernel at one
+    (n points, d dims, c candidate-tile capacity) shape and record the
+    winner under the ``|init``-extended cache key.  Returns ``(best_spec,
+    rows)``.
+
+    The init sweep streams the points against a SMALL resident candidate
+    tile (~ell candidates, power-of-two padded), so its best geometry is
+    not the Lloyd sweep's: the candidate axis usually fits one block and
+    the win is all in ``block_n``.  ``measure(spec) -> seconds`` may be
+    injected; the default times one full round sweep on synthetic data.
+    """
+    profile = profile or specs.get_profile()
+    cands = candidate_specs(n, d, c, profile,
+                            block_ns=block_ns, block_ks=block_ks,
+                            acc_dtypes=acc_dtypes,
+                            vmem_bytes="init_vmem_bytes")
+    ell = float(2 * c) if ell is None else float(ell)
+    if measure is None:
+        from repro.kernels import ops
+        kx, kc, ku = jax.random.split(jax.random.key(seed + n * d * c), 3)
+        x = jax.random.normal(kx, (n, d), jnp.float32).astype(dtype)
+        cd = jax.random.normal(kc, (c, d), jnp.float32).astype(dtype)
+        u = jax.random.uniform(ku, (n,), jnp.float32)
+        om = jnp.full((n,), jnp.inf, jnp.float32)
+        pp = jnp.float32(1.0)
+
+        def measure(spec):
+            return _timeit(
+                lambda: ops.init_sweep(x, cd, om, u, pp, ell=ell,
+                                       spec=spec, interpret=interpret),
+                repeats=repeats)
+
+    rows = []
+    for cand in cands:
+        rows.append({"spec": cand, "time_us": measure(cand) * 1e6,
+                     "vmem_bytes": cand.init_vmem_bytes(n, d, c)})
+    rows.sort(key=lambda r: r["time_us"])
+    best = rows[0]
+    if cache is not None:
+        cache.put(cache_key(profile.device_kind, dtype, n, d, c,
+                            kernel="init"),
+                  best["spec"], time_us=round(best["time_us"], 2),
+                  n=n, d=d, k=c, candidates=len(cands))
     return best["spec"], rows
 
 

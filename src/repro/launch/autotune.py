@@ -25,6 +25,10 @@ Examples::
     # as a subset shape SxDxK, solved as a --stack-m reducer stack
     python -m repro.launch.autotune --sizes 256x64x128 \
         --group-ts 1,2,4,8 --stack-m 64
+
+    # also sweep the k-means|| init-round sweep kernel: each size re-read
+    # as NxDxC (C = candidate-tile capacity), winners cached under |init
+    python -m repro.launch.autotune --sizes 4096x64x128 --init-sweep
 """
 from __future__ import annotations
 
@@ -87,6 +91,12 @@ def main(argv=None):
                          "bitwise identical to 'none', so winners land under "
                          "the same key — but the bound state joins each "
                          "candidate's VMEM working set")
+    ap.add_argument("--init-sweep", action="store_true",
+                    help="ALSO sweep the k-means|| init-round sweep kernel: "
+                         "each NxDxK is re-read as NxDxC (C = the "
+                         "power-of-two candidate-tile capacity the round "
+                         "loop pads to) and the winner lands under the "
+                         "|init cache key the seeding driver consults")
     ap.add_argument("--cache", default=None,
                     help="cache path (default: REPRO_TUNING_CACHE or "
                          "experiments/tuning/kernel_specs.json)")
@@ -145,6 +155,22 @@ def main(argv=None):
                   f"({rows[0]['launches']} launches/stack, "
                   f"{rows[0]['time_us']:.0f} us)")
 
+    # the k-means|| init-round sweep kernel: every size doubles as an NxDxC
+    # shape (C re-read as the candidate-tile capacity the round loop pads
+    # to); winners land under the |init-extended key the seeding driver's
+    # lookup_init_spec consults
+    if args.init_sweep:
+        for n, d, c in args.sizes:
+            best, rows = tuning.autotune_init_sweep(
+                n, d, c, dtype=dtype, profile=profile, cache=cache,
+                repeats=args.repeats,
+                interpret=True if args.interpret else None,
+                block_ns=args.block_ns, block_ks=args.block_ks,
+                acc_dtypes=args.acc_dtypes)
+            print(f"init n{n} d{d} c{c}: {len(rows)} candidates -> "
+                  f"block_n={best.block_n} block_k={best.block_k} "
+                  f"acc={best.acc_dtype} ({rows[0]['time_us']:.0f} us)")
+
     path = cache.save()
     print(f"wrote {len(cache.entries)} entries to {path}")
 
@@ -161,8 +187,16 @@ def main(argv=None):
         spec = fresh.get(key)
         assert spec is not None and spec.group_t, \
             f"batched cache round-trip failed for {key}"
+    if args.init_sweep:
+        for n, d, c in args.sizes:
+            key = tuning.cache_key(profile.device_kind, dtype, n, d, c,
+                                   kernel="init")
+            spec = fresh.get(key)
+            assert spec is not None, \
+                f"init cache round-trip failed for {key}"
     print(f"cache round-trip OK ({len(args.sizes)} shapes"
           + (f" + {len(batched_swept)} stacks" if batched_swept else "")
+          + (f" + {len(args.sizes)} init sweeps" if args.init_sweep else "")
           + " resolve)")
 
 

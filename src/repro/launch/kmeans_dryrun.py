@@ -99,7 +99,8 @@ def _record(name, mesh_tag, lowered, compiled, extra=None):
 
 
 def lower_all(multi_pod: bool, backend: str = "jnp",
-              reseed_empty: bool = False, prune: str = "none"):
+              reseed_empty: bool = False, prune: str = "none",
+              init_round: bool = False):
     """Lower the dry-run cells.  ``backend`` names the Lloyd engine for
     pkmeans-iter and s2s3 (any name in the ``kernels.engine`` registry —
     'jnp' | 'pallas' | 'fused' | 'resident' | 'batched' | 'tuned');
@@ -117,7 +118,12 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
     (the reseed runs inside the convergence loop).  ``prune="bounds"``
     lowers the S2 solvers with bound-gated block skipping in the kernel
     convergence loops (bit-for-bit-identical results — a pure perf knob)
-    and suffixes the records ``__prune``."""
+    and suffixes the records ``__prune``.  ``init_round`` additionally
+    lowers ONE k-means|| seeding round — the fused distance+min+sample
+    sweep running per shard under ``shard_map`` with the candidate tile
+    replicated and only the scalar potential psum crossing shards; total
+    seeding cost = (rounds+1) x this cell plus the O(ell log n) host
+    recluster."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "x".join(map(str, mesh.devices.shape))
     file_tag = mesh_tag if backend == "jnp" else f"{mesh_tag}__{backend}"
@@ -225,6 +231,42 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
                    "note": "M=4096 reducers to convergence + min-ASSE merge"})
     results.append(rec)
 
+    # ---- k-means|| init round: per-shard fused sweep + scalar psi psum ----
+    if init_round:
+        from repro.core.init import _make_sweep
+        C = 2 * K                  # steady-state candidate tile (~ell = 2K)
+        base_sweep = _make_sweep(
+            "ref" if backend == "jnp" else "kernel", None, None, axes)
+
+        def init_round_fn(points, cands, old_mind, u, w, psi_prev):
+            def body(xs, oms, us, ws, cs, pps):
+                valid = jnp.ones((C,), bool)
+                mind, samp, psi = base_sweep(xs, cs, valid, oms, us, ws,
+                                             pps, float(2 * K))
+                return mind, samp, jax.lax.psum(psi, axes)
+
+            run = shard_map(
+                body, mesh=mesh, in_specs=(flat, flat, flat, flat, P(), P()),
+                out_specs=(flat, flat, P()), check_vma=False)
+            return run(points, old_mind, u, w, cands, psi_prev)
+
+        vec = jax.ShapeDtypeStruct((N,), jnp.float32)
+        cands_s = jax.ShapeDtypeStruct((C, D), jnp.float32)
+        psi_s = jax.ShapeDtypeStruct((), jnp.float32)
+        shard_vec = NamedSharding(mesh, flat)
+        t0 = time.time()
+        low = jax.jit(init_round_fn,
+                      in_shardings=(shard_pts, repl, shard_vec, shard_vec,
+                                    shard_vec, repl)).lower(
+            pts, cands_s, vec, vec, vec, psi_s)
+        comp = low.compile()
+        rec = _record("ipkmeans-init-round", mesh_tag, low, comp,
+                      {"compile_s": round(time.time() - t0, 1),
+                       "candidate_tile": C,
+                       "note": "ONE kmeans|| round: fused sweep per shard + "
+                               "scalar psi psum; seeding = (rounds+1) x this"})
+        results.append(rec)
+
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     for rec in results:
         rec["backend"] = backend
@@ -254,9 +296,15 @@ def main():
                     help="lower the S2 solvers with bound-gated block "
                          "skipping in the kernel convergence loops "
                          "(bit-for-bit-identical results — a pure perf knob)")
+    ap.add_argument("--init", action="store_true",
+                    help="also lower ONE k-means|| seeding round: the fused "
+                         "distance+min+sample sweep per shard plus the "
+                         "scalar potential psum (total seeding = "
+                         "(rounds+1) x this cell)")
     args = ap.parse_args()
     lower_all(args.multi_pod, backend=args.backend,
-              reseed_empty=args.reseed_empty, prune=args.prune)
+              reseed_empty=args.reseed_empty, prune=args.prune,
+              init_round=args.init)
 
 
 if __name__ == "__main__":

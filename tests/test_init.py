@@ -1,0 +1,325 @@
+"""k-means|| fused init sweep + seeding strategies (ISSUE 7).
+
+Covers: kernel-vs-oracle bitwise parity for the fused round sweep (shapes
+that stress both padding regimes, dtypes, masks — all in interpret mode,
+the CI kernel gate), the round-driver invariants (centroids are input
+points, kernel == ref backend bitwise, non-increasing potential), the
+sharded round on a 1-device mesh vs single-host, seed quality (blob SSE
+property + a directed iterations-to-converge reduction), the robustness
+satellites (``sample_init`` distinctness, ``kmeans_plus_plus`` degeneracy),
+and the ``init=`` threading contract at the pipeline entry points."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import metrics
+from repro.core.init import (INIT_METHODS, kmeans_parallel_init,
+                             kmeans_plus_plus, resolve_init, sample_init)
+from repro.core.ipkmeans import IPKMeansConfig, ipkmeans, ipkmeans_distributed
+from repro.core.kmeans import KMeansParams, kmeans, kmeans_batched
+from repro.kernels import ops, ref, specs
+from repro.kernels.engine import get_engine
+
+
+def _sweep_inputs(n, d, c, seed=0, dtype=jnp.float32):
+    kx, kc, ku, km = jax.random.split(jax.random.key(n * d + c + seed), 4)
+    x = (3.0 * jax.random.normal(kx, (n, d))).astype(dtype)
+    cd = (3.0 * jax.random.normal(kc, (c, d))).astype(dtype)
+    u = jax.random.uniform(ku, (n,), jnp.float32)
+    om = 50.0 * jax.random.uniform(km, (n,), jnp.float32)
+    return x, cd, u, om
+
+
+def _blobs(n, d, k, sep=12.0, noise=1.0, seed=0):
+    kc, kn = jax.random.split(jax.random.key(seed))
+    centers = sep * jax.random.normal(kc, (k, d), jnp.float32)
+    x = centers[jnp.arange(n) % k] + noise * jax.random.normal(
+        kn, (n, d), jnp.float32)
+    return x
+
+
+def _rows_in(points, centroids):
+    """Every centroid row appears (bitwise) among the input rows."""
+    pts = np.asarray(points)
+    return all(np.any(np.all(pts == row, axis=1))
+               for row in np.asarray(centroids))
+
+
+# --------------------------------------------------- kernel vs oracle ------
+
+# shapes stress both parity-critical pads: c < 8 (candidate axis padded to
+# the sublane minimum), d > 128 (lane-boundary zero pad re-trees the dot),
+# c > block_k (multi-tile candidate axis), and non-multiple n
+SWEEP_SHAPES = [(64, 4, 8), (100, 7, 1), (257, 17, 5), (64, 130, 16),
+                (128, 128, 8), (500, 3, 100)]
+
+
+@pytest.mark.parametrize("n,d,c", SWEEP_SHAPES)
+def test_init_sweep_matches_oracle_bitwise(n, d, c):
+    """Fold + draw regime (finite old_mind, positive psi_prev): new_mind,
+    sampled AND psi bitwise against the jnp oracle in grid order."""
+    x, cd, u, om = _sweep_inputs(n, d, c)
+    pp = jnp.float32(37.5)
+    ell = float(2 * c)
+    spec = specs.DEFAULT_SPEC
+    mind_k, samp_k, psi_k = ops.init_sweep(
+        x, cd, om, u, pp, ell=ell, spec=spec, interpret=True)
+    bn = spec.tile_shapes(n, d, c)[0]
+    mind_r, samp_r, psi_r = ref.init_sweep_ref(
+        x, cd, om, u, pp, ell=ell, block_rows=bn)
+    np.testing.assert_array_equal(np.asarray(mind_k), np.asarray(mind_r))
+    np.testing.assert_array_equal(np.asarray(samp_k), np.asarray(samp_r))
+    assert float(psi_k) == float(psi_r)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_init_sweep_dtypes(dtype):
+    """bf16 points: products are exact in the f32 accumulator, so kernel
+    and oracle stay bitwise."""
+    x, cd, u, om = _sweep_inputs(96, 9, 6, dtype=dtype)
+    pp = jnp.float32(21.0)
+    mind_k, samp_k, psi_k = ops.init_sweep(
+        x, cd, om, u, pp, ell=12.0, interpret=True)
+    bn = specs.DEFAULT_SPEC.tile_shapes(96, 9, 6)[0]
+    mind_r, samp_r, psi_r = ref.init_sweep_ref(
+        x, cd, om, u, pp, ell=12.0, block_rows=bn)
+    np.testing.assert_array_equal(np.asarray(mind_k), np.asarray(mind_r))
+    np.testing.assert_array_equal(np.asarray(samp_k), np.asarray(samp_r))
+    assert float(psi_k) == float(psi_r)
+
+
+def test_init_sweep_candidate_padding_is_inert():
+    """A pow2-padded candidate buffer with garbage rows + validity mask must
+    reproduce the unpadded sweep: masked rows score +inf, never win."""
+    n, d, c, cap = 200, 5, 3, 8
+    x, cd, u, om = _sweep_inputs(n, d, c, seed=3)
+    pad = jnp.concatenate(
+        [cd, jnp.full((cap - c, d), 1e30, jnp.float32)], axis=0)
+    valid = jnp.arange(cap) < c
+    pp = jnp.float32(11.0)
+    got = ops.init_sweep(x, pad, om, u, pp, ell=6.0, cand_valid=valid,
+                         interpret=True)
+    bn = specs.DEFAULT_SPEC.tile_shapes(n, d, cap)[0]
+    want = ref.init_sweep_ref(x, cd, om, u, pp, ell=6.0, block_rows=bn)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    assert float(got[2]) == float(want[2])
+
+
+def test_init_sweep_round0_draws_nothing():
+    """psi_prev = 0 (round 0, scoring the first pick): no Bernoulli draws,
+    but the potential comes back positive for round 1."""
+    x, cd, u, _ = _sweep_inputs(128, 6, 1, seed=5)
+    om = jnp.full((128,), jnp.inf, jnp.float32)
+    mind, samp, psi = ops.init_sweep(x, cd, om, u, jnp.float32(0.0),
+                                     ell=4.0, interpret=True)
+    assert not bool(jnp.any(samp))
+    assert float(psi) > 0.0
+    assert bool(jnp.all(jnp.isfinite(mind)))
+
+
+def test_init_sweep_weights_gate_draws_and_potential():
+    """Zero-weight (padding) points neither contribute potential nor get
+    drawn; their mind still updates (harmless, never consumed)."""
+    n, d, c = 150, 4, 4
+    x, cd, u, om = _sweep_inputs(n, d, c, seed=9)
+    w = (jnp.arange(n) < 100).astype(jnp.float32)
+    pp = jnp.float32(30.0)
+    mind, samp, psi = ops.init_sweep(x, cd, om, u, pp, ell=8.0, weights=w,
+                                     interpret=True)
+    assert not bool(jnp.any(samp[100:]))
+    expect_psi = float(jnp.sum(mind[:100]))
+    assert float(psi) == pytest.approx(expect_psi, rel=1e-6)
+
+
+# ------------------------------------------------------- round driver ------
+
+def test_kmeans_parallel_kernel_matches_ref_backend():
+    x = _blobs(300, 3, 4, seed=11)
+    key = jax.random.key(0)
+    a = kmeans_parallel_init(x, key, 4, backend="kernel")
+    b = kmeans_parallel_init(x, key, 4, backend="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kmeans_parallel_invariants():
+    x = _blobs(400, 5, 6, seed=13)
+    cents, stats = kmeans_parallel_init(x, jax.random.key(1), 6,
+                                        return_stats=True)
+    assert cents.shape == (6, 5)
+    assert _rows_in(x, cents)
+    assert len(np.unique(np.asarray(cents), axis=0)) == 6
+    assert stats["candidates"] >= 6
+    # the potential is non-increasing round over round (mind only shrinks)
+    psi = stats["psi"]
+    assert all(b <= a * (1 + 1e-6) for a, b in zip(psi, psi[1:]))
+
+
+def test_kmeans_parallel_tiny_n_tops_up():
+    # n barely >= k and a stingy ell: the farthest-point top-up must still
+    # deliver k distinct input rows
+    x = _blobs(8, 2, 4, seed=17)
+    cents = kmeans_parallel_init(x, jax.random.key(2), 4, ell=1.0, rounds=1)
+    assert _rows_in(x, cents)
+    assert len(np.unique(np.asarray(cents), axis=0)) == 4
+
+
+def test_sharded_round_matches_single_host():
+    """The distributed path (per-shard sweep + psi psum under shard_map) is
+    bitwise the single-host init on a 1-device mesh — for both backends."""
+    mesh = compat.make_mesh((1,), ("data",))
+    x = _blobs(256, 4, 4, seed=19)
+    key = jax.random.key(3)
+    for backend in ("kernel", "ref"):
+        host = kmeans_parallel_init(x, key, 4, backend=backend)
+        dist = kmeans_parallel_init(x, key, 4, backend=backend, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(host), np.asarray(dist),
+                                      err_msg=f"backend={backend}")
+
+
+# ------------------------------------------------------- seed quality ------
+
+def test_kmeans_parallel_seeds_beat_sample_on_blobs():
+    """Expected (3-key mean) seed SSE on well-separated blobs: kmeans||
+    covers the clusters, uniform sampling usually doubles some up."""
+    x = _blobs(480, 3, 6, seed=23)
+    par, smp = [], []
+    for s in range(3):
+        key = jax.random.key(100 + s)
+        par.append(float(metrics.sse(x, kmeans_parallel_init(
+            x, key, 6, backend="ref"))))
+        smp.append(float(metrics.sse(x, sample_init(x, key, 6))))
+    assert np.mean(par) <= np.mean(smp) * 1.01
+
+
+def test_kmeans_parallel_sse_property():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the 'dev' extra")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(2, 6), st.integers(2, 4), st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def prop(k, d, seed):
+        x = _blobs(60 * k, d, k, seed=seed)
+        par, smp = [], []
+        for s in range(3):
+            key = jax.random.fold_in(jax.random.key(seed), s)
+            par.append(float(metrics.sse(x, kmeans_parallel_init(
+                x, key, k, backend="ref"))))
+            smp.append(float(metrics.sse(x, sample_init(x, key, k))))
+        assert np.mean(par) <= np.mean(smp) * 1.01 + 1e-3
+
+    prop()
+
+
+def test_directed_iterations_to_converge_reduction():
+    """Fixed seed, same data/key: kmeans|| seeds converge in strictly fewer
+    Lloyd iterations AND no worse final SSE than sample seeds (the
+    BENCH_kernel.json contract, in miniature)."""
+    x = _blobs(512, 4, 8, seed=29)
+    key = jax.random.key(5)
+    solve = jax.jit(lambda p, c: get_engine("jnp").solve(
+        p, c, max_iters=100, tol=1e-6))
+    _, sse_p, it_p, _ = solve(x, kmeans_parallel_init(x, key, 8,
+                                                      backend="ref"))
+    _, sse_s, it_s, _ = solve(x, sample_init(x, key, 8))
+    assert int(it_p) < int(it_s)
+    assert float(sse_p) <= float(sse_s)
+
+
+# ------------------------------------------- satellites: sample / k++ ------
+
+def test_sample_init_returns_k_distinct_points():
+    # regression for the top-k-of-random-keys draw: k DISTINCT indices
+    x = jnp.arange(200, dtype=jnp.float32).reshape(100, 2)
+    for k in (1, 7, 50, 100):
+        cents = sample_init(x, jax.random.key(k), k)
+        assert cents.shape == (k, 2)
+        assert len(np.unique(np.asarray(cents), axis=0)) == k
+        assert _rows_in(x, cents)
+
+
+def test_kmeans_plus_plus_degenerate_duplicates():
+    # 2 distinct rows duplicated 50x: k=2 must return both, and k=4 (> the
+    # number of distinct points) must stay finite input rows, not NaN
+    base = jnp.asarray([[0.0, 0.0], [5.0, 5.0]], jnp.float32)
+    x = jnp.tile(base, (50, 1))
+    two = kmeans_plus_plus(x, jax.random.key(0), 2)
+    assert len(np.unique(np.asarray(two), axis=0)) == 2
+    four = kmeans_plus_plus(x, jax.random.key(1), 4)
+    assert bool(jnp.all(jnp.isfinite(four)))
+    assert _rows_in(x, four)
+
+
+def test_kmeans_plus_plus_weighted_ignores_zero_mass():
+    x = jnp.asarray([[0.0, 0.0], [1.0, 0.0], [100.0, 100.0]], jnp.float32)
+    w = jnp.asarray([1.0, 1.0, 0.0], jnp.float32)
+    cents = kmeans_plus_plus(x, jax.random.key(2), 2, weights=w)
+    assert not np.any(np.all(np.asarray(cents) == [100.0, 100.0], axis=1))
+
+
+# ------------------------------------------------- pipeline threading ------
+
+def test_resolve_init_dispatch_and_validation():
+    x = _blobs(64, 2, 3, seed=31)
+    for method in INIT_METHODS[1:]:
+        cents = resolve_init(x, jax.random.key(0), 3, method)
+        assert cents.shape == (3, 2)
+    with pytest.raises(ValueError, match="unknown init method"):
+        resolve_init(x, jax.random.key(0), 3, "given")
+    with pytest.raises(ValueError, match="unknown init method"):
+        resolve_init(x, jax.random.key(0), 3, "pp")
+
+
+def test_kmeans_entry_point_threading():
+    x = _blobs(200, 3, 4, seed=37)
+    res = kmeans(x, None, params=KMeansParams(init="kmeans||", max_iters=50),
+                 key=jax.random.key(0), k=4)
+    assert res.centroids.shape == (4, 3)
+    with pytest.raises(ValueError, match="needs key"):
+        kmeans(x, None, params=KMeansParams(init="sample"), k=4)
+    with pytest.raises(ValueError, match="needs k"):
+        kmeans(x, None, params=KMeansParams(init="sample"),
+               key=jax.random.key(0))
+    with pytest.raises(ValueError, match="needs init_centroids"):
+        kmeans(x, None)
+
+
+def test_kmeans_batched_rejects_non_given_init():
+    x = _blobs(64, 2, 2, seed=41).reshape(2, 32, 2)
+    m = jnp.ones((2, 32), bool)
+    c0 = x[0, :2]
+    with pytest.raises(ValueError, match="requires init='given'"):
+        kmeans_batched(x, m, c0, KMeansParams(init="sample"))
+
+
+@pytest.mark.parametrize("strategy", ["sample", "kmeans++", "kmeans||"])
+def test_ipkmeans_derives_own_seeds(strategy):
+    x = _blobs(240, 3, 3, seed=43)
+    cfg = IPKMeansConfig(num_clusters=3, num_subsets=2).with_init(strategy)
+    assert cfg.init == strategy
+    res = ipkmeans(x, None, jax.random.key(0), cfg)
+    assert res.centroids.shape == (3, 3)
+    assert bool(jnp.isfinite(res.sse))
+
+
+def test_ipkmeans_config_rejects_unknown_init():
+    cfg = IPKMeansConfig(num_clusters=3, num_subsets=2)
+    with pytest.raises(ValueError, match="unknown init"):
+        cfg.with_init("spectral")
+
+
+def test_ipkmeans_distributed_matches_single_host_kmeanspar():
+    """Acceptance: the distributed pipeline's kmeans|| seeding (sharded
+    rounds) reproduces the single-host run exactly on a 1-device mesh."""
+    mesh = compat.make_mesh((1,), ("data",))
+    x = _blobs(240, 3, 3, seed=47)
+    cfg = IPKMeansConfig(num_clusters=3, num_subsets=2).with_init("kmeans||")
+    host = ipkmeans(x, None, jax.random.key(0), cfg)
+    dist = ipkmeans_distributed(x, None, jax.random.key(0), cfg, mesh)
+    np.testing.assert_array_equal(np.asarray(host.centroids),
+                                  np.asarray(dist.centroids))
+    assert float(host.sse) == float(dist.sse)
