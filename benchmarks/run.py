@@ -24,8 +24,8 @@ def main() -> None:
                          "(anything escaping the per-bench guard) fails")
     args = ap.parse_args()
     from benchmarks import (fig5_io, fig6_time, fig8_variants, kernel_bench,
-                            roofline, table1_sse, table2_reducers,
-                            table3_large)
+                            roofline, serve_bench, table1_sse,
+                            table2_reducers, table3_large)
     benches = [
         ("table1_sse", table1_sse.run),
         ("fig5_io", fig5_io.run),
@@ -34,6 +34,7 @@ def main() -> None:
         ("table3_large", table3_large.run),
         ("fig8_variants", fig8_variants.run),
         ("kernel_bench", kernel_bench.run),
+        ("serve_bench", serve_bench.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
@@ -74,6 +75,45 @@ def main() -> None:
                         f"{init_r[0].get('fewer_median_iters')})")
                 (REPO_ROOT / "BENCH_kernel.json").write_text(
                     json.dumps(rows, indent=2) + "\n")
+            if name == "serve_bench":
+                # serving-tier snapshot, same contract style: the row set
+                # must cover the latency ladder and the refresh-quality
+                # check, and the reference bucket's p99 must not regress
+                # against the committed snapshot — a slower hot path should
+                # fail loudly, not silently rebase the trajectory.
+                lat = [r for r in rows if r.get("mode") == "latency"]
+                if len(lat) < 3 or any(
+                        k not in r for r in lat
+                        for k in ("p50_ms", "p99_ms", "qps")):
+                    raise RuntimeError(
+                        "serve_bench needs >=3 latency rows with p50/p99/"
+                        "qps; snapshot not written")
+                refr = [r for r in rows
+                        if r.get("mode") == "refresh-quality"]
+                if not refr or not refr[0].get("refreshed_not_worse"):
+                    raise RuntimeError(
+                        "serve_bench refresh-quality row missing or "
+                        "reporting mini-batch refresh worse than stale "
+                        "centroids; snapshot not written")
+                ref_rows = [r for r in lat if r.get("reference_bucket")]
+                if len(ref_rows) != 1:
+                    raise RuntimeError(
+                        "serve_bench needs exactly one reference_bucket "
+                        "latency row; snapshot not written")
+                snap = REPO_ROOT / "BENCH_serve.json"
+                if snap.exists():
+                    prev = [r for r in json.loads(snap.read_text())
+                            if r.get("reference_bucket")]
+                    # generous factor: interpret-mode timings on shared CI
+                    # runners are noisy — this catches order-of-magnitude
+                    # regressions, not jitter
+                    if prev and ref_rows[0]["p99_ms"] > 5.0 * prev[0]["p99_ms"]:
+                        raise RuntimeError(
+                            f"serve_bench p99 at reference bucket "
+                            f"{ref_rows[0]['bucket']} regressed: "
+                            f"{ref_rows[0]['p99_ms']}ms vs snapshot "
+                            f"{prev[0]['p99_ms']}ms; snapshot not written")
+                snap.write_text(json.dumps(rows, indent=2) + "\n")
         except Exception:
             failed += 1
             print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}",

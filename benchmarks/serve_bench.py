@@ -1,0 +1,173 @@
+"""Serving-tier bench: dispatch latency/QPS per bucket + refresh quality.
+
+Times the :class:`repro.core.serve.NearestCentroidServer` query path the way
+traffic sees it — submit, coalesce, pad to the bucket, one fused assign
+kernel, unpad — and reports p50/p99 latency and QPS per batch-size bucket,
+plus a bucket-policy comparison (pow2 ladder vs a two-rung fixed ladder) on
+the same mixed-size request stream.  On this CPU container the kernel runs
+under interpret=True, so absolute numbers are correctness-path timings; the
+structural outputs (trace counts, bucket ladders, relative bucket scaling)
+are the portable part.
+
+The refresh-quality row answers the serving tier's core accuracy question:
+on a drifting stream, how close does Sculley mini-batch refresh
+(``engine.update_minibatch``, one fused sweep per batch) track the full
+re-solve it replaces — and how much better is it than not refreshing at
+all?  Reported as SSE of the final (most-drifted) batch under stale /
+mini-batch-refreshed / full-resolve centroids.
+
+``benchmarks.run`` snapshots these rows to ``BENCH_serve.json`` at the repo
+root (refusing the snapshot if the reference bucket's p99 regresses — see
+run.py), so serving perf accumulates commit over commit like BENCH_kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import KMeansParams, kmeans
+from repro.core.serve import BucketPolicy, NearestCentroidServer
+from repro.kernels import ref
+from repro.launch.serve_kmeans import make_stream
+
+D, K = 16, 32
+LAT_BUCKETS = (16, 64, 256)       # >= 3 buckets; 64 is the reference
+REFERENCE_BUCKET = 64
+REPEATS = 7
+
+
+def _latencies(fn, *args, repeats: int = REPEATS):
+    """Per-call wall seconds (block_until_ready), after one warmup."""
+    jax.block_until_ready(fn(*args))
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def _sse_on(points, centroids) -> float:
+    _, mind = ref.assign_ref(points, centroids)
+    return float(jnp.sum(mind))
+
+
+def _seed_server(policy: BucketPolicy) -> NearestCentroidServer:
+    data, _ = make_stream(jax.random.key(0), 8 * K, D, K)
+    res = kmeans(data, data[:K], params=KMeansParams(max_iters=10))
+    return NearestCentroidServer(res.centroids, policy=policy)
+
+
+def _latency_rows():
+    server = _seed_server(BucketPolicy(min_bucket=8,
+                                       max_bucket=max(LAT_BUCKETS)))
+    rows = []
+    for bucket in LAT_BUCKETS:
+        q, _ = make_stream(jax.random.key(bucket), bucket, D, K)
+        lats = np.asarray(_latencies(server.assign, q)) * 1e3
+        p50, p99 = np.percentile(lats, 50), np.percentile(lats, 99)
+        rows.append({
+            "mode": "latency",
+            "bucket": int(bucket),
+            "d": D, "k": K,
+            "p50_ms": round(float(p50), 3),
+            "p99_ms": round(float(p99), 3),
+            "qps": round(bucket / (float(p50) * 1e-3), 1),
+            "reference_bucket": bucket == REFERENCE_BUCKET,
+        })
+        print(f"serve_bench,{p50 * 1e3:.0f},bucket{bucket}_p50_us",
+              flush=True)
+    assert all(v == 1 for v in server.trace_counts.values()), \
+        server.trace_counts
+    return rows
+
+
+def _policy_rows():
+    """Same mixed-size stream under pow2 vs a two-rung fixed ladder: the
+    fixed ladder trades pad waste for fewer compiled buckets."""
+    sizes = [3, 40, 9, 120, 7, 64, 25, 200, 5, 90]
+    policies = {
+        "pow2": BucketPolicy(min_bucket=8, max_bucket=256),
+        "fixed2": BucketPolicy(kind="fixed", ladder=(64, 256)),
+    }
+    rows = []
+    for name, pol in policies.items():
+        server = _seed_server(pol)
+        queries = [make_stream(jax.random.key(100 + n), n, D, K)[0]
+                   for n in sizes]
+        for q in queries:          # compile pass: buckets trace once here
+            server.assign(q)
+        t0 = time.perf_counter()
+        for q in queries:
+            jax.block_until_ready(server.assign(q))
+        wall = time.perf_counter() - t0
+        pad = sum(pol.bucket_for(n) - n for n in sizes)
+        rows.append({
+            "mode": "bucket-policy",
+            "policy": name,
+            "buckets_compiled": len(server.trace_counts),
+            "pad_rows": int(pad),
+            "stream_rows": int(sum(sizes)),
+            "stream_ms": round(wall * 1e3, 2),
+        })
+        print(f"serve_bench,{wall * 1e6 / len(sizes):.0f},"
+              f"policy_{name}_us_per_req", flush=True)
+    return rows
+
+
+def _refresh_row():
+    """Drifting stream: mini-batch-refreshed vs stale vs full-resolve
+    centroids, scored on the final (most drifted) batch."""
+    rounds, rows_per, drift_step = 5, 192, 0.5
+    server = _seed_server(BucketPolicy())
+    stale = server.centroids
+    batches = []
+    for r in range(rounds):
+        batch, _ = make_stream(jax.random.key(500 + r), rows_per, D, K,
+                               drift=(r + 1) * drift_step)
+        batches.append(batch)
+        server.refresh(batch)
+    final = batches[-1]
+    full = kmeans(jnp.concatenate(batches), stale,
+                  params=KMeansParams(max_iters=30))
+    sse_stale = _sse_on(final, stale)
+    sse_mb = _sse_on(final, server.centroids)
+    sse_full = _sse_on(final, full.centroids)
+    row = {
+        "mode": "refresh-quality",
+        "rounds": rounds, "rows_per_round": rows_per,
+        "drift_per_round": drift_step,
+        "sse_stale": round(sse_stale, 2),
+        "sse_minibatch": round(sse_mb, 2),
+        "sse_full_resolve": round(sse_full, 2),
+        "refresh_sse_series": [round(s, 1) for s in server.refresh_sse],
+        "refreshed_not_worse": bool(sse_mb <= sse_stale * 1.001),
+        "vs_full_ratio": round(sse_mb / max(sse_full, 1e-9), 3),
+    }
+    print(f"serve_bench,0,refresh_mb_over_full_"
+          f"{row['vs_full_ratio']}", flush=True)
+    return [row]
+
+
+def run():
+    rows = _latency_rows() + _policy_rows() + _refresh_row()
+    return record("serve_bench", rows)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="same sizes — the bench is already CI-scale; the "
+                         "flag mirrors the other harness entry points")
+    ap.parse_args(argv)
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,15 @@
 """Core library: IPKMeans (the paper's contribution) + PKMeans baseline."""
 from repro.core.ipkmeans import (IPKMeansConfig, IPKMeansResult, ipkmeans,
                                  ipkmeans_distributed)
-from repro.core.kmeans import KMeansParams, KMeansResult, kmeans, kmeans_batched
+from repro.core.kmeans import (KMeansParams, KMeansResult, kmeans,
+                               kmeans_batched, update_minibatch)
 from repro.core.pkmeans import PKMeansResult, pkmeans, pkmeans_sharded
-from repro.core import init, io_model, kdtree, merge, metrics
+from repro.core import init, io_model, kdtree, merge, metrics, serve
 
 __all__ = [
     "IPKMeansConfig", "IPKMeansResult", "ipkmeans", "ipkmeans_distributed",
     "KMeansParams", "KMeansResult", "kmeans", "kmeans_batched",
+    "update_minibatch",
     "PKMeansResult", "pkmeans", "pkmeans_sharded",
-    "init", "io_model", "kdtree", "merge", "metrics",
+    "init", "io_model", "kdtree", "merge", "metrics", "serve",
 ]

@@ -81,6 +81,31 @@ def lloyd_step(points, centroids, mask=None, backend: str = "jnp"):
     return new_c.astype(centroids.dtype), shard_sse
 
 
+@partial(jax.jit, static_argnames=("params",))
+def update_minibatch(points, centroids, counts, mask=None,
+                     params: KMeansParams = KMeansParams()):
+    """One Sculley-style mini-batch refresh of a served centroid set.
+
+    (n,d),(k,d),(k,)[,(n,)] -> (centroids (k,d), counts (k,) f32, sse () f32).
+
+    The sampling-based counterpart of :func:`kmeans`: instead of re-running
+    the full solve, fold one arriving batch into the running centroids with
+    per-center count-decayed learning rates (``eta = 1/count``; the
+    ``ref.minibatch_merge`` closed form).  ``counts`` carries the per-center
+    mass across calls — seed it from the full solve's cluster sizes (or
+    zeros to let the first batches dominate) and thread the returned counts
+    into the next call.  ``sse`` scores the batch against the *incoming*
+    centroids, so a rising series signals drift worth a full re-solve (see
+    docs/serving.md).  Dispatches on ``params.backend`` like every solver
+    entry point: the kernel engines fold the whole refresh into one fused
+    HBM sweep; only ``max_iters``/``tol``-style loop controls are unused
+    (a refresh is one pass by construction).
+    """
+    engine = engines.get_engine(params.backend)
+    w = None if mask is None else mask.astype(points.dtype)
+    return engine.update_minibatch(points, centroids, counts, w)
+
+
 def _init_backend(backend: str) -> str:
     """Which k-means|| sweep implementation a Lloyd backend implies: the
     jnp engine gets the jnp oracle sweep, every kernel engine the fused

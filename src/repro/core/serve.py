@@ -1,0 +1,242 @@
+"""Serving tier: batched nearest-centroid queries + mini-batch refresh.
+
+The offline pipeline ends with a centroid set; production traffic then asks
+"which centroid is nearest?" millions of times.  This module is that query
+path.  Three problems shape it:
+
+  * **Unbounded jit cache.**  Naively jitting the assign kernel per request
+    shape compiles once per distinct batch size — a mixed-size request
+    stream compiles forever.  The server rounds every batch up to a
+    *bucket* (power-of-two by default) and keeps exactly one compiled
+    ``ops.lloyd_assign_fused`` callable per bucket, so the cache is bounded
+    by ``log2(max_bucket / min_bucket) + 1`` entries no matter the traffic.
+  * **Padding must be free.**  Bucketing pads requests with zero rows.  The
+    fused kernel's phase-1 argmin is per-row — a row's label/distance
+    depends only on that row and the centroid tiles — so the real rows'
+    results are bit-for-bit what the unpadded call would produce (under the
+    same :class:`~repro.kernels.specs.KernelSpec` geometry); pad rows are
+    sliced off before results leave the server.  Each bucket resolves its
+    own tuned spec (``tuning.lookup_spec`` at the bucket shape), so
+    autotuned winners reach the serving path the same way they reach the
+    solvers.
+  * **Centroids go stale.**  Arriving traffic drifts; re-running the full
+    solve per refresh is exactly the cost the paper is built to avoid.
+    :meth:`NearestCentroidServer.refresh` folds a sampled batch into the
+    served centroids with one ``engine.update_minibatch`` sweep (Sculley
+    mini-batch k-means; see ``ref.minibatch_merge``) — the centroids move,
+    their shape does not, so no serving bucket ever retraces.
+
+``launch/serve_kmeans.py`` wraps this in a steady-state dispatch loop and a
+``--smoke`` CLI mirroring the LM serve harness; ``benchmarks/serve_bench.py``
+measures p50/p99 latency + QPS per bucket and the refresh-quality gap.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.kmeans import KMeansParams, update_minibatch
+from repro.kernels import ops, tuning
+
+
+class BucketPolicy(NamedTuple):
+    """How request batch sizes round up to compiled bucket sizes.
+
+    ``kind="pow2"`` (default): the next power of two in
+    ``[min_bucket, max_bucket]`` — the bounded-cache workhorse.
+    ``kind="fixed"``: an explicit ascending ``ladder`` of bucket sizes (the
+    smallest rung >= n wins); useful when traffic is known bimodal and two
+    rungs beat six powers of two.  Requests larger than the top bucket are
+    chunked by the server, so any n is servable under any policy.
+    """
+    kind: str = "pow2"            # 'pow2' | 'fixed'
+    min_bucket: int = 8
+    max_bucket: int = 4096
+    ladder: tuple[int, ...] = ()  # kind='fixed' rungs, ascending
+
+    def bucket_for(self, n: int) -> int:
+        """Bucket size for an n-row chunk (n <= the top bucket)."""
+        if n <= 0:
+            raise ValueError(f"bucket_for needs n >= 1, got {n}")
+        if self.kind == "fixed":
+            if not self.ladder:
+                raise ValueError("fixed bucket policy needs a ladder")
+            for b in self.ladder:
+                if n <= b:
+                    return int(b)
+            raise ValueError(f"n={n} exceeds top fixed bucket "
+                             f"{self.ladder[-1]} (server chunks first)")
+        if self.kind != "pow2":
+            raise ValueError(f"unknown bucket policy kind: {self.kind!r}")
+        b = self.min_bucket
+        while b < n:
+            b *= 2
+        if b > self.max_bucket:
+            raise ValueError(f"n={n} exceeds max_bucket={self.max_bucket} "
+                             f"(server chunks first)")
+        return int(b)
+
+    @property
+    def top(self) -> int:
+        return int(self.ladder[-1]) if self.kind == "fixed" \
+            else int(self.max_bucket)
+
+    def buckets(self) -> tuple[int, ...]:
+        """Every bucket this policy can ever emit, ascending — the jit
+        cache's worst case."""
+        if self.kind == "fixed":
+            return tuple(int(b) for b in self.ladder)
+        out, b = [], int(self.min_bucket)
+        while b <= self.max_bucket:
+            out.append(b)
+            b *= 2
+        return tuple(out)
+
+
+class _Ticket(NamedTuple):
+    ticket: int
+    n: int
+
+
+class NearestCentroidServer:
+    """Persistent nearest-centroid endpoint over a served centroid set.
+
+    Two ways in: :meth:`assign` answers one query batch synchronously
+    (chunk -> bucket -> pad -> one compiled kernel call -> unpad);
+    :meth:`submit` + :meth:`step` run the coalescing path — queued requests
+    are packed together into one bucket per dispatch, so many small
+    requests share a single kernel launch (the serve loop in
+    ``launch/serve_kmeans.py`` drives this).
+
+    ``trace_counts`` maps bucket -> number of jit traces; under any
+    mixed-size request stream each bucket traces at most once (the
+    boundedness contract ``tests/test_serve_kmeans.py`` asserts).
+    """
+
+    def __init__(self, centroids, counts=None, *,
+                 policy: BucketPolicy = BucketPolicy(),
+                 refresh_backend: str = "fused"):
+        self.centroids = jnp.asarray(centroids)
+        k = self.centroids.shape[0]
+        self.counts = (jnp.zeros((k,), jnp.float32) if counts is None
+                       else jnp.asarray(counts, jnp.float32))
+        self.policy = policy
+        self.refresh_backend = refresh_backend
+        self.refresh_sse: list[float] = []    # per-refresh pre-update SSE
+        self.trace_counts: dict[int, int] = {}
+        self._fns: dict[int, object] = {}     # bucket -> compiled assign
+        self._queue: deque = deque()          # (_Ticket, queries)
+        self._results: dict[int, tuple] = {}
+        self._next_ticket = 0
+
+    # ------------------------------------------------------------ compile --
+    def _fn_for(self, bucket: int):
+        """The ONE compiled assign callable for this bucket (build on first
+        use).  The tuned-spec lookup happens here, at the bucket shape, so
+        a cache winner tuned for (bucket, d, k) serves every request the
+        bucket absorbs.  Centroids are an argument, not a captured constant
+        — refreshes change values, never shapes, so no retrace."""
+        fn = self._fns.get(bucket)
+        if fn is None:
+            import jax
+            d = self.centroids.shape[1]
+            k = self.centroids.shape[0]
+            spec = tuning.lookup_spec(bucket, d, k, self.centroids.dtype)
+
+            def run(queries, centroids, _bucket=bucket, _spec=spec):
+                # body executes at trace time only: counts retraces, and
+                # therefore jit-cache entries, per bucket
+                self.trace_counts[_bucket] = \
+                    self.trace_counts.get(_bucket, 0) + 1
+                return ops.lloyd_assign_fused(queries, centroids, spec=_spec)
+
+            fn = jax.jit(run)
+            self._fns[bucket] = fn
+        return fn
+
+    def _assign_bucketed(self, queries):
+        """One chunk (rows <= top bucket) -> (labels, mind), via its bucket."""
+        n = queries.shape[0]
+        bucket = self.policy.bucket_for(n)
+        padded = queries
+        if bucket > n:
+            pad = jnp.zeros((bucket - n, queries.shape[1]), queries.dtype)
+            padded = jnp.concatenate([queries, pad], axis=0)
+        labels, mind = self._fn_for(bucket)(padded, self.centroids)
+        return labels[:n], mind[:n]
+
+    # ------------------------------------------------------------- queries --
+    def assign(self, queries):
+        """Nearest centroids for one query batch -> (labels (n,) i32,
+        mind (n,) f32).  Batches above the top bucket are chunked; every
+        chunk rides an existing bucket, so arbitrary n never compiles a new
+        kernel."""
+        queries = jnp.asarray(queries)
+        n = queries.shape[0]
+        top = self.policy.top
+        if n <= top:
+            return self._assign_bucketed(queries)
+        parts = [self._assign_bucketed(queries[i:i + top])
+                 for i in range(0, n, top)]
+        return (jnp.concatenate([p[0] for p in parts]),
+                jnp.concatenate([p[1] for p in parts]))
+
+    def submit(self, queries) -> int:
+        """Queue a query batch for the next coalesced dispatch -> ticket."""
+        queries = jnp.asarray(queries)
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((_Ticket(t, queries.shape[0]), queries))
+        return t
+
+    def step(self) -> list[int]:
+        """One dispatch: pack queued requests into a single bucket and run
+        ONE kernel call for all of them -> tickets completed.  Packing is
+        FIFO up to the top bucket (an oversized head request is chunked by
+        :meth:`assign`); leftover requests wait for the next step."""
+        if not self._queue:
+            return []
+        taken, rows = [], 0
+        top = self.policy.top
+        while self._queue and (not taken
+                               or rows + self._queue[0][0].n <= top):
+            tk, q = self._queue.popleft()
+            taken.append((tk, q))
+            rows += tk.n
+        labels, mind = self.assign(
+            jnp.concatenate([q for _, q in taken], axis=0)
+            if len(taken) > 1 else taken[0][1])
+        off = 0
+        done = []
+        for tk, _ in taken:
+            self._results[tk.ticket] = (labels[off:off + tk.n],
+                                        mind[off:off + tk.n])
+            off += tk.n
+            done.append(tk.ticket)
+        return done
+
+    def result(self, ticket: int):
+        """Pop a completed ticket's (labels, mind); KeyError if not ready."""
+        return self._results.pop(ticket)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------- refresh --
+    def refresh(self, batch, weights=None):
+        """Fold one sampled traffic batch into the served centroids (one
+        fused ``update_minibatch`` sweep) -> this batch's SSE against the
+        centroids it arrived at.  A rising ``refresh_sse`` series is the
+        drift signal that says schedule a full re-solve (docs/serving.md).
+        Values change, shapes don't: serving buckets never retrace."""
+        mask = None if weights is None else weights
+        new_c, new_counts, sse = update_minibatch(
+            jnp.asarray(batch), self.centroids, self.counts, mask,
+            params=KMeansParams(backend=self.refresh_backend))
+        self.centroids = new_c
+        self.counts = new_counts
+        self.refresh_sse.append(float(sse))
+        return sse

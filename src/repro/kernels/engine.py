@@ -12,6 +12,14 @@ protocol:
     reseeding).
   * ``sse(points, centroids, weights) -> ()`` — score a centroid set.
     Defaults to one ``step`` (so fused-style engines pay one sweep, not two).
+  * ``update_minibatch(points, centroids, counts, weights) ->
+    (centroids, counts, sse)`` — one Sculley-style mini-batch refresh: fold
+    a sampled batch into the running centroids with per-center count-decayed
+    learning rates (the ``ref.minibatch_merge`` closed form).  The base runs
+    the jnp oracle; ``FusedEngine``+descendants override it to reuse the
+    fused ``step`` sweep — one HBM pass per refresh batch, no label
+    round-trip.  This is the serving tier's background refresh hook
+    (``core/serve.py``).
   * ``solve(points, init, weights, max_iters, tol, reseed_empty, prune) ->
     (centroids, sse, iters, converged)`` — a whole solve.  The default drives
     ``step`` from a host-side ``lax.while_loop``; engines that own their
@@ -138,6 +146,20 @@ class LloydEngine:
         w = _as_weights(points, weights)
         return jnp.sum(w * mind)
 
+    def update_minibatch(self, points, centroids, counts, weights=None):
+        """One Sculley mini-batch refresh -> (centroids (k,d), counts (k,)
+        f32, sse () f32).
+
+        ``counts`` is the running per-center mass (from the full solve that
+        produced ``centroids``, or accumulated across refreshes); it sets the
+        learning rate ``1 / count`` and comes back grown by the batch.
+        ``sse`` scores the batch against the *incoming* centroids (what was
+        served when it arrived).  The base engine runs the jnp oracle; the
+        returned centroids keep the input dtype like ``solve``."""
+        new_c, new_counts, sse = ref.minibatch_update_ref(
+            points, centroids, counts, weights)
+        return new_c.astype(centroids.dtype), new_counts, sse
+
     def solve(self, points, init_centroids, weights=None, *,
               max_iters: int, tol: float, reseed_empty: bool = False,
               prune: str = "none"):
@@ -257,6 +279,15 @@ class FusedEngine(LloydEngine):
     def sse(self, points, centroids, weights=None):
         # step IS one sweep here — its sse output is the cheapest scoring
         return self.step(points, centroids, weights)[2]
+
+    def update_minibatch(self, points, centroids, counts, weights=None):
+        # the fused sweep already produces exactly the (sums, bcounts, sse)
+        # the Sculley merge consumes: one HBM pass per refresh batch, labels
+        # never leave VMEM, then the shared closed form on (k,)-sized state
+        sums, bcounts, sse = self.step(points, centroids, weights)
+        new_c, new_counts = ref.minibatch_merge(centroids, counts,
+                                                sums, bcounts)
+        return new_c.astype(centroids.dtype), new_counts, sse
 
 
 class ResidentEngine(FusedEngine):

@@ -44,11 +44,12 @@ from repro.kernels import specs
 from repro.kernels.specs import KernelSpec
 
 
-def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
-                  sums_ref, counts_ref, sse_ref,
+def _fused_kernel(x_ref, c_ref, cn_ref,
                   *rest,
                   block_k: int, k_actual: int, last_j: int,
-                  with_labels: bool, acc):
+                  with_labels: bool, with_accum: bool, acc):
+    if with_accum:    # assign-only mode streams no weights, owns no accums
+        w_ref, sums_ref, counts_ref, sse_ref, *rest = rest
     if with_labels:
         labels_ref, mind_ref, best_scr, idx_scr = rest
     else:
@@ -84,11 +85,27 @@ def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
 
     # --- phase 2: the argmin is final — accumulate sums/counts/SSE without
     # the labels ever touching HBM (same MXU one-hot matmul as
-    # centroid_update.py) ---
+    # centroid_update.py).  In assign-only mode (``with_accum=False``, the
+    # serving hot path) the flush stops at the labels/distances: no one-hot
+    # matmul, no VMEM-resident (k, d) accumulator blocks to revisit and
+    # write back — the sweep does only the phase-1 reads plus two (bn,)
+    # output stores per x-tile. ---
     @pl.when(j == last_j)
     def _flush():
-        w = w_ref[...].astype(acc)                        # (bn,)
         idx = idx_scr[...]
+        # add the row-constant ||x||^2 back to recover true distances
+        xf = x.astype(jnp.float32)
+        x2 = jnp.sum(xf * xf, axis=1)
+        mind = jnp.maximum(best_scr[...] + x2, 0.0)
+
+        if with_labels:                                   # final-pass labels out
+            labels_ref[...] = idx
+            mind_ref[...] = mind
+
+        if not with_accum:
+            return
+
+        w = w_ref[...].astype(acc)                        # (bn,)
         k_pad = sums_ref.shape[0]
         onehot = (idx[:, None] == jax.lax.broadcasted_iota(
             jnp.int32, (idx.shape[0], k_pad), 1)).astype(acc)
@@ -97,15 +114,7 @@ def _fused_kernel(x_ref, c_ref, cn_ref, w_ref,
         local_sums = jnp.dot(onehot.T, x,
                              preferred_element_type=acc).astype(jnp.float32)
         local_counts = jnp.sum(onehot.astype(jnp.float32), axis=0)[None, :]
-        # add the row-constant ||x||^2 back to recover true distances
-        xf = x.astype(jnp.float32)
-        x2 = jnp.sum(xf * xf, axis=1)
-        mind = jnp.maximum(best_scr[...] + x2, 0.0)
         local_sse = jnp.sum(w.astype(jnp.float32) * mind)[None, None]  # (1, 1)
-
-        if with_labels:                                   # final-pass labels out
-            labels_ref[...] = idx
-            mind_ref[...] = mind
 
         @pl.when(i == 0)
         def _init_out():
@@ -137,13 +146,15 @@ def fused_tile_shapes(n: int, d: int, k: int,
     return spec.tile_shapes(n, d, k)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "return_labels"))
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "return_labels", "assign_only"))
 def _lloyd_step_fused(points: jnp.ndarray,
                       centroids: jnp.ndarray,
                       weights: jnp.ndarray | None,
                       *,
                       spec: KernelSpec,
-                      return_labels: bool):
+                      return_labels: bool,
+                      assign_only: bool = False):
     n, d = points.shape
     k = centroids.shape[0]
     bn, bk, n_pad, k_pad, d_pad = spec.tile_shapes(n, d, k)
@@ -151,21 +162,31 @@ def _lloyd_step_fused(points: jnp.ndarray,
     x = jnp.zeros((n_pad, d_pad), points.dtype).at[:n, :d].set(points)
     c = jnp.zeros((k_pad, d_pad), centroids.dtype).at[:k, :d].set(centroids)
     cn = jnp.sum(c.astype(jnp.float32) ** 2, axis=-1)[None, :]   # (1, k_pad)
-    w = jnp.zeros((n_pad,), jnp.float32)
-    w = w.at[:n].set(1.0 if weights is None
-                     else weights.astype(jnp.float32))
 
     grid = (n_pad // bn, k_pad // bk)
-    out_specs = [
-        pl.BlockSpec((k_pad, d_pad), lambda i, j: (0, 0)),
-        pl.BlockSpec((1, k_pad), lambda i, j: (0, 0)),
-        pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+    inputs = [x, c, cn]
+    in_specs = [
+        pl.BlockSpec((bn, d_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((bk, d_pad), lambda i, j: (j, 0)),
+        pl.BlockSpec((1, bk), lambda i, j: (0, j)),
     ]
-    out_shape = [
-        jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
-        jax.ShapeDtypeStruct((1, k_pad), jnp.float32),
-        jax.ShapeDtypeStruct((1, 1), jnp.float32),
-    ]
+    out_specs, out_shape = [], []
+    if not assign_only:
+        w = jnp.zeros((n_pad,), jnp.float32)
+        w = w.at[:n].set(1.0 if weights is None
+                         else weights.astype(jnp.float32))
+        inputs.append(w)
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (i,)))
+        out_specs += [
+            pl.BlockSpec((k_pad, d_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, k_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ]
     if return_labels:
         out_specs += [pl.BlockSpec((bn,), lambda i, j: (i,)),
                       pl.BlockSpec((bn,), lambda i, j: (i,))]
@@ -174,14 +195,10 @@ def _lloyd_step_fused(points: jnp.ndarray,
     out = pl.pallas_call(
         functools.partial(_fused_kernel, block_k=bk, k_actual=k,
                           last_j=grid[1] - 1, with_labels=return_labels,
+                          with_accum=not assign_only,
                           acc=jnp.dtype(spec.acc_dtype)),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bn, d_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((bk, d_pad), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
-            pl.BlockSpec((bn,), lambda i, j: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
@@ -189,8 +206,11 @@ def _lloyd_step_fused(points: jnp.ndarray,
             pltpu.VMEM((bn,), jnp.int32),                 # running best index
         ],
         interpret=bool(spec.interpret),
-    )(x, c, cn, w)
+    )(*inputs)
 
+    if assign_only:
+        labels, mind = out
+        return labels[:n], mind[:n]
     sums, counts, sse = out[:3]
     if return_labels:
         labels, mind = out[3], out[4]
@@ -207,7 +227,8 @@ def lloyd_step_fused(points: jnp.ndarray,
                      block_n: int | None = None,
                      block_k: int | None = None,
                      interpret: bool | None = None,
-                     return_labels: bool = False):
+                     return_labels: bool = False,
+                     assign_only: bool = False):
     """One fused Lloyd pass: (n,d),(k,d)[,(n,)] ->
     sums (k,d) f32, counts (k,) f32, sse () f32.
 
@@ -222,9 +243,25 @@ def lloyd_step_fused(points: jnp.ndarray,
     the *final* iteration only (cluster dumps, solver final statistics), so
     callers get the assignment from the same single sweep instead of a
     second two-kernel assign pass.  Returns a 5-tuple in that case.
+
+    ``assign_only=True`` (implies ``return_labels``) is the serving hot
+    path: the SAME phase-1 online argmin — labels/distances bit-for-bit
+    with the full sweep — but the flush stops there.  No weights stream in,
+    no one-hot MXU matmul fires, and the VMEM-resident ``(k_pad, d_pad)``
+    sums / counts / sse output blocks are never allocated or written: the
+    only stores are the two ``(bn,)`` per-tile vectors, roughly halving
+    per-sweep VMEM writes for query batches that want labels, not a
+    centroid update.  Returns ``(labels (n,) i32, mind (n,) f32)``.
     """
     spec = specs.coerce(spec, block_n=block_n, block_k=block_k,
                         interpret=interpret)
-    return _lloyd_step_fused(points, centroids, weights,
-                             spec=spec.with_interpret(bool(spec.interpret)),
+    spec = spec.with_interpret(bool(spec.interpret))
+    if assign_only:
+        if weights is not None:
+            raise ValueError("assign_only sweeps take no weights: the "
+                             "accumulators that would consume them are "
+                             "exactly what the mode elides")
+        return _lloyd_step_fused(points, centroids, None, spec=spec,
+                                 return_labels=True, assign_only=True)
+    return _lloyd_step_fused(points, centroids, weights, spec=spec,
                              return_labels=return_labels)

@@ -72,13 +72,17 @@ def lloyd_assign_fused(points, centroids, *,
                        spec: KernelSpec | None = None,
                        block_n: int | None = None, block_k: int | None = None,
                        interpret: bool | None = None):
-    """Labels + min squared distances from the fused kernel's final-pass
-    labels output — one sweep, no second kernel (for cluster dumps and
-    solver final statistics)."""
+    """Labels + min squared distances from the fused kernel's assign-only
+    mode — one sweep, no second kernel, and (since the serving tier made
+    this the query hot path) none of the phase-2 accumulator work either:
+    the sums/counts/SSE blocks are never allocated or written, so the sweep
+    pays only the phase-1 reads plus two ``(bn,)`` stores per x-tile.
+    Labels and distances are bit-for-bit the full sweep's (same phase-1
+    argmin) — cluster dumps, solver final statistics, and the serving
+    endpoint all share this path."""
     spec = _resolve(spec, block_n, block_k, interpret, specs.DEFAULT_SPEC)
-    _, _, _, labels, mind = _lloyd_step_fused(
-        points, centroids, None, spec=spec, return_labels=True)
-    return labels, mind
+    return _lloyd_step_fused(points, centroids, None, spec=spec,
+                             return_labels=True, assign_only=True)
 
 
 def init_sweep(points, cands, old_mind, uniforms, psi_prev, *, ell: float,

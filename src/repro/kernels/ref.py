@@ -79,6 +79,57 @@ def reseed_farthest(points: jnp.ndarray, score: jnp.ndarray,
     return take, picks
 
 
+def minibatch_merge(centroids: jnp.ndarray, counts: jnp.ndarray,
+                    sums: jnp.ndarray, bcounts: jnp.ndarray):
+    """Fold one batch's (sums, bcounts) into running (centroids, counts).
+
+    This closed form IS Sculley's sequential mini-batch k-means update
+    ("Web-Scale K-Means Clustering", PAPERS.md): walking the batch point by
+    point with per-center count-decayed learning rates ``eta = w / count``
+    (assignments fixed at batch start) telescopes to exactly the weighted
+    running mean
+
+        new_c[j] = (counts[j] * c[j] + sums[j]) / (counts[j] + bcounts[j])
+
+    — each step computes the running mean of everything seen so far, so the
+    batch collapses to one merge.  Centers the batch never touched keep
+    their coordinates bit-for-bit (the ``where``, not a ``c*n/n`` round
+    trip).  ONE definition shared by the jnp oracle below and the fused
+    engine path (``engine.FusedEngine.update_minibatch``), mirroring
+    ``divide_or_keep``.
+
+    Returns ``(new_centroids (k,d) f32, new_counts (k,) f32)``.
+    """
+    c = centroids.astype(jnp.float32)
+    counts = counts.astype(jnp.float32)
+    new_counts = counts + bcounts
+    new_c = jnp.where(bcounts[:, None] > 0.0,
+                      (counts[:, None] * c + sums)
+                      / jnp.maximum(new_counts[:, None], 1.0),
+                      c)
+    return new_c, new_counts
+
+
+def minibatch_update_ref(points: jnp.ndarray, centroids: jnp.ndarray,
+                         counts: jnp.ndarray,
+                         weights: jnp.ndarray | None = None):
+    """Oracle for one mini-batch refresh: (n,d),(k,d),(k,)[,(n,)] ->
+    (new_centroids (k,d) f32, new_counts (k,) f32, sse () f32).
+
+    One nearest-centroid pass over the batch (assignments fixed at batch
+    start, per Sculley), a weighted segment-sum, then the
+    :func:`minibatch_merge` closed form.  ``sse`` is the batch's weighted
+    SSE against the *incoming* centroids — the score of what was being
+    served when the batch arrived, which is what a drift monitor wants."""
+    k = centroids.shape[0]
+    w = (jnp.ones(points.shape[0], jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    labels, mind = assign_ref(points, centroids)
+    sums, bcounts = centroid_update_ref(points, labels, w, k)
+    new_c, new_counts = minibatch_merge(centroids, counts, sums, bcounts)
+    return new_c, new_counts, jnp.sum(w * mind)
+
+
 def assign_ref(points: jnp.ndarray, centroids: jnp.ndarray):
     """Nearest-centroid assignment: (n,d),(k,d) -> labels (n,) i32, min sq
     distances (n,) f32.  Ties break to the lowest index (argmin semantics)."""

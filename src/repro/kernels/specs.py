@@ -137,6 +137,16 @@ class KernelSpec:
         return ((bn * d_pad + bk * d_pad + bk + bn) * self.acc_bytes
                 + (k_pad * d_pad + k_pad + 1 + 2 * bn) * F32)
 
+    def assign_fused_vmem_bytes(self, n: int, d: int, k: int) -> int:
+        """Per-grid-step working set of the fused kernel's assign-only mode
+        (the serving hot path): the phase-1 x/c/cn tiles and argmin scratch
+        only — no weights stream, no resident (k_pad, d_pad) sums/counts/sse
+        output blocks — so the resident share drops from O(k_pad * d_pad)
+        to the two (bn,) label/distance output tiles."""
+        bn, bk, _, _, d_pad = self.tile_shapes(n, d, k)
+        return ((bn * d_pad + bk * d_pad + bk) * self.acc_bytes
+                + 4 * bn * F32)       # (best, idx) scratch + (labels, mind)
+
     def update_vmem_bytes(self, n: int, d: int, k: int) -> int:
         """Per-grid-step working set of the segment-sum kernel."""
         bn, _, k_pad, d_pad = self.update_tile_shapes(n, d, k)

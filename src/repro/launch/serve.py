@@ -46,17 +46,39 @@ def greedy_generate(cfg, params, prompt_tokens, *, max_new: int = 32,
     if cfg.is_encdec:
         memory = encdec.encode(params, enc_embeds, cfg)
         caches = encdec.prefill_memory(params, memory, caches, cfg)
-    step = jax.jit(make_decode_step(cfg))
-    toks = prompt_tokens
-    # prefill by stepping the prompt (cache-building path)
-    logits = None
-    for t in range(s0):
-        logits, caches = step(params, caches, toks[:, t:t + 1], jnp.int32(t))
-    out = [toks]
+    raw_step = make_decode_step(cfg)
+    step = jax.jit(raw_step)
+
+    # Prompt pass: ONE jitted scan of the decode step builds the prompt's
+    # KV caches (the cache write path is single-token, so the scan replays
+    # it per position — but inside one compiled program, not s0 dispatches,
+    # and the per-step lm_head logits are dead code XLA eliminates)...
+    @jax.jit
+    def warm(params, caches, toks):
+        def body(c, xs):
+            tok, pos = xs
+            _, c = raw_step(params, c, tok, pos)
+            return c, ()
+        c, _ = jax.lax.scan(
+            body, caches,
+            (jnp.swapaxes(toks, 0, 1)[:, :, None],
+             jnp.arange(toks.shape[1], dtype=jnp.int32)))
+        return c
+
+    caches = warm(params, caches, prompt_tokens)
+    # ...and the prefill step scores the whole prompt in one full-sequence
+    # forward, yielding the first new token's logits without s0 decode hops.
+    prefill = jax.jit(make_prefill_step(cfg))
+    batch = {"tokens": prompt_tokens}
+    if cfg.is_encdec:
+        batch["embeds"] = enc_embeds
+    logits = prefill(params, batch)                      # (B, V)
+    out = [prompt_tokens]
     for t in range(s0, max_len):
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         out.append(nxt)
-        logits, caches = step(params, caches, nxt, jnp.int32(t))
+        step_logits, caches = step(params, caches, nxt, jnp.int32(t))
+        logits = step_logits[:, -1]
     return jnp.concatenate(out, axis=1)
 
 

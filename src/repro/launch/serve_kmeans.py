@@ -1,0 +1,135 @@
+"""Serving harness for the clustering tier (mirrors ``launch/serve.py``).
+
+Stands up a :class:`repro.core.serve.NearestCentroidServer` over centroids
+from a quick synthetic solve, then drives a steady-state dispatch loop:
+random-sized query batches arrive, coalesce into bucketed kernel launches,
+and a background mini-batch refresh periodically folds a sampled (drifting)
+traffic batch into the served centroids.  Prints p50/p99 dispatch latency,
+QPS, the jit-trace count per bucket, and the refresh SSE series.
+
+``--smoke`` shrinks everything to a seconds-scale CI check —
+``python -m repro.launch.serve_kmeans --smoke`` is the serve-smoke CI job.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KMeansParams, kmeans
+from repro.core.serve import BucketPolicy, NearestCentroidServer
+
+
+def make_stream(key, n: int, d: int, k: int, *, drift: float = 0.0):
+    """Synthetic traffic: points around k cluster centers, optionally
+    drifted — (points (n,d), true centers (k,d))."""
+    kc, kp, ka = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * 4.0 + drift
+    which = jax.random.randint(ka, (n,), 0, k)
+    pts = centers[which] + jax.random.normal(kp, (n, d))
+    return pts, centers
+
+
+def serve_loop(server: NearestCentroidServer, key, *, requests: int,
+               max_request: int, d: int, refresh_every: int = 0,
+               refresh_rows: int = 256, drift_step: float = 0.0,
+               quiet: bool = False):
+    """Steady-state loop: submit random-sized batches, dispatch, refresh.
+
+    Returns ``(latencies_s (list, one per dispatch), served_rows)``.  Each
+    dispatch is timed to completion (``block_until_ready``), so latencies
+    include the coalesce + pad + kernel + unpack path a caller would see.
+    """
+    latencies, served = [], 0
+    drift = 0.0
+    for i in range(requests):
+        key, ks, kq = jax.random.split(key, 3)
+        n = int(jax.random.randint(ks, (), 1, max_request + 1))
+        q, _ = make_stream(kq, n, d, server.centroids.shape[0], drift=drift)
+        t = server.submit(q)
+        t0 = time.perf_counter()
+        done = server.step()
+        labels, _ = server.result(t)
+        jax.block_until_ready(labels)
+        latencies.append(time.perf_counter() - t0)
+        served += n
+        assert done and t in done
+        if refresh_every and (i + 1) % refresh_every == 0:
+            drift += drift_step
+            key, kr = jax.random.split(key)
+            batch, _ = make_stream(kr, refresh_rows, d,
+                                   server.centroids.shape[0], drift=drift)
+            sse = server.refresh(batch)
+            if not quiet:
+                print(f"  refresh @{i + 1}: batch sse {float(sse):.1f} "
+                      f"(drift {drift:.2f})")
+    return latencies, served
+
+
+def main(argv=None) -> NearestCentroidServer:
+    ap = argparse.ArgumentParser(
+        description="nearest-centroid serving endpoint (clustering tier)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale sizes for CI")
+    ap.add_argument("--k", type=int, default=64)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--max-request", type=int, default=256)
+    ap.add_argument("--min-bucket", type=int, default=8)
+    ap.add_argument("--max-bucket", type=int, default=512)
+    ap.add_argument("--refresh-every", type=int, default=50,
+                    help="dispatches between mini-batch refreshes (0: off)")
+    ap.add_argument("--refresh-rows", type=int, default=256)
+    ap.add_argument("--backend", default="fused",
+                    help="refresh engine (any registered backend)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.k, args.dim = 8, 8
+        args.requests, args.max_request = 12, 24
+        args.max_bucket, args.refresh_every = 32, 6
+        args.refresh_rows = 64
+
+    key = jax.random.key(args.seed)
+    key, kd = jax.random.split(key)
+    data, _ = make_stream(kd, max(64, 8 * args.k), args.dim, args.k)
+    res = kmeans(data, data[:args.k], params=KMeansParams(max_iters=10))
+    # seed the refresh counts from the solve's cluster sizes: large counts
+    # mean small learning rates, so a trusted solve drifts slowly
+    from repro.kernels import ref
+    labels, _ = ref.assign_ref(data, res.centroids)
+    seed_counts = jnp.asarray(
+        np.bincount(np.asarray(labels), minlength=args.k), jnp.float32)
+
+    server = NearestCentroidServer(
+        res.centroids, seed_counts,
+        policy=BucketPolicy(min_bucket=args.min_bucket,
+                            max_bucket=args.max_bucket),
+        refresh_backend=args.backend)
+
+    t0 = time.perf_counter()
+    lats, served = serve_loop(
+        server, key, requests=args.requests, max_request=args.max_request,
+        d=args.dim, refresh_every=args.refresh_every,
+        refresh_rows=args.refresh_rows, drift_step=0.25)
+    wall = time.perf_counter() - t0
+
+    lat_ms = np.asarray(lats) * 1e3
+    print(f"served {served} rows / {args.requests} requests in {wall:.2f}s "
+          f"({served / wall:.0f} rows/s)")
+    print(f"dispatch latency p50 {np.percentile(lat_ms, 50):.2f}ms "
+          f"p99 {np.percentile(lat_ms, 99):.2f}ms")
+    print(f"jit traces per bucket: {dict(sorted(server.trace_counts.items()))}")
+    if server.refresh_sse:
+        print("refresh sse series:",
+              [round(s, 1) for s in server.refresh_sse])
+    assert all(v == 1 for v in server.trace_counts.values()), \
+        "jit cache exceeded one entry per bucket"
+    return server
+
+
+if __name__ == "__main__":
+    main()

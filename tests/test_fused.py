@@ -73,6 +73,32 @@ def test_fused_masked_points(n, d, k):
     assert float(cnt_f.sum()) == pytest.approx(float(w.sum()))
 
 
+@pytest.mark.parametrize("n,d,k", SHAPES[:5])
+def test_assign_only_bitwise_vs_full_sweep(n, d, k):
+    """The assign-only fast path (``ops.lloyd_assign_fused``) elides the
+    phase-2 accumulators but shares phase 1 verbatim: labels and distances
+    must be bit-for-bit the full sweep's, and match the oracle."""
+    x, c = _data(n, d, k)
+    la, ma = ops.lloyd_assign_fused(x, c, interpret=True)
+    from repro.kernels.fused import lloyd_step_fused
+    _, _, _, lf, mf = lloyd_step_fused(x, c, interpret=True,
+                                       return_labels=True)
+    assert np.array_equal(np.asarray(la), np.asarray(lf))
+    assert np.array_equal(np.asarray(ma), np.asarray(mf))
+    lr, mr = ref.assign_ref(x, c)
+    assert np.array_equal(np.asarray(la), np.asarray(lr))
+    np.testing.assert_allclose(np.asarray(ma), np.asarray(mr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_assign_only_rejects_weights():
+    x, c = _data(64, 2, 3)
+    from repro.kernels.fused import lloyd_step_fused
+    with pytest.raises(ValueError, match="assign_only"):
+        lloyd_step_fused(x, c, jnp.ones((64,)), interpret=True,
+                         assign_only=True)
+
+
 def test_fused_empty_clusters():
     """A centroid nothing maps to must come back with zero sum and count,
     and the solver step must then keep the old centroid."""

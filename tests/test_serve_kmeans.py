@@ -1,0 +1,213 @@
+"""Serving tier: bucketing/padding correctness, jit-cache boundedness,
+mini-batch refresh semantics, and endpoint smoke (core/serve.py +
+launch/serve_kmeans.py + engine.update_minibatch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KMeansParams, update_minibatch
+from repro.core.serve import BucketPolicy, NearestCentroidServer
+from repro.kernels import engine as engines
+from repro.kernels import ops, ref
+
+
+def _data(n, d, k, seed=0):
+    kx, kc = jax.random.split(jax.random.key(seed + n * d * k))
+    return (jax.random.normal(kx, (n, d)) * 3.0,
+            jax.random.normal(kc, (k, d)) * 3.0)
+
+
+# ------------------------------------------------------------ bucketing --
+
+def test_bucket_policy_pow2():
+    pol = BucketPolicy(min_bucket=8, max_bucket=128)
+    assert [pol.bucket_for(n) for n in (1, 8, 9, 63, 64, 65, 128)] == \
+        [8, 8, 16, 64, 64, 128, 128]
+    assert pol.buckets() == (8, 16, 32, 64, 128)
+    with pytest.raises(ValueError, match="max_bucket"):
+        pol.bucket_for(129)
+    with pytest.raises(ValueError, match="n >= 1"):
+        pol.bucket_for(0)
+
+
+def test_bucket_policy_fixed():
+    pol = BucketPolicy(kind="fixed", ladder=(32, 256))
+    assert pol.bucket_for(5) == 32
+    assert pol.bucket_for(33) == 256
+    assert pol.top == 256
+    assert pol.buckets() == (32, 256)
+    with pytest.raises(ValueError, match="ladder"):
+        BucketPolicy(kind="fixed").bucket_for(4)
+    with pytest.raises(ValueError, match="unknown bucket policy"):
+        BucketPolicy(kind="pow3").bucket_for(4)
+
+
+@pytest.mark.parametrize("n", [1, 3, 8, 17, 64, 100, 150])
+def test_padded_assign_bitwise_vs_unpadded(n):
+    """The acceptance contract: a bucketed (zero-padded) serving call must
+    return, for the real rows, exactly what the unpadded kernel returns —
+    bit for bit, labels and distances."""
+    q, c = _data(n, 5, 13, seed=n)
+    server = NearestCentroidServer(
+        c, policy=BucketPolicy(min_bucket=8, max_bucket=64))
+    labels, mind = server.assign(q)
+    labels0, mind0 = ops.lloyd_assign_fused(q, c)
+    assert np.array_equal(np.asarray(labels), np.asarray(labels0))
+    assert np.array_equal(np.asarray(mind), np.asarray(mind0))
+    # and against the oracle's labels (argmin semantics, low-index ties)
+    lr, _ = ref.assign_ref(q, c)
+    assert np.array_equal(np.asarray(labels), np.asarray(lr))
+
+
+def test_jit_cache_bounded_under_mixed_stream():
+    """A mixed-size request stream may compile at most ONE entry per bucket
+    — revisiting a size, or any new size inside a seen bucket, must not
+    retrace."""
+    _, c = _data(8, 4, 6)
+    server = NearestCentroidServer(
+        c, policy=BucketPolicy(min_bucket=8, max_bucket=64))
+    sizes = [3, 9, 17, 64, 150, 5, 33, 9, 3, 12, 64, 1, 40, 150]
+    for i, n in enumerate(sizes):
+        q, _ = _data(n, 4, 6, seed=i)
+        server.assign(q)
+    assert set(server.trace_counts) <= set(server.policy.buckets())
+    assert all(v == 1 for v in server.trace_counts.values()), \
+        server.trace_counts
+
+
+def test_coalesced_dispatch_matches_direct():
+    """submit + step packs queued requests into one launch; per-ticket
+    results must equal the direct per-request path exactly."""
+    _, c = _data(8, 4, 6)
+    server = NearestCentroidServer(
+        c, policy=BucketPolicy(min_bucket=8, max_bucket=64))
+    qs = [_data(n, 4, 6, seed=50 + n)[0] for n in (4, 7, 11)]
+    tickets = [server.submit(q) for q in qs]
+    done = server.step()
+    assert sorted(done) == sorted(tickets)          # 22 rows pack into 32
+    assert server.pending == 0
+    for t, q in zip(tickets, qs):
+        labels, mind = server.result(t)
+        l0, m0 = ops.lloyd_assign_fused(q, c)
+        assert np.array_equal(np.asarray(labels), np.asarray(l0))
+        assert np.array_equal(np.asarray(mind), np.asarray(m0))
+    with pytest.raises(KeyError):
+        server.result(tickets[0])                   # results pop once
+
+
+def test_step_leaves_overflow_queued():
+    _, c = _data(8, 4, 6)
+    server = NearestCentroidServer(
+        c, policy=BucketPolicy(min_bucket=8, max_bucket=16))
+    t1 = server.submit(_data(10, 4, 6, seed=1)[0])
+    t2 = server.submit(_data(12, 4, 6, seed=2)[0])  # 22 > top bucket 16
+    assert server.step() == [t1]
+    assert server.pending == 1
+    assert server.step() == [t2]
+
+
+# ---------------------------------------------------- mini-batch refresh --
+
+def test_update_minibatch_fused_matches_oracle():
+    x, c = _data(257, 7, 5)
+    counts = jnp.abs(jax.random.normal(jax.random.key(7), (5,))) * 10.0
+    oc, on, osse = update_minibatch(x, c, counts)
+    fc, fn, fsse = update_minibatch(x, c, counts,
+                                    params=KMeansParams(backend="fused"))
+    np.testing.assert_allclose(np.asarray(fc), np.asarray(oc),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fn), np.asarray(on), rtol=1e-6)
+    np.testing.assert_allclose(float(fsse), float(osse), rtol=1e-5)
+
+
+def test_update_minibatch_is_sculleys_sequential_update():
+    """The closed-form merge must equal the literal Sculley loop: walk the
+    batch point by point with eta = 1/count, assignments fixed at batch
+    start."""
+    x, c = _data(101, 3, 4)
+    counts = jnp.asarray([5.0, 0.0, 17.0, 2.0])
+    labels, _ = ref.assign_ref(x, c)
+    cs = np.asarray(c, np.float64)
+    cn = np.asarray(counts, np.float64)
+    for i in range(x.shape[0]):
+        j = int(labels[i])
+        cn[j] += 1.0
+        eta = 1.0 / cn[j]
+        cs[j] = (1.0 - eta) * cs[j] + eta * np.asarray(x[i], np.float64)
+    new_c, new_counts, _ = update_minibatch(x, c, counts)
+    np.testing.assert_allclose(np.asarray(new_c), cs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_counts), cn, rtol=1e-6)
+
+
+def test_update_minibatch_untouched_centers_bitwise():
+    """Centers the batch never reaches keep their coordinates bit-for-bit
+    (the merge's where-guard, not a c*n/n round trip) and their counts."""
+    x, c = _data(64, 4, 6)
+    c = c.at[3].set(1e6)                            # unreachable center
+    counts = jnp.full((6,), 3.0)
+    new_c, new_counts, _ = update_minibatch(x, c, counts,
+                                            params=KMeansParams(
+                                                backend="fused"))
+    assert np.array_equal(np.asarray(new_c[3]), np.asarray(c[3]))
+    assert float(new_counts[3]) == 3.0
+
+
+def test_update_minibatch_mask_rows_ignored():
+    x, c = _data(80, 4, 5)
+    mask = jnp.arange(80) < 50
+    a = update_minibatch(x[:50], c, jnp.zeros((5,)))
+    b = update_minibatch(x, c, jnp.zeros((5,)), mask)
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                               rtol=1e-6)
+
+
+def test_refresh_sse_non_increasing_on_fixed_stream():
+    """Repeated refreshes against the SAME batch must not increase its SSE:
+    each merge moves every touched center toward its assigned mean (convex
+    combination), then the next round may only reassign to closer centers."""
+    x, c = _data(300, 6, 8, seed=11)
+    server = NearestCentroidServer(c, refresh_backend="fused")
+    for _ in range(6):
+        server.refresh(x)
+    series = server.refresh_sse
+    assert len(series) == 6
+    for a, b in zip(series, series[1:]):
+        assert b <= a * (1.0 + 1e-6), series
+
+
+def test_refresh_improves_on_drifted_stream():
+    """On a shifted batch, one refresh must score better than the stale
+    centroids it replaced (the serving tier's reason to exist)."""
+    x, c = _data(400, 5, 6, seed=21)
+    shifted = x + 2.0
+    server = NearestCentroidServer(c, refresh_backend="fused")
+    sse_before = float(server.refresh(shifted))     # scores INCOMING c
+    _, mind = ref.assign_ref(shifted, server.centroids)
+    assert float(jnp.sum(mind)) < sse_before
+
+
+def test_refresh_does_not_retrace_serving_buckets():
+    """Refreshes change centroid VALUES, never shapes — the serving
+    jit cache must be untouched."""
+    x, c = _data(128, 4, 6)
+    server = NearestCentroidServer(c)
+    server.assign(x[:10])
+    before = dict(server.trace_counts)
+    server.refresh(x)
+    server.assign(x[:10])
+    server.assign(x[:9])                            # same bucket, new size
+    assert server.trace_counts == before
+
+
+# ------------------------------------------------------------- endpoint --
+
+def test_endpoint_smoke():
+    """launch/serve_kmeans.py --smoke end to end: the CI serve-smoke job's
+    entry point (it asserts the one-trace-per-bucket contract internally)."""
+    from repro.launch import serve_kmeans
+    server = serve_kmeans.main(["--smoke"])
+    assert server.refresh_sse                       # refreshes ran
+    assert all(v == 1 for v in server.trace_counts.values())
