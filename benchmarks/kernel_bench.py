@@ -427,6 +427,34 @@ def run():
     }
     rows.append(init_row)
 
+    # cross-pod DCN pricing: exact vs int8ef reduction traffic for the
+    # multi-pod S2, priced with the io_model alongside the HBM models above.
+    # Analytic (no devices needed): per-pod payload per Lloyd iteration and
+    # whole-solve ring-all-reduce bytes at the dist_bench geometry plus the
+    # dryrun production shape — the ratio is shape-dependent ((k*d + 5k + 4)
+    # / (4k*(d+1))), dropping under 1/3 once d >= 16, which is the paper's
+    # 2/3-lower-I/O headline restated for the pod axis.
+    from repro.core.io_model import (dcn_reduce_bytes_ipkmeans,
+                                     ipkmeans_stats_payload_bytes)
+    dcn_rows = []
+    for m_x, k_x, d_x, pods_x, iters_x, tag in (
+            (16, 8, 32, 2, NOMINAL_ITERS, "dist-bench-shape"),
+            (4096, 1024, 64, 2, NOMINAL_ITERS, "production-shape")):
+        ex_b = ipkmeans_stats_payload_bytes(m_x, k_x, d_x, "exact")
+        q_b = ipkmeans_stats_payload_bytes(m_x, k_x, d_x, "int8ef")
+        dcn_rows.append({
+            "m": m_x, "k": k_x, "d": d_x, "pods": pods_x, "iters": iters_x,
+            "mode": "dcn-exact-vs-int8ef", "shape_tag": tag,
+            "payload_bytes_exact": ex_b,
+            "payload_bytes_int8ef": q_b,
+            "payload_ratio": q_b / ex_b,
+            "dcn_bytes_solve_exact": dcn_reduce_bytes_ipkmeans(
+                m_x, k_x, d_x, iters_x, pods_x, "exact"),
+            "dcn_bytes_solve_int8ef": dcn_reduce_bytes_ipkmeans(
+                m_x, k_x, d_x, iters_x, pods_x, "int8ef"),
+        })
+    rows.extend(dcn_rows)
+
     record("kernel_bench", rows,
            ("kernel_assign", f"{assign_row['jnp_ref_us']:.0f}",
             f"gflops={assign_row['gflops_per_s']:.1f}"))
@@ -461,6 +489,9 @@ def run():
             f"median_iters={init_row['kmeanspar_median_iters']:.0f}/"
             f"{init_row['sample_median_iters']:.0f} "
             f"sse_ok={init_row['sse_not_worse']}"))
+    record("kernel_bench", rows,
+           ("kernel_dcn_exact_vs_int8ef", "0",
+            f"payload_ratio={dcn_rows[0]['payload_ratio']:.3f}"))
     return rows
 
 

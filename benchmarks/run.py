@@ -23,8 +23,8 @@ def main() -> None:
                          "the exit code stays 0 — only a harness crash "
                          "(anything escaping the per-bench guard) fails")
     args = ap.parse_args()
-    from benchmarks import (fig5_io, fig6_time, fig8_variants, kernel_bench,
-                            roofline, serve_bench, table1_sse,
+    from benchmarks import (dist_bench, fig5_io, fig6_time, fig8_variants,
+                            kernel_bench, roofline, serve_bench, table1_sse,
                             table2_reducers, table3_large)
     benches = [
         ("table1_sse", table1_sse.run),
@@ -35,6 +35,7 @@ def main() -> None:
         ("fig8_variants", fig8_variants.run),
         ("kernel_bench", kernel_bench.run),
         ("serve_bench", serve_bench.run),
+        ("dist_bench", dist_bench.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
@@ -114,6 +115,36 @@ def main() -> None:
                             f"{ref_rows[0]['p99_ms']}ms vs snapshot "
                             f"{prev[0]['p99_ms']}ms; snapshot not written")
                 snap.write_text(json.dumps(rows, indent=2) + "\n")
+            if name == "dist_bench":
+                # multi-pod snapshot: the pod-scaling table must contain
+                # both reduce modes at >1 pod, the compressed payload must
+                # honor the paper's 2/3-lower-I/O headline (int8ef <= 1/3
+                # of exact), and the compressed solve must land within
+                # 1e-3 relative SSE of the exact reduction on every mesh —
+                # else the snapshot is not written.
+                scal = [r for r in rows if r.get("mode") == "pod-scaling"]
+                q = [r for r in scal
+                     if r.get("reduce") == "int8ef" and r.get("pods", 0) > 1]
+                ex = {r["pods"]: r for r in scal
+                      if r.get("reduce") == "exact" and r.get("pods", 0) > 1}
+                if not q or not ex:
+                    raise RuntimeError(
+                        "dist_bench rows lack multi-pod exact/int8ef pairs; "
+                        "snapshot not written")
+                for r in q:
+                    cap = ex[r["pods"]]["payload_bytes_per_pod_per_iter"] / 3
+                    if r["payload_bytes_per_pod_per_iter"] > cap:
+                        raise RuntimeError(
+                            f"int8ef payload {r['payload_bytes_per_pod_per_iter']}"
+                            f" > exact/3 ({cap:.0f}) at pods={r['pods']}; "
+                            f"snapshot not written")
+                    if abs(r["sse_rel_delta_vs_exact"]) > 1e-3:
+                        raise RuntimeError(
+                            f"int8ef SSE off by {r['sse_rel_delta_vs_exact']:.2e}"
+                            f" relative (> 1e-3) at pods={r['pods']}; "
+                            f"snapshot not written")
+                (REPO_ROOT / "BENCH_dist.json").write_text(
+                    json.dumps(rows, indent=2) + "\n")
         except Exception:
             failed += 1
             print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}",

@@ -123,3 +123,47 @@ def tpu_collective_bytes_ipkmeans(n: int, d: int, k: int, m: int,
     s1 = kd_depth * pass_bytes + pass_bytes          # tree levels + packing
     s3 = m * k * d * dtype_bytes
     return s1 + s3
+
+
+# ---------------- cross-pod (DCN) reduction pricing ----------------
+# On the (pods x devices) mesh, S2 keeps zero collectives on the fast axis
+# but gains exactly one per-iteration (sums, counts) reduction over the
+# slow DCN axis — the dominant pod-scale cost this model prices.
+
+def ipkmeans_stats_payload_bytes(m: int, k: int, d: int,
+                                 mode: str = "exact") -> int:
+    """Bytes ONE pod contributes per Lloyd iteration to the cross-pod
+    (sums, counts) reduction of ``m`` subsets — the quantity
+    ``distributed/compress.payload_bytes`` measures on the actual payload
+    trees, restated analytically.  ``"exact"`` ships f32 stats;
+    ``"int8ef"`` ships int8 values plus their f32 scales (per sums row /
+    per counts vector).  The int8ef/exact ratio is
+    ``(k*d + 5k + 4) / (4k*(d+1))`` — under 1/3 for d >= 16, the paper's
+    2/3-lower-I/O headline restated at the pod scale."""
+    if mode == "exact":
+        return m * 4 * (k * d + k)            # f32 sums + f32 counts
+    if mode == "int8ef":
+        # int8 sums + f32 per-row scales; int8 counts + one f32 scale
+        return m * ((k * d + 4 * k) + (k + 4))
+    raise ValueError(f"unknown reduce mode: {mode!r} "
+                     f"(expected 'exact' | 'int8ef')")
+
+
+def dcn_reduce_bytes_ipkmeans(m: int, k: int, d: int, iters: int,
+                              n_pods: int, mode: str = "exact") -> int:
+    """DCN bytes one pod exchanges over a whole cross-pod S2 solve.
+
+    Priced as a ring all-reduce (reduce-scatter + all-gather: the familiar
+    ``2 * payload * (p-1)/p`` per participant) for both modes so the modes
+    differ only by payload — the apples-to-apples comparison kernel_bench
+    prints.  (The current JAX lowering expresses the int8 reduction as an
+    all-gather + local dequant-sum, because int8 summation is only defined
+    after dequantization; that trades the 2x ring factor for a (p-1)
+    gather factor — a wash at the 2-4 pod scale this repo exercises.)
+    ``iters`` is the max Lloyd iteration count across subsets: lanes that
+    converge early still ride the fused reduction until the last lane
+    stops, exactly like the while-loop they run in."""
+    if n_pods <= 1:
+        return 0
+    payload = ipkmeans_stats_payload_bytes(m, k, d, mode)
+    return iters * 2 * payload * (n_pods - 1) // n_pods

@@ -10,6 +10,22 @@ Three stages (Section 2):
 ``ipkmeans`` is the single-process reference; ``ipkmeans_distributed`` runs
 S2 under ``shard_map`` with subsets sharded over the mesh, which is the
 production path (each device == a stack of Hadoop reducers).
+
+Two scale-out layers sit on top of the single mesh:
+
+  * **pods** — ``ipkmeans_distributed(..., pod_axis="pods")`` on a
+    ``(pods x devices)`` mesh (``distributed/sharding.kmeans_pod_mesh``)
+    additionally shards each subset's POINTS over the slow cross-host axis.
+    Each Lloyd iteration then reduces per-cluster (sums, counts) across
+    pods — the one DCN cost of the whole solve — and ``cfg.reduce``
+    chooses how: ``"exact"`` (f32 psum) or ``"int8ef"`` (int8
+    error-feedback quantization via ``distributed/compress.ef_allreduce``,
+    the quantization residual carried across iterations so the Lloyd fixed
+    point stays unbiased while the wire payload drops ~4x).
+  * **fault tolerance** — ``ipkmeans_recoverable`` drives the S2 stacks
+    under the heartbeat Coordinator (``distributed/runtime``): a worker
+    that misses its heartbeat is evicted and ONLY its own reducer stack
+    re-solves from its last centroid snapshot.
 """
 from __future__ import annotations
 
@@ -24,6 +40,10 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import kdtree, merge, metrics
 from repro.core.kmeans import KMeansParams, KMeansResult, kmeans_batched
+from repro.kernels import engine as engines
+from repro.kernels import ref
+
+REDUCE_MODES = ("exact", "int8ef")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,9 +53,30 @@ class IPKMeansConfig:
     partition: str = "kd_axis"              # 'kd_axis' | 'kd_random' | 'random'
     merge: str = "min_asse"                 # 'min_asse' | 'hierarchical'
     pack: str = "scatter"                   # 'scatter' | 'sorted' | 'a2a'
+    reduce: str = "exact"                   # 'exact' | 'int8ef': cross-pod
+                                            # stats reduction (pod_axis only)
     leaf_capacity: int | None = None        # default: num_subsets (paper)
     label_axis: int = 0
     kmeans: KMeansParams = KMeansParams()
+
+    def __post_init__(self):
+        if self.reduce not in REDUCE_MODES:
+            raise ValueError(f"unknown reduce: {self.reduce!r} "
+                             f"(expected one of {REDUCE_MODES})")
+
+    def with_reduce(self, reduce: str) -> "IPKMeansConfig":
+        """Same config, different cross-pod reduction ('exact' | 'int8ef').
+
+        Only ``ipkmeans_distributed`` with a ``pod_axis`` performs a
+        cross-host reduction, so only there does this knob act: ``"int8ef"``
+        quantizes each pod's per-cluster (sums, counts) to int8 with
+        per-row scales before the DCN all-gather and carries the
+        quantization residual across Lloyd iterations
+        (``distributed/compress.ef_allreduce`` — error feedback keeps the
+        fixed point unbiased).  The single-process/single-mesh paths have
+        no DCN hop and ignore it.
+        """
+        return dataclasses.replace(self, reduce=reduce)
 
     def with_backend(self, backend: str) -> "IPKMeansConfig":
         """Same config, different Lloyd engine ('jnp' | 'pallas' | 'fused' |
@@ -210,12 +251,112 @@ def _ipkmeans_core(points: jnp.ndarray,
                           subset_iters=res.iters, kd_depth=part.depth)
 
 
+def _s2_cross_pod_solve(sub, msk, init_centroids, cfg: IPKMeansConfig,
+                        pod_axis: str):
+    """Per-program S2 body when each subset's points shard over a pod axis.
+
+    ``sub``/``msk`` are the program's local slices — ``(M_loc, S_loc, d)`` /
+    ``(M_loc, S_loc)`` with the subset axis over the in-pod devices and the
+    point axis over pods.  Every Lloyd iteration computes local per-cluster
+    stats with ``engine.step`` and reduces them over ``pod_axis``: f32 psum
+    (``reduce="exact"``) or int8 error-feedback all-gather
+    (``reduce="int8ef"``, per-row scales; the EFState residual rides the
+    while-loop carry so the quantization error feeds back into the next
+    iteration and the fixed point stays unbiased).  All pods receive the
+    SAME reduced stats, so per-subset convergence decisions — and therefore
+    the loop trip counts — stay consistent across pods without extra
+    synchronization.  Returns ``(centroids (M_loc,k,d) f32, sse (M_loc,),
+    asse (M_loc,), iters (M_loc,) i32, converged (M_loc,) bool)`` mirroring
+    the host solve's semantics (divide-or-keep, max-shift stop criterion,
+    final-centroid scoring pass).
+
+    int8ef convergence: a quantized reduction can never place a centroid
+    closer to the exact fixed point than the wire precision, so a ``tol``
+    tighter than the quantization noise floor would spin to ``max_iters``
+    chasing jitter.  Each iteration therefore widens the per-subset stop
+    threshold to ``max(tol, noise floor)``, the floor derived from the
+    dequantization error bound ``ef_allreduce`` reports: once the observed
+    shift is inside the floor, further movement is indistinguishable from
+    noise and the lane stops (converged=True — it IS at the fixed point to
+    wire precision).
+    """
+    from repro.distributed import compress
+    params = cfg.kmeans
+    engine = engines.get_engine(params.backend)
+    m_loc = sub.shape[0]
+    k, d = init_centroids.shape
+    w = msk.astype(sub.dtype)
+    step_m = jax.vmap(engine.step)
+
+    c0 = jnp.broadcast_to(init_centroids.astype(jnp.float32), (m_loc, k, d))
+    stats0 = {"sums": jnp.zeros((m_loc, k, d), jnp.float32),
+              "counts": jnp.zeros((m_loc, k), jnp.float32)}
+    # per-row scales: one per (subset, cluster) sums row, one per subset
+    # counts vector — empty clusters' all-zero rows round-trip to exact
+    # zeros instead of inheriting a big cluster's scale
+    axes_spec = {"sums": -1, "counts": -1}
+    ef0 = compress.init_ef(stats0)
+    tol0 = jnp.full((m_loc,), params.tol, jnp.float32)
+
+    def cond(carry):
+        c, iters, shift, eff_tol, ef = carry
+        return jnp.any(jnp.logical_and(iters < params.max_iters,
+                                       shift > eff_tol))
+
+    def body(carry):
+        c, iters, shift, eff_tol, ef = carry
+        active = jnp.logical_and(iters < params.max_iters,
+                                 shift > eff_tol)
+        sums, counts, _ = step_m(sub, c, w)
+        stats = {"sums": sums, "counts": counts}
+        if cfg.reduce == "int8ef":
+            red, ef, err = compress.ef_allreduce(
+                stats, ef, pod_axis, axes=axes_spec,
+                return_error_bound=True)
+        else:
+            red = jax.lax.psum(stats, pod_axis)
+            err = None
+        cnt = jnp.maximum(red["counts"], 0.0)
+        upd = jax.vmap(ref.divide_or_keep)(red["sums"], cnt, c)
+        if err is not None:
+            # per-cluster centroid noise from the quantized (sums, counts):
+            # |S~/N~ - S/N| <= (err_S + |c|*err_N) / (N - err_N) per
+            # coordinate.  Empty clusters are excluded — divide_or_keep
+            # pins them, so they contribute no jitter (their all-zero sums
+            # rows quantize exactly anyway).
+            e_s = err["sums"][..., 0]                         # (m, k)
+            e_n = err["counts"]                               # (m, 1)
+            cmax = jnp.max(jnp.abs(upd), axis=-1)             # (m, k)
+            noise = jnp.where(
+                cnt > 0.0,
+                (e_s + cmax * e_n) / jnp.maximum(cnt - e_n, 1.0), 0.0)
+            floor = jnp.sqrt(float(d)) * jnp.max(noise, axis=-1)
+            eff_tol = jnp.where(active,
+                                jnp.maximum(tol0, floor), eff_tol)
+        new_c = jnp.where(active[:, None, None], upd, c)
+        new_shift = jnp.where(
+            active, jax.vmap(metrics.centroid_shift)(new_c, c), shift)
+        return (new_c, iters + active.astype(jnp.int32), new_shift,
+                eff_tol, ef)
+
+    final_c, iters, shift, eff_tol, _ = jax.lax.while_loop(
+        cond, body,
+        (c0, jnp.zeros((m_loc,), jnp.int32),
+         jnp.full((m_loc,), jnp.inf, jnp.float32), tol0, ef0))
+    # final scoring pass at the converged centroids, like engine.solve
+    sse = jax.lax.psum(jax.vmap(engine.sse)(sub, final_c, w), pod_axis)
+    cnt = jax.lax.psum(jnp.sum(w.astype(jnp.float32), axis=1), pod_axis)
+    asse = jnp.where(cnt > 0.0, sse / jnp.maximum(cnt, 1.0), jnp.inf)
+    return final_c, sse, asse, iters, shift <= eff_tol
+
+
 def ipkmeans_distributed(points: jnp.ndarray,
                          init_centroids: jnp.ndarray | None,
                          key: jax.Array,
                          cfg: IPKMeansConfig,
                          mesh,
-                         axis_names: tuple[str, ...] = ("data",)) -> IPKMeansResult:
+                         axis_names: tuple[str, ...] = ("data",),
+                         pod_axis: str | None = None) -> IPKMeansResult:
     """Production IPKMeans on a device mesh.
 
     S1 runs jit-sharded (sorts partition fine under SPMD); S2 runs under
@@ -235,6 +376,15 @@ def ipkmeans_distributed(points: jnp.ndarray,
     partial potentials psum'd), and the gathered candidates recluster on
     host — the same rounds the single-host path runs, so on a 1-device
     mesh the seeds (and hence the whole solve) match ``ipkmeans`` exactly.
+
+    With ``pod_axis`` (a mesh axis NOT in ``axis_names``, e.g. from
+    ``distributed/sharding.kmeans_pod_mesh``), each subset's points
+    additionally shard over that slow cross-host axis and S2 switches to
+    the cross-pod solve: one (sums, counts) reduction over ``pod_axis``
+    per Lloyd iteration — the job's only DCN traffic — compressed per
+    ``cfg.reduce`` (see :meth:`IPKMeansConfig.with_reduce`).  The subset
+    capacity is padded up to a multiple of the pod count (masked rows,
+    zero effect on the stats).
     """
     points, init_centroids, key, cfg = _resolve_init_stage(
         points, init_centroids, key, cfg, mesh=mesh, axis_names=axis_names)
@@ -244,21 +394,150 @@ def ipkmeans_distributed(points: jnp.ndarray,
     if cfg.num_subsets % n_dev:
         raise ValueError(
             f"num_subsets={cfg.num_subsets} not divisible by mesh size {n_dev}")
+    if pod_axis is not None:
+        if pod_axis in axis_names or pod_axis not in mesh.axis_names:
+            raise ValueError(
+                f"pod_axis={pod_axis!r} must be a mesh axis outside "
+                f"axis_names={axis_names} (mesh has {mesh.axis_names})")
+        if cfg.kmeans.reseed_empty:
+            raise ValueError(
+                "reseed_empty is not supported on the cross-pod S2 path: "
+                "farthest-point selection needs a global view of the "
+                "subset, but points are sharded over the pod axis")
+    elif cfg.reduce != "exact":
+        raise ValueError(
+            f'reduce={cfg.reduce!r} needs pod_axis: compressed reduction '
+            f'acts on the cross-pod stats all-reduce, and without a pod '
+            f'axis S2 has no reduction at all (the paper\'s claim)')
 
     part, subsets, masks = _partition_and_pack(points, key, cfg,
                                                mesh=mesh,
                                                axis_names=axis_names)
 
-    def s2_body(sub, msk):                       # per-device stack of reducers
-        return kmeans_batched(sub, msk, init_centroids, cfg.kmeans)
+    if pod_axis is None:
+        def s2_body(sub, msk):                   # per-device stack of reducers
+            return kmeans_batched(sub, msk, init_centroids, cfg.kmeans)
 
-    spec = P(axis_names)
-    s2 = shard_map(
-        s2_body, mesh=mesh, in_specs=(spec, spec),
-        out_specs=KMeansResult(spec, spec, spec, spec, spec),
-        check_vma=False)
-    res = s2(subsets, masks)
+        spec = P(axis_names)
+        s2 = shard_map(
+            s2_body, mesh=mesh, in_specs=(spec, spec),
+            out_specs=KMeansResult(spec, spec, spec, spec, spec),
+            check_vma=False)
+        res = s2(subsets, masks)
+    else:
+        n_pods = mesh.shape[pod_axis]
+        pad = -subsets.shape[1] % n_pods
+        if pad:
+            subsets = jnp.pad(subsets, ((0, 0), (0, pad), (0, 0)))
+            masks = jnp.pad(masks, ((0, 0), (0, pad)))
+
+        def s2_pod_body(sub, msk):
+            c, sse, asse, iters, conv = _s2_cross_pod_solve(
+                sub, msk, init_centroids, cfg, pod_axis)
+            return KMeansResult(centroids=c.astype(init_centroids.dtype),
+                                sse=sse, asse=asse, iters=iters,
+                                converged=conv)
+
+        sub_spec = P(axis_names, pod_axis, None)
+        msk_spec = P(axis_names, pod_axis)
+        out = P(axis_names)      # replicated over pods: same reduced stats
+        s2 = shard_map(
+            s2_pod_body, mesh=mesh, in_specs=(sub_spec, msk_spec),
+            out_specs=KMeansResult(out, out, out, out, out),
+            check_vma=False)
+        res = s2(subsets, masks)
     final, total_sse = _merge_stage(points, res, cfg)
     return IPKMeansResult(centroids=final, sse=total_sse,
                           intermediate=res.centroids, asses=res.asse,
                           subset_iters=res.iters, kd_depth=part.depth)
+
+
+def ipkmeans_recoverable(points: jnp.ndarray,
+                         init_centroids: jnp.ndarray | None,
+                         key: jax.Array,
+                         cfg: IPKMeansConfig,
+                         *,
+                         num_workers: int,
+                         iters_per_round: int = 4,
+                         snapshot_every: int = 2,
+                         max_rounds: int = 200,
+                         fail_at: dict | None = None,
+                         rejoin_at: dict | None = None,
+                         ft=None):
+    """IPKMeans with S2 driven under the heartbeat-recovery protocol.
+
+    The whole solve runs under ``distributed/runtime``'s Coordinator:
+    ``num_workers`` workers own disjoint reducer stacks (contiguous slices
+    of the M subsets — ``num_subsets`` must divide evenly), each round
+    advances every unconverged subset by ``iters_per_round`` Lloyd
+    iterations (Lloyd is Markov in the centroids, so the chunked advance
+    replays exactly the unchunked iteration sequence), and per-stack
+    centroid snapshots commit every ``snapshot_every`` rounds.  A worker
+    that misses its heartbeat (``fail_at`` injects crashes as
+    ``{round: worker_id}``) is evicted once ``ft.heartbeat_timeout``
+    elapses and ONLY its own stack re-solves, from its last snapshot —
+    survivors never recompute (assertable from the returned work log).
+
+    Returns ``(IPKMeansResult, event log, work)`` — the result matches
+    :func:`ipkmeans` on the same inputs; ``log``/``work`` come from
+    :func:`repro.distributed.runtime.solve_stacks_with_recovery`.
+    """
+    from repro.distributed import runtime as rt
+    if ft is None:
+        ft = rt.FTConfig(heartbeat_timeout=2.5, min_workers=1)
+    if cfg.num_subsets % num_workers:
+        raise ValueError(f"num_subsets={cfg.num_subsets} not divisible by "
+                         f"num_workers={num_workers}")
+    points, init_centroids, key, cfg = _resolve_init_stage(
+        points, init_centroids, key, cfg)
+    part, subsets, masks = _partition_and_pack(points, key, cfg)
+    params = cfg.kmeans
+    engine = engines.get_engine(params.backend)
+    per = cfg.num_subsets // num_workers
+    k = init_centroids.shape[0]
+
+    @jax.jit
+    def _advance(sub, msk, cents, iters, conv):
+        """Advance one stack by <= iters_per_round iterations per lane."""
+        def one(p, m, c):
+            return engine.solve(p, c, m.astype(p.dtype),
+                                max_iters=iters_per_round, tol=params.tol,
+                                reseed_empty=params.reseed_empty,
+                                prune=params.prune)
+        new_c, _, it, cv = jax.vmap(one)(sub, msk, cents)
+        # freeze already-converged lanes so iteration counts stay faithful
+        keep = conv[:, None, None]
+        return (jnp.where(keep, cents, new_c.astype(jnp.float32)),
+                iters + jnp.where(conv, 0, it),
+                jnp.logical_or(conv, cv))
+
+    def advance(stack_id, state):
+        cents, iters, conv = state
+        sl = slice(stack_id * per, (stack_id + 1) * per)
+        cents, iters, conv = _advance(subsets[sl], masks[sl],
+                                      cents, iters, conv)
+        return (cents, iters, conv), bool(jnp.all(conv))
+
+    c0 = jnp.broadcast_to(init_centroids.astype(jnp.float32),
+                          (per, k, init_centroids.shape[1]))
+    init_states = [(c0, jnp.zeros((per,), jnp.int32),
+                    jnp.zeros((per,), bool)) for _ in range(num_workers)]
+    states, log, work = rt.solve_stacks_with_recovery(
+        advance, init_states, num_workers=num_workers,
+        max_rounds=max_rounds, snapshot_every=snapshot_every,
+        fail_at=fail_at, rejoin_at=rejoin_at, cfg=ft)
+
+    cents = jnp.concatenate([s[0] for s in states])
+    iters = jnp.concatenate([s[1] for s in states])
+    conv = jnp.concatenate([s[2] for s in states])
+    w = masks.astype(subsets.dtype)
+    sse_m = jax.vmap(engine.sse)(subsets, cents, w)
+    cnt = jnp.sum(masks.astype(jnp.float32), axis=1)
+    asse = jnp.where(cnt > 0.0, sse_m / jnp.maximum(cnt, 1.0), jnp.inf)
+    res = KMeansResult(centroids=cents.astype(init_centroids.dtype),
+                       sse=sse_m, asse=asse, iters=iters, converged=conv)
+    final, total_sse = _merge_stage(points, res, cfg)
+    return (IPKMeansResult(centroids=final, sse=total_sse,
+                           intermediate=res.centroids, asses=res.asse,
+                           subset_iters=res.iters, kd_depth=part.depth),
+            log, work)

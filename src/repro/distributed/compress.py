@@ -1,13 +1,24 @@
-"""Gradient compression for cross-pod (DCN) reduction.
+"""int8 error-feedback compression for cross-pod (DCN) reduction.
 
-int8 error-feedback quantization: each worker quantizes its gradient shard to
-int8 with a per-tensor scale, keeps the quantization residual locally, and
-adds it back next step — unbiased over time (Seide et al. / 1-bit Adam
-lineage).  For the multi-pod mesh this cuts the pod-axis all-reduce payload
-4x (bf16) / 4x (f32 -> int8) at <1% effective noise (test-verified on a
-convergence run).
+int8 error-feedback quantization: each worker quantizes its local
+contribution to int8 with a symmetric scale, keeps the quantization residual
+locally, and adds it back next step — unbiased over time (Seide et al. /
+1-bit Adam lineage).  Two tree families ride the same machinery:
 
-Also provides plain bf16 reduction casting for the cheap 2x.
+  * gradient trees (the original use): per-tensor scales, one quantize per
+    optimizer step (``compress_grads``/``decompress_grads``);
+  * k-means reduction stats — ``{"sums": (M, k, d), "counts": (M, k)}``
+    trees — where the residual is carried ACROSS Lloyd iterations inside the
+    solver loop and the reduction itself happens here (``ef_allreduce``):
+    quantize + all_gather the int8 payload over the pod axis + dequantize-sum
+    locally, so only int8 values (plus tiny f32 scales) cross the slow link.
+    Per-row scales (``axis=-1``) keep empty/near-empty clusters' rows from
+    inheriting a big cluster's scale.
+
+For the multi-pod mesh this cuts the pod-axis all-reduce payload ~4x
+(f32 -> int8 + scales) at <1% effective noise (test-verified on both a
+convergence run and the Lloyd fixed point).  Also provides plain bf16
+reduction casting for the cheap 2x.
 """
 from __future__ import annotations
 
@@ -18,18 +29,33 @@ import jax.numpy as jnp
 
 
 class EFState(NamedTuple):
-    residual: Any        # pytree like grads, f32
+    residual: Any        # pytree like the compressed tree, f32
 
 
-def init_ef(grads_like):
+def init_ef(tree_like):
     return EFState(residual=jax.tree.map(
-        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+        lambda g: jnp.zeros(g.shape, jnp.float32), tree_like))
 
 
-def quantize_int8(x):
-    """x f32 -> (int8 values, scale).  Symmetric per-tensor scaling."""
-    amax = jnp.max(jnp.abs(x))
-    scale = jnp.maximum(amax, 1e-12) / 127.0
+def quantize_int8(x, axis=None):
+    """x -> (int8 values, f32 scale).  Symmetric scaling.
+
+    ``axis=None`` is one scale per tensor (the gradient path);
+    ``axis=<int or tuple>`` computes per-slice scales with ``keepdims`` so
+    dequantization broadcasts (the stats path uses ``axis=-1`` for per-row
+    scales: one per (subset, cluster) sums row / one per subset counts
+    vector).
+
+    Degeneracy guard: an all-zero slice used to produce a (near-)zero scale
+    — exactly zero once a half-precision input underflowed the old 1e-12
+    clamp — and ``0/0 -> NaN`` on the quantize (and garbage on dequantize).
+    Zero-amax slices now take scale 1.0, so they round-trip to EXACT zeros.
+    Empty clusters hit this path every iteration (their sums rows are
+    all-zero), so it is load-bearing, not just defensive.
+    """
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.where(amax > 0.0, amax, 127.0) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
@@ -38,24 +64,80 @@ def dequantize_int8(q, scale):
     return q.astype(jnp.float32) * scale
 
 
-def compress_grads(grads, state: EFState):
-    """Returns (quantized payload pytree of (int8, scale), new EF state).
+def _is_payload(x) -> bool:
+    return isinstance(x, tuple)
+
+
+def compress_tree(tree, state: EFState, axes=None):
+    """EF-quantize a pytree -> ((int8, scale) payload tree, new EF state).
 
     The payload is what crosses the slow link; the residual (what int8
-    couldn't represent) stays local and is re-injected next step.
+    couldn't represent) stays local and is re-injected next call.  ``axes``
+    is an optional pytree matching ``tree`` whose leaves are the ``axis``
+    argument each leaf's :func:`quantize_int8` uses (``None`` = per-tensor
+    everywhere — the gradient default).
     """
-    payload = jax.tree.map(lambda g, r: quantize_int8(g.astype(jnp.float32) + r),
-                           grads, state.residual)
+    if axes is None:
+        payload = jax.tree.map(
+            lambda g, r: quantize_int8(g.astype(jnp.float32) + r),
+            tree, state.residual)
+    else:
+        payload = jax.tree.map(
+            lambda g, r, a: quantize_int8(g.astype(jnp.float32) + r, axis=a),
+            tree, state.residual, axes)
     residual = jax.tree.map(
         lambda g, r, p: (g.astype(jnp.float32) + r) - dequantize_int8(*p),
-        grads, state.residual, payload,
-        is_leaf=lambda x: isinstance(x, tuple))
+        tree, state.residual, payload, is_leaf=_is_payload)
     return payload, EFState(residual=residual)
+
+
+def compress_grads(grads, state: EFState):
+    """The original gradient entry point: per-tensor scales."""
+    return compress_tree(grads, state)
 
 
 def decompress_grads(payload, dtype=jnp.float32):
     return jax.tree.map(lambda p: dequantize_int8(*p).astype(dtype), payload,
-                        is_leaf=lambda x: isinstance(x, tuple))
+                        is_leaf=_is_payload)
+
+
+def ef_allreduce(tree, state: EFState, axis_name: str, axes=None,
+                 return_error_bound: bool = False):
+    """int8 error-feedback all-reduce of a stats pytree over a mesh axis.
+
+    Call inside ``shard_map`` (or ``vmap(..., axis_name=...)``): each program
+    quantizes its local ``tree`` (+ its carried residual), the int8 payload
+    and its scales are all-gathered over ``axis_name`` — int8 is what crosses
+    the wire — and every program dequantize-sums the gathered contributions,
+    so all programs along the axis hold the SAME reduced f32 tree (which is
+    what lets the Lloyd loop's convergence decisions stay consistent across
+    pods).  Returns ``(reduced f32 tree, new EFState)``; thread the state
+    through the loop carry so the residual feedback keeps the fixed point
+    unbiased across iterations.
+
+    ``return_error_bound=True`` appends a third output: a tree of the
+    worst-case elementwise dequantization error this call could have made
+    (each pod rounds by at most ``scale / 2``, so the bound is the gathered
+    scales summed and halved — same shape as each leaf's scale).  Consumers
+    use it as a noise floor: a quantized reduction can never settle closer
+    to the exact fixed point than this, so convergence thresholds tighter
+    than the bound should be widened to it (the cross-pod Lloyd loop does).
+    """
+    payload, state = compress_tree(tree, state, axes=axes)
+
+    def reduce_leaf(p):
+        q, scale = p
+        qg = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+        sg = jax.lax.all_gather(scale, axis_name)      # tiny f32 sidecar
+        return (jnp.sum(qg.astype(jnp.float32) * sg, axis=0),
+                0.5 * jnp.sum(sg, axis=0))
+
+    both = jax.tree.map(reduce_leaf, payload, is_leaf=_is_payload)
+    reduced = jax.tree.map(lambda b: b[0], both, is_leaf=_is_payload)
+    if not return_error_bound:
+        return reduced, state
+    err = jax.tree.map(lambda b: b[1], both, is_leaf=_is_payload)
+    return reduced, state, err
 
 
 def payload_bytes(tree) -> int:

@@ -21,6 +21,13 @@ the container has one process.  The protocol:
 
 Checkpoint/restart is the repro.checkpoint commit protocol; recovery =
 restore_latest onto the new mesh (elastic resharding is a device_put).
+
+Two drivers exercise the protocol: :func:`run_with_recovery` (training: a
+failure drops the whole fleet to the checkpoint step) and
+:func:`solve_stacks_with_recovery` (IPKMeans S2: reducer stacks are
+independent, so a failure re-solves ONLY the dead worker's stack from its
+last centroid snapshot while survivors keep their live state —
+``RecoveryPlan.stack_owners`` carries the deterministic reassignment).
 """
 from __future__ import annotations
 
@@ -113,19 +120,49 @@ class Coordinator:
 
 @dataclasses.dataclass
 class RecoveryPlan:
-    """What a membership change means for the training job."""
+    """What a membership change means for the job.
+
+    For training jobs the plan is global (everyone drops to the checkpoint
+    step).  For IPKMeans S2 the reducer stacks are INDEPENDENT, so the plan
+    additionally carries ``stack_owners``: the survivors keep their live
+    state untouched and only the dead workers' stacks — reassigned
+    round-robin over the survivors — restart from their last snapshot.
+    """
     generation: int
     workers: list[int]
     restart_step: int
     data_shards: int
+    stack_owners: Optional[dict] = None     # worker -> list of stack ids
 
     @staticmethod
-    def build(coord: Coordinator, ckpt_dir, ckpt_step: Optional[int]):
+    def build(coord: Coordinator, ckpt_dir, ckpt_step: Optional[int],
+              stacks: Optional[dict] = None, rebalance: bool = False):
+        """``stacks``: the pre-failure worker -> stack-ids map; orphaned
+        stacks (owners no longer alive) are reassigned round-robin over the
+        survivors, deterministically (sorted), so every worker computes the
+        same plan without communication.  ``rebalance=True`` instead deals
+        ALL stacks round-robin over the alive workers — the scale-UP plan:
+        a joiner would otherwise never receive work, since live owners keep
+        their stacks under the orphan-only policy."""
         workers = coord.alive_workers()
+        owners = None
+        if stacks is not None:
+            if rebalance:
+                owners = {w: [] for w in workers}
+                for i, s in enumerate(
+                        sorted(s for ss in stacks.values() for s in ss)):
+                    owners[workers[i % len(workers)]].append(s)
+            else:
+                owners = {w: list(stacks.get(w, ())) for w in workers}
+                orphans = sorted(s for w, ss in stacks.items()
+                                 if w not in workers for s in ss)
+                for i, s in enumerate(orphans):
+                    owners[workers[i % len(workers)]].append(s)
         return RecoveryPlan(generation=coord.generation,
                             workers=workers,
                             restart_step=ckpt_step or 0,
-                            data_shards=len(workers))
+                            data_shards=len(workers),
+                            stack_owners=owners)
 
 
 def run_with_recovery(train_one_step, *, num_workers: int, steps: int,
@@ -161,3 +198,100 @@ def run_with_recovery(train_one_step, *, num_workers: int, steps: int,
             log.append(("save", step + 1))
         step += 1
     return log
+
+
+def solve_stacks_with_recovery(advance, init_states, *, num_workers: int,
+                               max_rounds: int, snapshot_every: int,
+                               fail_at: dict | None = None,
+                               rejoin_at: dict | None = None,
+                               cfg: FTConfig = FTConfig(),
+                               round_time: float = 1.0):
+    """IPKMeans S2 under the heartbeat protocol — per-STACK recovery.
+
+    The k-means specialization of :func:`run_with_recovery`: the unit of
+    work is a reducer stack (a worker's slice of the M independent S2
+    solves), so a failure never restarts the job — survivors keep their
+    live state and ONLY the dead worker's stack re-solves from its last
+    snapshot (``RecoveryPlan.stack_owners`` reassigns it round-robin).
+
+    ``advance(stack_id, state) -> (state, converged)`` advances one stack's
+    Lloyd solve by one round's worth of iterations (Lloyd is Markov in the
+    centroids, so chunked advance replays the exact unchunked iteration
+    sequence).  ``init_states`` seeds one opaque state per stack; stacks
+    start owned round-robin (stack ``s`` -> worker ``s % num_workers``).
+
+    Protocol per round: crash injections from ``fail_at`` ({round: worker})
+    silence that worker — it stops heartbeating AND its live (unsnapshotted)
+    state is lost, which is what makes the snapshot the recovery point; the
+    coordinator's ``sweep()`` evicts it only once ``heartbeat_timeout``
+    elapses (rounds advance a deterministic clock by ``round_time``), at
+    which point the plan restores the orphaned stacks from their snapshots
+    — or from ``init_states`` when no snapshot was ever committed (the
+    zero-surviving-checkpoints case).  ``rejoin_at`` ({round: worker}) lets
+    an evicted worker re-join; it picks up stacks at the next plan.
+
+    Returns ``(final states, event log, work)`` where ``work`` lists every
+    ``(round, worker, stack)`` advance executed — the recomputation
+    accounting recovery tests assert on.
+    """
+    clock = {"t": 0.0}
+    coord = Coordinator(num_workers, cfg, clock=lambda: clock["t"])
+    owners = {w: [s for s in range(len(init_states))
+                  if s % num_workers == w] for w in range(num_workers)}
+    live = {s: st for s, st in enumerate(init_states)}
+    snapshot = {}                       # stack id -> last committed state
+    snapshot_round = {}                 # stack id -> round it was taken
+    done = {s: False for s in live}
+    crashed: set[int] = set()
+    log, work = [], []
+
+    for rnd in range(max_rounds):
+        if all(done.values()):
+            break
+        clock["t"] += round_time
+        victim = (fail_at or {}).get(rnd)
+        if victim is not None:
+            crashed.add(victim)
+            log.append(("crash", rnd, victim))
+        joiner = (rejoin_at or {}).get(rnd)
+        if joiner is not None and joiner not in coord.alive_workers():
+            crashed.discard(joiner)
+            coord.join(joiner)
+            # scale-up plan: deal all stacks over the grown fleet (state
+            # transfer is free in-process; on hosts it rides the snapshot)
+            plan = RecoveryPlan.build(coord, None, None, stacks=owners,
+                                      rebalance=True)
+            owners = plan.stack_owners
+            log.append(("rejoin", rnd, joiner, plan.generation))
+        for w in coord.alive_workers():
+            if w in crashed:
+                continue                # silent: no work, no heartbeat
+            for s in owners.get(w, ()):
+                if done[s]:
+                    continue
+                live[s], done[s] = advance(s, live[s])
+                work.append((rnd, w, s))
+            coord.heartbeat(w, rnd, round_time)
+        if (rnd + 1) % snapshot_every == 0:
+            for w in coord.alive_workers():
+                if w in crashed:
+                    continue            # a dead worker commits nothing
+                for s in owners.get(w, ()):
+                    snapshot[s] = (live[s], done[s])
+                    snapshot_round[s] = rnd
+            log.append(("snapshot", rnd))
+        swept = coord.sweep()
+        if swept["evicted"]:
+            orphans = [s for w in swept["evicted"] for s in owners.get(w, ())]
+            plan = RecoveryPlan.build(coord, None, None, stacks=owners)
+            for s in orphans:
+                # the dead worker's live progress is gone with it: the
+                # stack restarts from its last snapshot (or from init when
+                # it never reached a snapshot boundary — the
+                # zero-surviving-checkpoints case)
+                live[s], done[s] = snapshot.get(s, (init_states[s], False))
+            owners = plan.stack_owners
+            log.append(("recover", rnd, tuple(swept["evicted"]),
+                        {s: snapshot_round.get(s, -1) for s in orphans},
+                        plan.generation))
+    return [live[s] for s in sorted(live)], log, work

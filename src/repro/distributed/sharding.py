@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import make_mesh
 from repro.configs.base import ModelConfig
 from repro.models.common import Box
 
@@ -204,3 +205,44 @@ def cache_shardings(cache_abstract, cfg: ModelConfig, mesh, batch: int):
 def replicated(tree, mesh):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree,
                         is_leaf=lambda x: isinstance(x, Box))
+
+
+# ------------------------------------------------------------------
+# k-means pod topology: the IPKMeans S2 mesh is (pods x devices) — the
+# subset ("reducer") axis shards over the fast in-pod axis, while each
+# subset's POINTS shard over the pod (DCN) axis, so the only cross-host
+# traffic is the per-iteration (sums, counts) reduction that
+# ``distributed/compress.ef_allreduce`` compresses.
+
+KMEANS_POD_AXIS = "pods"      # the slow (DCN) axis of a k-means pod mesh
+KMEANS_DATA_AXIS = "data"     # the fast (ICI) axis: shards the subset dim
+
+
+def kmeans_pod_mesh(pods: int, devices_per_pod: int):
+    """A ``(pods, devices_per_pod)`` mesh with axes ``("pods", "data")``.
+
+    ``pods`` models the slow cross-host/DCN dimension; ``data`` the fast
+    in-pod ICI dimension.  Needs ``pods * devices_per_pod`` visible devices
+    (tests virtualize with ``--xla_force_host_platform_device_count``).
+    """
+    if pods < 1 or devices_per_pod < 1:
+        raise ValueError(f"pods={pods} x devices_per_pod={devices_per_pod} "
+                         f"must both be >= 1")
+    return make_mesh((pods, devices_per_pod),
+                     (KMEANS_POD_AXIS, KMEANS_DATA_AXIS))
+
+
+def subset_specs(subset_axes: tuple[str, ...], pod_axis: str | None):
+    """PartitionSpecs for IPKMeans S2 operands on a pod mesh.
+
+    Returns ``(subsets_spec, masks_spec, out_spec)`` for the ``(M, S, d)``
+    packed subsets, their ``(M, S)`` masks, and the per-subset outputs: the
+    subset axis shards over ``subset_axes``, the in-subset point axis over
+    ``pod_axis`` (replicated when ``None`` — the single-mesh layout), and
+    every per-subset OUTPUT is replicated along ``pod_axis`` because the
+    cross-pod reduction hands all pods the same reduced stats.
+    """
+    point_part = pod_axis if pod_axis else None
+    return (P(subset_axes, point_part, None),
+            P(subset_axes, point_part),
+            P(subset_axes))

@@ -100,7 +100,8 @@ def _record(name, mesh_tag, lowered, compiled, extra=None):
 
 def lower_all(multi_pod: bool, backend: str = "jnp",
               reseed_empty: bool = False, prune: str = "none",
-              init_round: bool = False):
+              init_round: bool = False, pods: int = 0,
+              reduce: str = "exact"):
     """Lower the dry-run cells.  ``backend`` names the Lloyd engine for
     pkmeans-iter and s2s3 (any name in the ``kernels.engine`` registry —
     'jnp' | 'pallas' | 'fused' | 'resident' | 'batched' | 'tuned');
@@ -124,6 +125,13 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
     replicated and only the scalar potential psum crossing shards; total
     seeding cost = (rounds+1) x this cell plus the O(ell log n) host
     recluster."""
+    # ``pods >= 2`` additionally lowers the CROSS-POD S2 cell: the same M
+    # reducers on a (pods x devices) k-means pod mesh with each subset's
+    # points sharded over the slow DCN axis, so every Lloyd iteration
+    # carries exactly ONE (sums, counts) reduction over the pod axis —
+    # 'exact' f32 psum or 'int8ef' compressed all-gather per ``reduce`` —
+    # and the record reports both the HLO's in-loop collective count (now
+    # intentionally nonzero) and the modeled per-pod DCN bytes.
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "x".join(map(str, mesh.devices.shape))
     file_tag = mesh_tag if backend == "jnp" else f"{mesh_tag}__{backend}"
@@ -231,6 +239,52 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
                    "note": "M=4096 reducers to convergence + min-ASSE merge"})
     results.append(rec)
 
+    # ---- cross-pod S2: points sharded over the DCN axis ----
+    if pods >= 2:
+        from repro.core.io_model import dcn_reduce_bytes_ipkmeans
+        from repro.core.ipkmeans import _s2_cross_pod_solve
+        from repro.distributed.sharding import (KMEANS_DATA_AXIS,
+                                                KMEANS_POD_AXIS,
+                                                kmeans_pod_mesh, subset_specs)
+        if n_dev % pods:
+            raise ValueError(f"pods={pods} must divide {n_dev} devices")
+        pmesh = kmeans_pod_mesh(pods, n_dev // pods)
+        pmesh_tag = f"{pods}x{n_dev // pods}"
+        cap = 2 ** depth + (-(2 ** depth) % pods)
+        xcfg = IPKMeansConfig(num_clusters=K, num_subsets=M, reduce=reduce,
+                              kmeans=params)
+        sub_s, msk_s, out_s = subset_specs((KMEANS_DATA_AXIS,),
+                                           KMEANS_POD_AXIS)
+
+        def s2_xpod(subsets, masks, init_centroids):
+            def body(sub, msk):
+                c, _, asse, _, _ = _s2_cross_pod_solve(
+                    sub, msk, init_centroids, xcfg, KMEANS_POD_AXIS)
+                return c, asse
+            c, asse = shard_map(
+                body, mesh=pmesh, in_specs=(sub_s, msk_s),
+                out_specs=(out_s, out_s), check_vma=False)(subsets, masks)
+            return min_asse_merge(c, asse)
+
+        xsub = jax.ShapeDtypeStruct((M, cap, D), jnp.float32)
+        xmsk = jax.ShapeDtypeStruct((M, cap), bool)
+        t0 = time.time()
+        low = jax.jit(s2_xpod, in_shardings=(
+            NamedSharding(pmesh, sub_s), NamedSharding(pmesh, msk_s),
+            NamedSharding(pmesh, P()))).lower(xsub, xmsk, init_c)
+        comp = low.compile()
+        loop_coll = count_collectives_in_while_bodies(comp.as_text())
+        rec = _record(f"ipkmeans-s2-xpod{pods}-{reduce}", pmesh_tag, low, comp,
+                      {"compile_s": round(time.time() - t0, 1),
+                       "pods": pods, "reduce": reduce,
+                       "collectives_in_solver_loop": loop_coll,
+                       "dcn_bytes_per_pod_modeled": dcn_reduce_bytes_ipkmeans(
+                           M, K, D, MAX_ITERS, pods, reduce),
+                       "note": f"cross-pod S2 ({reduce}): the in-loop "
+                               f"collective IS the per-iteration DCN stats "
+                               f"reduction (expected nonzero)"})
+        results.append(rec)
+
     # ---- k-means|| init round: per-shard fused sweep + scalar psi psum ----
     if init_round:
         from repro.core.init import _make_sweep
@@ -301,10 +355,18 @@ def main():
                          "distance+min+sample sweep per shard plus the "
                          "scalar potential psum (total seeding = "
                          "(rounds+1) x this cell)")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="also lower the CROSS-POD S2 cell on a "
+                         "(pods x devices) k-means pod mesh: each subset's "
+                         "points shard over the slow DCN axis and every "
+                         "Lloyd iteration reduces (sums, counts) across it")
+    ap.add_argument("--reduce", default="exact", choices=["exact", "int8ef"],
+                    help="cross-pod stats reduction for the --pods cell: "
+                         "f32 psum or int8 error-feedback compression")
     args = ap.parse_args()
     lower_all(args.multi_pod, backend=args.backend,
               reseed_empty=args.reseed_empty, prune=args.prune,
-              init_round=args.init)
+              init_round=args.init, pods=args.pods, reduce=args.reduce)
 
 
 if __name__ == "__main__":

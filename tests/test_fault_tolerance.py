@@ -109,3 +109,133 @@ def test_data_pipeline_elastic_reshard():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     flat = {tuple(r) for p in parts for r in np.asarray(p).tolist()}
     assert len(flat) == sum(p.shape[0] for p in parts)   # disjoint rows
+
+
+# ---------------- per-stack recovery (IPKMeans S2) ----------------
+
+def _counter_advance(need):
+    """A deterministic stand-in for a Lloyd round: state is an int counter,
+    stack s converges once it reaches need[s]."""
+    def advance(s, v):
+        return v + 1, v + 1 >= need[s]
+    return advance
+
+
+def test_stack_recovery_restores_only_orphan_from_snapshot():
+    from repro.distributed.runtime import solve_stacks_with_recovery
+    need = [6, 6, 6, 6]
+    # 4 stacks / 2 workers; worker 1 crashes at round 3 (after the round-2
+    # snapshot), eviction lands once heartbeat_timeout=1.5 elapses
+    states, log, work = solve_stacks_with_recovery(
+        _counter_advance(need), [0, 0, 0, 0], num_workers=2, max_rounds=30,
+        snapshot_every=2, fail_at={3: 1},
+        cfg=FTConfig(heartbeat_timeout=1.5, min_workers=1))
+    assert states == need                        # every stack completed
+    events = [e[0] for e in log]
+    assert "crash" in events and "recover" in events
+    rec = [e for e in log if e[0] == "recover"][0]
+    assert rec[2] == (1,)                        # worker 1 evicted
+    assert rec[3] == {1: 1, 3: 1}                # orphans restored from the
+    #                                              round-1 snapshot
+    # survivors' stacks (0, 2) advanced exactly need times — no recompute;
+    # the orphans (1, 3) redo the rounds lost between snapshot and eviction
+    per_stack = {s: sum(1 for *_, ss in work if ss == s) for s in range(4)}
+    assert per_stack[0] == per_stack[2] == 6
+    assert per_stack[1] > 6 and per_stack[3] > 6
+
+
+def test_stack_recovery_zero_surviving_checkpoints():
+    """Crash BEFORE the first snapshot boundary: the orphaned stacks must
+    restart from their initial states (restored round -1), not from a
+    half-written snapshot."""
+    from repro.distributed.runtime import solve_stacks_with_recovery
+    need = [4, 4]
+    states, log, work = solve_stacks_with_recovery(
+        _counter_advance(need), [0, 0], num_workers=2, max_rounds=30,
+        snapshot_every=10, fail_at={0: 1},
+        cfg=FTConfig(heartbeat_timeout=1.5, min_workers=1))
+    assert states == need
+    rec = [e for e in log if e[0] == "recover"][0]
+    assert rec[3] == {1: -1}                     # no snapshot ever committed
+    # stack 1 lost NOTHING it had done (it did nothing before the crash),
+    # but restarts from init: total advances == need
+    assert sum(1 for *_, s in work if s == 1) == 4
+
+
+def test_stack_recovery_timeout_during_final_round():
+    """The victim crashes on what would have been its LAST round: the
+    reassigned owner must still finish the stack from the snapshot rather
+    than marking it converged off the dead worker's lost progress."""
+    from repro.distributed.runtime import solve_stacks_with_recovery
+    need = [3, 5]
+    states, log, work = solve_stacks_with_recovery(
+        _counter_advance(need), [0, 0], num_workers=2, max_rounds=30,
+        snapshot_every=2, fail_at={4: 1},
+        cfg=FTConfig(heartbeat_timeout=1.5, min_workers=1))
+    assert states == need
+    rec = [e for e in log if e[0] == "recover"][0]
+    assert rec[2] == (1,)
+    # after recovery, stack 1's advances continue under worker 0
+    post = [w for rnd, w, s in work if s == 1 and rnd > rec[1]]
+    assert post and all(w == 0 for w in post)
+
+
+def test_stack_recovery_dead_worker_rejoins_after_sweep():
+    """A worker evicted by sweep() re-joins later: it must re-enter the
+    membership (generation bump), receive stacks at the next plan, and
+    actually advance them."""
+    from repro.distributed.runtime import solve_stacks_with_recovery
+    need = [12] * 4
+    states, log, work = solve_stacks_with_recovery(
+        _counter_advance(need), [0] * 4, num_workers=2, max_rounds=60,
+        snapshot_every=2, fail_at={3: 1}, rejoin_at={8: 1},
+        cfg=FTConfig(heartbeat_timeout=1.5, min_workers=1))
+    assert states == need
+    events = [e[0] for e in log]
+    assert events.count("crash") == 1 and events.count("rejoin") == 1
+    rejoin_round = [e for e in log if e[0] == "rejoin"][0][1]
+    # the rejoined worker does real work after re-entry
+    assert any(w == 1 and rnd >= rejoin_round for rnd, w, s in work)
+
+
+def test_ipkmeans_recoverable_resolves_only_crashed_stack():
+    """End to end through the real pipeline: a killed worker's stack
+    re-solves from its last centroid snapshot, survivors never recompute,
+    and the final result matches the crash-free ipkmeans run exactly."""
+    import jax
+    from repro.core import IPKMeansConfig, ipkmeans
+    from repro.core.ipkmeans import ipkmeans_recoverable
+    from repro.data.synthetic import gaussian_mixture
+    pts, _, _ = gaussian_mixture(jax.random.PRNGKey(0), 1024, 5, d=2,
+                                 spread=8.0, sigma=0.8)
+    init = pts[:5]
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=8)
+    ref = ipkmeans(pts, init, jax.random.PRNGKey(2), cfg)
+    # iters_per_round=2 keeps the solve alive long enough for the crash ->
+    # timeout -> eviction sequence (~2.5 rounds) to play out mid-solve
+    free, _, work_free = ipkmeans_recoverable(
+        pts, init, jax.random.PRNGKey(2), cfg, num_workers=4,
+        iters_per_round=2, snapshot_every=2)
+    # crash worker 3 (the longest-running stack, still unconverged) ONE
+    # round past the round-1 snapshot: that round's live progress dies
+    # with the worker, so recovery must actually recompute it
+    res, log, work = ipkmeans_recoverable(
+        pts, init, jax.random.PRNGKey(2), cfg, num_workers=4,
+        iters_per_round=2, snapshot_every=2, fail_at={3: 3})
+    # identical solve: chunked Lloyd is Markov in the centroids, and the
+    # crashed stack replays from its snapshot to the same fixed point
+    np.testing.assert_allclose(np.asarray(res.centroids),
+                               np.asarray(ref.centroids), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(res.subset_iters),
+                                  np.asarray(ref.subset_iters))
+    rec = [e for e in log if e[0] == "recover"][0]
+    assert rec[2] == (3,)
+    # ONLY the crashed worker's stack redid rounds: per-stack advance
+    # counts match the crash-free run everywhere except stack 3
+    cnt = lambda ws, s: sum(1 for *_, ss in ws if ss == s)
+    for s in range(4):
+        if s == 3:
+            assert cnt(work, s) > cnt(work_free, s)
+        else:
+            assert cnt(work, s) == cnt(work_free, s)

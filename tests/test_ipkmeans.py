@@ -178,3 +178,58 @@ def test_pack_unknown_raises(dataset):
     cfg = IPKMeansConfig(num_clusters=5, num_subsets=6, pack="zip")
     with pytest.raises(ValueError, match="unknown pack"):
         ipkmeans(pts, inits[0], jax.random.key(0), cfg)
+
+
+def test_reduce_mode_validation(dataset):
+    pts, inits = dataset
+    with pytest.raises(ValueError, match="unknown reduce"):
+        IPKMeansConfig(num_clusters=5, num_subsets=6, reduce="bf16")
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    assert cfg.with_reduce("int8ef").reduce == "int8ef"
+    assert cfg.reduce == "exact"                 # with_reduce didn't mutate
+    # compressed reduction without a pod axis is meaningless — S2 has no
+    # reduction at all on the single mesh (the paper's claim) — and must
+    # fail loudly rather than silently run exact
+    mesh = compat.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="needs pod_axis"):
+        ipkmeans_distributed(pts, inits[0], jax.random.key(0),
+                             cfg.with_reduce("int8ef"), mesh, ("data",))
+
+
+def test_pod_axis_validation(dataset):
+    pts, inits = dataset
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    mesh = compat.make_mesh((1,), ("data",))
+    # pod_axis must be a real mesh axis outside axis_names
+    with pytest.raises(ValueError, match="pod_axis"):
+        ipkmeans_distributed(pts, inits[0], jax.random.key(0), cfg,
+                             mesh, ("data",), pod_axis="data")
+    with pytest.raises(ValueError, match="pod_axis"):
+        ipkmeans_distributed(pts, inits[0], jax.random.key(0), cfg,
+                             mesh, ("data",), pod_axis="pods")
+    # reseed_empty needs a global subset view; the pod path shards points
+    rs = dataclasses.replace(
+        cfg, kmeans=cfg.kmeans._replace(reseed_empty=True))
+    from repro.distributed.sharding import kmeans_pod_mesh
+    pmesh = kmeans_pod_mesh(1, 1)
+    with pytest.raises(ValueError, match="reseed_empty"):
+        ipkmeans_distributed(pts, inits[0], jax.random.key(0), rs,
+                             pmesh, ("data",), pod_axis="pods")
+
+
+def test_cross_pod_solve_single_pod_matches_reference(dataset):
+    """The cross-pod S2 on a trivial 1x1 pod mesh must reproduce the
+    single-mesh result exactly (the 8-device 2x4 case is the slow
+    multidevice test)."""
+    pts, inits = dataset
+    from repro.distributed.sharding import kmeans_pod_mesh
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    ref = ipkmeans(pts, inits[0], jax.random.key(0), cfg)
+    pmesh = kmeans_pod_mesh(1, 1)
+    res = ipkmeans_distributed(pts, inits[0], jax.random.key(0), cfg,
+                               pmesh, ("data",), pod_axis="pods")
+    np.testing.assert_allclose(np.asarray(res.centroids),
+                               np.asarray(ref.centroids), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(res.subset_iters),
+                                  np.asarray(ref.subset_iters))

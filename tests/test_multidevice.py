@@ -97,3 +97,35 @@ def test_histogram_builder_matches_sort_builder():
         a = kdtree.build_kdtree(pts, depth)
         b = kdtree.build_kdtree_histogram(pts, depth)
         assert bool(jnp.all(a == b)), depth
+
+
+@pytest.mark.slow
+def test_ipkmeans_cross_pod_2x4_exact_and_int8ef():
+    """The multi-pod S2 on a real 2x4 pods x devices mesh: the exact
+    reduction must match the single-process reference, and int8ef must
+    land within 1e-3 relative SSE of exact (the BENCH_dist gate, asserted
+    here as a correctness property)."""
+    run_script("""
+        from repro.core import IPKMeansConfig, ipkmeans, ipkmeans_distributed
+        from repro.data import paper_dataset_3000, initial_centroid_groups
+        from repro.distributed.sharding import (KMEANS_DATA_AXIS,
+                                                KMEANS_POD_AXIS,
+                                                kmeans_pod_mesh)
+        pts, _ = paper_dataset_3000(0)
+        init = initial_centroid_groups(pts, 5, groups=1)[0]
+        cfg = IPKMeansConfig(num_clusters=5, num_subsets=8)
+        ref = ipkmeans(pts, init, jax.random.key(0), cfg)
+        mesh = kmeans_pod_mesh(2, 4)
+        ex = ipkmeans_distributed(pts, init, jax.random.key(0), cfg, mesh,
+                                  (KMEANS_DATA_AXIS,),
+                                  pod_axis=KMEANS_POD_AXIS)
+        np.testing.assert_allclose(np.asarray(ex.centroids),
+                                   np.asarray(ref.centroids),
+                                   rtol=1e-5, atol=1e-5)
+        q = ipkmeans_distributed(pts, init, jax.random.key(0),
+                                 cfg.with_reduce("int8ef"), mesh,
+                                 (KMEANS_DATA_AXIS,),
+                                 pod_axis=KMEANS_POD_AXIS)
+        rel = abs(float(q.sse) - float(ex.sse)) / float(ex.sse)
+        assert rel <= 1e-3, rel
+    """)
