@@ -39,6 +39,11 @@ _MARK = "DIST_BENCH_JSON:"
 N, D, K, M = 4096, 32, 8, 16
 MESHES = ((1, 8), (2, 4), (4, 2))
 
+# the S1-sharding problem: big enough that the O(R*256) histogram DCN model
+# undercuts the dataset by >10x (N=65536, leaf=4096 -> depth 4, R=16:
+# ~280 KB of summaries vs 8.4 MB of points), small enough for a CPU bench
+N_S1, LEAF_S1 = 1 << 16, 4096
+
 
 def _worker() -> list[dict]:
     import time
@@ -98,29 +103,91 @@ def _worker() -> list[dict]:
                 "payload_ratio_vs_exact": payload / exact_payload,
                 "wall_sec": wall,
             })
+
+    # ---- S1-sharding rows: the kd partition itself across pods ----
+    # sharded histogram build + labeling on the 2x4 pod mesh vs the
+    # replicated sort build, with the DCN byte model for each; the sharded
+    # path's region/subset ids must be bit-identical to the single-device
+    # histogram reference (the snapshot guard enforces it).
+    import numpy as np
+
+    from repro.core import io_model, kdtree
+
+    pts1, _, _ = gaussian_mixture(jax.random.PRNGKey(5), N_S1, K, d=D,
+                                  spread=10.0, sigma=0.6)
+    depth = kdtree.required_depth(N_S1, LEAF_S1)
+    key = jax.random.PRNGKey(6)
+    mesh = kmeans_pod_mesh(2, 4)
+    axes = (KMEANS_POD_AXIS, KMEANS_DATA_AXIS)
+    points_bytes = N_S1 * D * 4
+
+    def timed_partition(**kw):
+        part = None
+        for _ in range(2):                      # 2nd call: compile-free
+            t0 = time.perf_counter()
+            part = kdtree.partition_dataset(pts1, key, M,
+                                            leaf_capacity=LEAF_S1, **kw)
+            jax.block_until_ready(part.subset_ids)
+            wall = time.perf_counter() - t0
+        return part, wall
+
+    ref, _ = timed_partition(builder="histogram", labeler="histogram")
+    shard, wall_shard = timed_partition(builder="histogram",
+                                        labeler="histogram",
+                                        mesh=mesh, axis_names=axes)
+    _, wall_sort = timed_partition(builder="sort", labeler="sort")
+    hist_model = io_model.s1_histogram_dcn_bytes(depth, 2)
+    sort_model = io_model.s1_sort_dcn_bytes(N_S1, D, depth)
+    rows.append({
+        "mode": "s1-sharding", "variant": "sharded-histogram",
+        "pods": 2, "devices_per_pod": 4,
+        "n": N_S1, "d": D, "subsets": M, "kd_depth": depth,
+        "region_ids_exact": bool(np.array_equal(np.asarray(shard.region_ids),
+                                                np.asarray(ref.region_ids))),
+        "subset_ids_exact": bool(np.array_equal(np.asarray(shard.subset_ids),
+                                                np.asarray(ref.subset_ids))),
+        "s1_dcn_payload_bytes": hist_model,
+        "points_bytes": points_bytes,
+        "payload_ratio_vs_points": hist_model / points_bytes,
+        "wall_sec": wall_shard,
+    })
+    rows.append({
+        "mode": "s1-sharding", "variant": "replicated-sort",
+        "pods": 2, "devices_per_pod": 4,
+        "n": N_S1, "d": D, "subsets": M, "kd_depth": depth,
+        "s1_dcn_payload_bytes": sort_model,
+        "points_bytes": points_bytes,
+        "payload_ratio_vs_points": sort_model / points_bytes,
+        "wall_sec": wall_sort,
+    })
     return rows
 
 
 def run() -> list[dict]:
     env = {"PYTHONPATH": f"{REPO_ROOT}/src:{REPO_ROOT}",
            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu",     # skip the TPU-probe minutes on
+                                       # machines that carry libtpu
            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
            "HOME": os.environ.get("HOME", "/root")}
     code = ("import json\n"
             "from benchmarks import dist_bench\n"
             f"print({_MARK!r} + json.dumps(dist_bench._worker()))\n")
     res = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=560)
+                         capture_output=True, text=True, timeout=900)
     if res.returncode != 0:
         raise RuntimeError(f"dist_bench worker failed:\n{res.stderr[-3000:]}")
     line = next(l for l in res.stdout.splitlines() if l.startswith(_MARK))
     rows = json.loads(line[len(_MARK):])
-    q = [r for r in rows if r["reduce"] == "int8ef"]
+    q = [r for r in rows if r.get("reduce") == "int8ef"]
     ratio = max(r["payload_ratio_vs_exact"] for r in q)
     delta = max(r["sse_rel_delta_vs_exact"] for r in q)
+    s1 = next(r for r in rows if r.get("variant") == "sharded-histogram")
     record("dist_bench", rows,
            ("dist_bench", f"{rows[0]['wall_sec']*1e6:.0f}",
-            f"int8ef_payload_ratio={ratio:.3f} max_sse_rel_delta={delta:.1e}"))
+            f"int8ef_payload_ratio={ratio:.3f} max_sse_rel_delta={delta:.1e} "
+            f"s1_dcn_ratio={s1['payload_ratio_vs_points']:.3f} "
+            f"s1_ids_exact={s1['region_ids_exact'] and s1['subset_ids_exact']}"))
     return rows
 
 

@@ -143,6 +143,27 @@ def main() -> None:
                             f"int8ef SSE off by {r['sse_rel_delta_vs_exact']:.2e}"
                             f" relative (> 1e-3) at pods={r['pods']}; "
                             f"snapshot not written")
+                # S1 sharding: the sharded histogram partition must be
+                # bit-identical to the single-device reference, and its
+                # modeled DCN payload must undercut the dataset by >= 10x
+                # (the summaries-not-data property of the radix build).
+                s1 = [r for r in rows
+                      if r.get("variant") == "sharded-histogram"]
+                if not s1:
+                    raise RuntimeError(
+                        "dist_bench rows lack the s1-sharding "
+                        "sharded-histogram row; snapshot not written")
+                for r in s1:
+                    if not (r["region_ids_exact"] and r["subset_ids_exact"]):
+                        raise RuntimeError(
+                            "sharded S1 ids diverge from the single-device "
+                            "histogram reference; snapshot not written")
+                    if r["s1_dcn_payload_bytes"] > r["points_bytes"] / 10:
+                        raise RuntimeError(
+                            f"sharded S1 DCN payload "
+                            f"{r['s1_dcn_payload_bytes']} > points/10 "
+                            f"({r['points_bytes'] / 10:.0f}); "
+                            "snapshot not written")
                 (REPO_ROOT / "BENCH_dist.json").write_text(
                     json.dumps(rows, indent=2) + "\n")
         except Exception:

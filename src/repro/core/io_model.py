@@ -167,3 +167,46 @@ def dcn_reduce_bytes_ipkmeans(m: int, k: int, d: int, iters: int,
         return 0
     payload = ipkmeans_stats_payload_bytes(m, k, d, mode)
     return iters * 2 * payload * (n_pods - 1) // n_pods
+
+
+def s1_histogram_dcn_bytes(depth: int, n_pods: int, dtype_bytes: int = 4,
+                           rounds: int = 8, buckets: int = 256) -> int:
+    """DCN bytes one pod exchanges for the SHARDED S1 (build + label).
+
+    Build: at tree level ``l`` there are ``2**l`` regions, and the exact
+    median selection runs ``rounds`` radix rounds (4 key bytes + 4
+    tie-break index bytes), each psum-ing a (regions, buckets) int32
+    histogram plus one per-region count vector — ring-priced like the S2
+    stats reduction.  Label: one more (R, buckets) histogram at the leaf
+    level plus the per-region lo/hi span, then ``ceil(log2 p)``
+    Hillis-Steele exchange rounds of the (R * buckets) local histogram for
+    the cross-shard exclusive scan.  The total is independent of n — the
+    whole point: the sort-based S1 moves the dataset per level
+    (:func:`s1_sort_dcn_bytes`), the histogram S1 moves only summaries.
+    """
+    if n_pods <= 1:
+        return 0
+
+    def ring(payload: int) -> int:
+        return 2 * payload * (n_pods - 1) // n_pods
+
+    total = 0
+    for level in range(depth):
+        regions = 2 ** level
+        total += rounds * ring(regions * buckets * dtype_bytes)
+        total += ring(regions * dtype_bytes)            # per-region counts
+    r = 2 ** depth
+    total += ring(r * buckets * dtype_bytes)            # label histogram
+    total += ring(2 * r * dtype_bytes)                  # per-region lo/hi
+    total += (max(n_pods - 1, 1)).bit_length() * r * buckets * dtype_bytes
+    return total
+
+
+def s1_sort_dcn_bytes(n: int, d: int, depth: int,
+                      dtype_bytes: int = 4) -> int:
+    """DCN bytes of the replicated sort-based S1 when points live sharded
+    over pods: every level's global lexsort (and the final labeling sort)
+    is a dataset-sized exchange — the floor GSPMD's all-gather lowering
+    cannot beat.  This is the baseline :func:`s1_histogram_dcn_bytes`
+    replaces."""
+    return (depth + 1) * n * d * dtype_bytes

@@ -30,6 +30,8 @@ Two scale-out layers sit on top of the single mesh:
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -44,6 +46,7 @@ from repro.kernels import engine as engines
 from repro.kernels import ref
 
 REDUCE_MODES = ("exact", "int8ef")
+S1_MODES = ("auto", "sort", "histogram")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +58,8 @@ class IPKMeansConfig:
     pack: str = "scatter"                   # 'scatter' | 'sorted' | 'a2a'
     reduce: str = "exact"                   # 'exact' | 'int8ef': cross-pod
                                             # stats reduction (pod_axis only)
+    s1: str = "auto"                        # 'auto' | 'sort' | 'histogram':
+                                            # tree build + labeling machinery
     leaf_capacity: int | None = None        # default: num_subsets (paper)
     label_axis: int = 0
     kmeans: KMeansParams = KMeansParams()
@@ -63,6 +68,23 @@ class IPKMeansConfig:
         if self.reduce not in REDUCE_MODES:
             raise ValueError(f"unknown reduce: {self.reduce!r} "
                              f"(expected one of {REDUCE_MODES})")
+        if self.s1 not in S1_MODES:
+            raise ValueError(f"unknown s1: {self.s1!r} "
+                             f"(expected one of {S1_MODES})")
+
+    def with_s1(self, s1: str) -> "IPKMeansConfig":
+        """Same config, different S1 machinery ('auto' | 'sort' | 'histogram').
+
+        ``"sort"`` is the paper-faithful lexsort build + exact-key labeling;
+        ``"histogram"`` is the radix-histogram build plus the bucketed-rank
+        labeler — the pair whose cross-shard traffic is O(R * 256) summaries
+        per round, and hence the only pair that can run sharded over the pod
+        mesh.  ``"auto"`` (default) picks ``"histogram"`` when
+        ``ipkmeans_distributed`` is given a ``pod_axis`` (where the sort
+        paths would lower as dataset-sized DCN collectives) and ``"sort"``
+        everywhere else, preserving the established single-mesh outputs.
+        """
+        return dataclasses.replace(self, s1=s1)
 
     def with_reduce(self, reduce: str) -> "IPKMeansConfig":
         """Same config, different cross-pod reduction ('exact' | 'int8ef').
@@ -151,9 +173,34 @@ class IPKMeansResult(NamedTuple):
     kd_depth: int                           # static: tree levels ("jobs")
 
 
+def _check_pack_complete(n: int, masks, dropped, pack: str) -> None:
+    """Raise if the pack lost points (satellite of §Perf C3: a dropped point
+    silently biases every downstream centroid).  Skipped under tracing —
+    the distributed entry points run the pack eagerly, so production packs
+    are always checked."""
+    lost = dropped if dropped is not None else (
+        jnp.int32(n) - masks.sum(dtype=jnp.int32))
+    if isinstance(lost, jax.core.Tracer):
+        return
+    lost = int(lost)
+    if lost:
+        raise ValueError(
+            f"pack={pack!r} dropped {lost} of {n} points (packed mask counts "
+            f"{n - lost}): subset capacity or a2a slack is too small for "
+            "this partition's skew")
+
+
 def _partition_and_pack(points, key, cfg: IPKMeansConfig,
-                        mesh=None, axis_names=None):
+                        mesh=None, axis_names=None, pod_axis=None):
     """S1: partition, then route each subset to its reducer.
+
+    With a ``mesh`` and ``cfg.s1`` resolving to ``"histogram"``, the whole
+    stage runs sharded: the tree build and the labeler exchange only
+    O(R * 256) histogram summaries per radix round (points sharded over
+    ``(pod_axis,) + axis_names``), and the a2a pack routes each point to
+    its subset's owner column inside its own pod — zero DCN payload.
+    ``cfg.s1="auto"`` keeps the sort machinery everywhere except the
+    pod path, where sorts would lower as dataset-sized DCN collectives.
 
     The shuffle strategy is ``cfg.pack`` (§Perf C2/C3 — previously
     reachable only from the kmeans_dryrun CLI):
@@ -165,28 +212,65 @@ def _partition_and_pack(points, key, cfg: IPKMeansConfig,
         points (``n == M * capacity``, the static precondition the kernel
         itself asserts) — otherwise falls back to ``scatter``.
       * ``a2a``     — explicit shard_map all_to_all shuffle; needs a mesh
-        (so the single-process :func:`ipkmeans` falls back to ``scatter``),
-        and itself falls back when M or n don't divide over the mesh.
+        (so the single-process :func:`ipkmeans` falls back to ``scatter``
+        with a warning), and itself warns + falls back when M or n don't
+        divide over the mesh.
+
+    Every path's mask count is checked against ``n`` when running eagerly
+    (:func:`_check_pack_complete`); the returned subsets' capacity axis is
+    always a multiple of the pod count so the pod path can shard it.
     """
     if cfg.pack not in ("scatter", "sorted", "a2a"):
         raise ValueError(f"unknown pack: {cfg.pack!r} "
                          f"(expected 'scatter' | 'sorted' | 'a2a')")
+    s1 = cfg.s1
+    if s1 == "auto":
+        s1 = "histogram" if pod_axis is not None else "sort"
+    point_axes = ((pod_axis,) + tuple(axis_names)) if pod_axis \
+        else tuple(axis_names or ())
+    shard_s1 = (s1 == "histogram" and mesh is not None
+                and cfg.partition == "kd_axis")
     part = kdtree.partition_dataset(
         points, key, cfg.num_subsets,
         leaf_capacity=cfg.leaf_capacity,
-        strategy=cfg.partition, label_axis=cfg.label_axis)
+        strategy=cfg.partition, label_axis=cfg.label_axis,
+        builder="histogram" if s1 == "histogram" else "sort",
+        labeler="histogram" if s1 == "histogram" else "sort",
+        mesh=mesh if shard_s1 else None,
+        axis_names=point_axes if shard_s1 else None)
     n = points.shape[0]
     capacity = cfg.subset_capacity(n)
+    n_pods = mesh.shape[pod_axis] if (mesh is not None and pod_axis) else 1
+    dropped = None
     if cfg.pack == "sorted" and n == cfg.num_subsets * capacity:
         subsets, masks = kdtree.pack_subsets_sorted(
             points, part.subset_ids, cfg.num_subsets, capacity)
     elif cfg.pack == "a2a" and mesh is not None:
-        subsets, masks = kdtree.pack_subsets_a2a(
+        if n_pods > 1:
+            # the pod a2a shards capacity over pods, and a pod's share of a
+            # subset fluctuates around capacity/n_pods — provision the
+            # per-pod slice with the same slack-plus-4-sigma headroom the
+            # send buffers use (masked rows are free for the solve)
+            mean = capacity / n_pods
+            cap_loc = max(8, -(-int(mean * 1.3 + 4 * math.sqrt(mean))
+                               // 8) * 8)
+            capacity = cap_loc * n_pods
+        subsets, masks, dropped = kdtree.pack_subsets_a2a(
             points, part.subset_ids, cfg.num_subsets, capacity,
-            mesh, axis_names)
+            mesh, axis_names, pod_axis=pod_axis)
     else:
+        if cfg.pack == "a2a":
+            warnings.warn(
+                "pack='a2a' needs a device mesh; using the scatter pack "
+                "(all-reduce-shaped collective) instead",
+                RuntimeWarning, stacklevel=2)
         subsets, masks = kdtree.pack_subsets(
             points, part.subset_ids, cfg.num_subsets, capacity)
+    _check_pack_complete(n, masks, dropped, cfg.pack)
+    pad = -subsets.shape[1] % n_pods
+    if pad:
+        subsets = jnp.pad(subsets, ((0, 0), (0, pad), (0, 0)))
+        masks = jnp.pad(masks, ((0, 0), (0, pad)))
     return part, subsets, masks
 
 
@@ -359,7 +443,12 @@ def ipkmeans_distributed(points: jnp.ndarray,
                          pod_axis: str | None = None) -> IPKMeansResult:
     """Production IPKMeans on a device mesh.
 
-    S1 runs jit-sharded (sorts partition fine under SPMD); S2 runs under
+    S1 runs jit-sharded on the single-mesh path (sorts partition fine under
+    SPMD); with a ``pod_axis`` it instead runs under ``shard_map`` with
+    points sharded over ``(pod_axis,) + axis_names`` and the histogram
+    build/labeler exchanging only O(R * 256) summaries per radix round —
+    no stage ever materializes the dataset on one shard (``cfg.s1``
+    controls this; see :meth:`IPKMeansConfig.with_s1`).  S2 runs under
     ``shard_map`` with the subset axis sharded over ``axis_names`` so each
     device drives its own ``lax.while_loop`` with NO collectives — the
     communication-avoidance that defines the paper.  The shard_map body is
@@ -412,7 +501,8 @@ def ipkmeans_distributed(points: jnp.ndarray,
 
     part, subsets, masks = _partition_and_pack(points, key, cfg,
                                                mesh=mesh,
-                                               axis_names=axis_names)
+                                               axis_names=axis_names,
+                                               pod_axis=pod_axis)
 
     if pod_axis is None:
         def s2_body(sub, msk):                   # per-device stack of reducers
@@ -425,12 +515,6 @@ def ipkmeans_distributed(points: jnp.ndarray,
             check_vma=False)
         res = s2(subsets, masks)
     else:
-        n_pods = mesh.shape[pod_axis]
-        pad = -subsets.shape[1] % n_pods
-        if pad:
-            subsets = jnp.pad(subsets, ((0, 0), (0, pad), (0, 0)))
-            masks = jnp.pad(masks, ((0, 0), (0, pad)))
-
         def s2_pod_body(sub, msk):
             c, sse, asse, iters, conv = _s2_cross_pod_solve(
                 sub, msk, init_centroids, cfg, pod_axis)

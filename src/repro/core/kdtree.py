@@ -9,11 +9,20 @@ levels <=> the paper's O(log n) MapReduce jobs.
 
 Everything is pure jnp and jit-safe for a static ``depth`` / ``num_subsets``,
 and — because sorts and scatters are SPMD-partitionable — runs sharded under
-pjit on a mesh without modification.
+pjit on a mesh without modification.  Past one pod that is no longer enough:
+GSPMD lowers the level sorts and the scatter pack as dataset-sized
+collectives over the slow DCN axis.  The ``*_sharded`` variants here run the
+same algorithms under ``shard_map`` with points sharded over
+``(pods, devices)`` and exchange only O(regions * 256) histogram summaries
+per radix round — the whole S1 then scales past single-pod memory with
+per-level cross-host traffic independent of n (see
+:func:`build_kdtree_histogram_sharded`, :func:`label_regions_histogram_sharded`,
+and the ``pod_axis`` mode of :func:`pack_subsets_a2a`).
 """
 from __future__ import annotations
 
 import math
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -69,7 +78,9 @@ def _monotone_u32(x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _histogram_median_go_right(key: jnp.ndarray, idx: jnp.ndarray,
-                               region: jnp.ndarray, num_regions: int):
+                               region: jnp.ndarray, num_regions: int,
+                               axis_names: tuple[str, ...] | None = None,
+                               active: jnp.ndarray | None = None):
     """Exact per-region median split WITHOUT sorting.
 
     Radix-refines the median over 8 byte-rounds (4 bytes of the monotone
@@ -79,11 +90,25 @@ def _histogram_median_go_right(key: jnp.ndarray, idx: jnp.ndarray,
     reduction, vs a full O(n log n) global sort per tree level.  This is
     the §Perf cell-C optimization; equality with the sort-based splitter
     is asserted in tests.
+
+    With ``axis_names`` the function runs inside ``shard_map`` over a
+    points-sharded mesh: all per-point state stays shard-local and each
+    (R, 256) histogram (plus the initial per-region counts) is psum'd over
+    the mesh axes, so the cross-shard traffic per round is O(R * 256) ints
+    regardless of n.  Because histogram entries are integer adds, the
+    reduced counts — and therefore every median decision — are bit-for-bit
+    identical to the single-device build as long as ``idx`` carries
+    globally-unique point indices.  ``active`` masks shard-padding rows out
+    of every count (their ``less``/``match`` outputs are meaningless).
     """
     n = key.shape[0]
-    counts = jnp.bincount(region, length=num_regions)
+    live = jnp.ones(n, bool) if active is None else active
+    counts = jnp.zeros((num_regions,), jnp.int32).at[region].add(
+        live.astype(jnp.int32))
+    if axis_names is not None:
+        counts = jax.lax.psum(counts, axis_names)
     remaining = ((counts + 1) // 2).astype(jnp.int32)     # ceil -> left
-    match = jnp.ones(n, bool)
+    match = live
     less = jnp.zeros(n, bool)
     for r in range(8):
         if r < 4:
@@ -94,6 +119,8 @@ def _histogram_median_go_right(key: jnp.ndarray, idx: jnp.ndarray,
         hist = jnp.zeros((num_regions * 256,), jnp.int32).at[
             region * 256 + byte].add(match.astype(jnp.int32))
         hist = hist.reshape(num_regions, 256)
+        if axis_names is not None:
+            hist = jax.lax.psum(hist, axis_names)
         cum = jnp.cumsum(hist, axis=1)
         bstar = jnp.argmax(cum >= remaining[:, None], axis=1).astype(jnp.int32)
         below = jnp.where(bstar > 0,
@@ -127,6 +154,75 @@ def build_kdtree_histogram(points: jnp.ndarray, depth: int) -> jnp.ndarray:
     return region
 
 
+def _shard_linear_index(mesh, axis_names: tuple[str, ...]):
+    """Linearized (major-to-minor over ``axis_names``) program index inside a
+    shard_map body — matches how ``P(axis_names)`` tiles a global array, so
+    ``linear_index * n_loc`` is the shard's global row offset."""
+    idx = jnp.int32(0)
+    for a in axis_names:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _mesh_size(mesh, axis_names: tuple[str, ...]) -> int:
+    size = 1
+    for a in axis_names:
+        size *= mesh.shape[a]
+    return size
+
+
+def _pad_for_shards(arrs, n: int, n_shards: int):
+    """Pad leading axis to a multiple of ``n_shards``; returns the padded
+    arrays plus the (n_pad,) active mask (all-True when already even)."""
+    pad = -n % n_shards
+    if pad:
+        arrs = [jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]) for a in arrs]
+    active = jnp.arange(n + pad) < n
+    return arrs, active
+
+
+def build_kdtree_histogram_sharded(points: jnp.ndarray, depth: int,
+                                   mesh, axis_names: tuple[str, ...]
+                                   ) -> jnp.ndarray:
+    """Multi-host k-d tree build: :func:`build_kdtree_histogram` under
+    ``shard_map`` with points sharded over ``axis_names`` (on the k-means pod
+    mesh: ``("pods", "data")`` — the slow DCN axis plus the in-pod devices).
+
+    Each shard radix-refines every region's median on its local points and
+    psums the (R, 256) byte histograms across the mesh per round, so the
+    cross-host traffic per tree level is depth-independent O(R * 256) ints —
+    the dataset itself never moves.  Point indices are globally unique
+    (shard offset + local arange), preserving the stable-sort tie-break:
+    region ids are bit-for-bit identical to the single-device build
+    (asserted in tests, ties and all).  n that doesn't divide the shard
+    count is padded internally with masked rows.
+    """
+    n, d = points.shape
+    axes = tuple(axis_names)
+    n_shards = _mesh_size(mesh, axes)
+    (pts,), active = _pad_for_shards([points], n, n_shards)
+    n_loc = pts.shape[0] // n_shards
+
+    def body(x_loc, act_loc):
+        offset = (_shard_linear_index(mesh, axes) * n_loc).astype(jnp.uint32)
+        idx = offset + jnp.arange(n_loc, dtype=jnp.uint32)
+        keys = [_monotone_u32(x_loc[:, a]) for a in range(d)]
+        region = jnp.zeros(n_loc, dtype=jnp.int32)
+        for level in range(depth):
+            go_right = _histogram_median_go_right(
+                keys[level % d], idx, region, 2 ** level,
+                axis_names=axes, active=act_loc)
+            region = region * 2 + go_right.astype(jnp.int32)
+        return region
+
+    from jax.sharding import PartitionSpec as P
+    region = shard_map(body, mesh=mesh,
+                       in_specs=(P(axes, None), P(axes)),
+                       out_specs=P(axes), check_vma=False)(pts, active)
+    return region[:n]
+
+
 def required_depth(n: int, leaf_capacity: int) -> int:
     """Levels so leaves hold ~leaf_capacity points.
 
@@ -138,6 +234,16 @@ def required_depth(n: int, leaf_capacity: int) -> int:
     if n <= leaf_capacity:
         return 0
     return max(0, round(math.log2(n / leaf_capacity)))
+
+
+def _label_key(points: jnp.ndarray, key: jax.Array, strategy: str,
+               label_axis: int) -> jnp.ndarray:
+    """The per-point labeling key for Algorithm 3's two variants."""
+    if strategy == "axis":
+        return points[:, label_axis]
+    if strategy == "random":
+        return jax.random.uniform(key, (points.shape[0],))
+    raise ValueError(f"unknown labeling strategy: {strategy}")
 
 
 @partial(jax.jit, static_argnames=("num_regions", "num_subsets", "strategy", "label_axis"))
@@ -157,16 +263,138 @@ def label_regions(points: jnp.ndarray,
 
     Labels wrap mod ``num_subsets`` so leaf capacity need not equal M.
     """
-    if strategy == "axis":
-        key2 = points[:, label_axis]
-    elif strategy == "random":
-        key2 = jax.random.uniform(key, (points.shape[0],))
-    else:
-        raise ValueError(f"unknown labeling strategy: {strategy}")
+    key2 = _label_key(points, key, strategy, label_axis)
     order = jnp.lexsort((key2, region_ids))
     _, rank, _ = _segment_rank(region_ids, order, num_regions)
     label_sorted = (rank % num_subsets).astype(jnp.int32)
     return jnp.zeros_like(region_ids).at[order].set(label_sorted)
+
+
+# Number of histogram buckets per region for the sort-free labeler.  256
+# matches the radix fan-out of the tree build; with leaf_capacity-sized
+# regions each bucket holds only a handful of points, so the bucketed order
+# is as stratified as the exact sort for the paper's labeling purpose.
+_LABEL_BUCKETS = 256
+
+
+def _region_buckets(key2: jnp.ndarray, region_ids: jnp.ndarray,
+                    num_regions: int, active: jnp.ndarray | None = None,
+                    axis_names: tuple[str, ...] | None = None) -> jnp.ndarray:
+    """Per-point bucket id in [0, 256): the point's labeling key quantized
+    against its region's [min, max] span.  Scatter-min/max per region, pmin /
+    pmax across shards when ``axis_names`` is given — min/max are order-
+    independent, so sharded and single-device buckets are bit-identical."""
+    f = key2.astype(jnp.float32)
+    reg = region_ids if active is None else jnp.where(
+        active, region_ids, num_regions)
+    lo = jnp.full((num_regions,), jnp.inf, f.dtype).at[reg].min(f, mode="drop")
+    hi = jnp.full((num_regions,), -jnp.inf, f.dtype).at[reg].max(f, mode="drop")
+    if axis_names:
+        lo = jax.lax.pmin(lo, axis_names)
+        hi = jax.lax.pmax(hi, axis_names)
+    w = hi - lo
+    t = (f - lo[region_ids]) / jnp.where(w > 0, w, 1.0)[region_ids]
+    return jnp.clip((t * _LABEL_BUCKETS).astype(jnp.int32),
+                    0, _LABEL_BUCKETS - 1)
+
+
+@partial(jax.jit, static_argnames=("num_regions", "num_subsets", "strategy", "label_axis"))
+def label_regions_histogram(points: jnp.ndarray,
+                            region_ids: jnp.ndarray,
+                            key: jax.Array,
+                            num_regions: int,
+                            num_subsets: int,
+                            strategy: str = "axis",
+                            label_axis: int = 0) -> jnp.ndarray:
+    """Single-device reference for the sort-free labeling order.
+
+    Canonical order inside a region: (bucket, original index), where bucket
+    quantizes the labeling key against the region's span
+    (:func:`_region_buckets`).  This is the order the distributed labeler
+    (:func:`label_regions_histogram_sharded`) reproduces bit-for-bit from
+    O(R * 256) summaries — the exact-key order of :func:`label_regions`
+    cannot be recovered without a dataset-sized exchange, so the histogram
+    pair defines its own (equally stratified) canonical order instead.
+    """
+    key2 = _label_key(points, key, strategy, label_axis)
+    b = _region_buckets(key2, region_ids, num_regions)
+    order = jnp.lexsort((b, region_ids))
+    _, rank, _ = _segment_rank(region_ids, order, num_regions)
+    label_sorted = (rank % num_subsets).astype(jnp.int32)
+    return jnp.zeros_like(region_ids).at[order].set(label_sorted)
+
+
+def _exclusive_shard_scan(x: jnp.ndarray, mesh,
+                          axis_names: tuple[str, ...]) -> jnp.ndarray:
+    """Sum of ``x`` over all shards with a strictly smaller linearized
+    (major-to-minor over ``axis_names``) index.
+
+    Hillis-Steele doubling over ``lax.ppermute`` per axis — ceil(log2 P)
+    rounds of O(|x|) messages, instead of the all-gather of every shard's
+    copy (which at production shapes is a multi-GB blow-up)."""
+    axes = tuple(axis_names)
+    out = jnp.zeros_like(x)
+    for pos, a in enumerate(axes):
+        inner = axes[pos + 1:]
+        t = jax.lax.psum(x, inner) if inner else x
+        inc = t
+        shift = 1
+        while shift < mesh.shape[a]:
+            perm = [(s, s + shift) for s in range(mesh.shape[a] - shift)]
+            inc = inc + jax.lax.ppermute(inc, a, perm)
+            shift *= 2
+        out = out + (inc - t)
+    return out
+
+
+def label_regions_histogram_sharded(points: jnp.ndarray,
+                                    region_ids: jnp.ndarray,
+                                    num_regions: int,
+                                    num_subsets: int,
+                                    mesh,
+                                    axis_names: tuple[str, ...],
+                                    label_axis: int = 0) -> jnp.ndarray:
+    """Distributed Algorithm 3 (axis variant) without the global lexsort.
+
+    A point's rank inside its region decomposes into three order-independent
+    pieces: (a) the count of region points in strictly smaller buckets — an
+    exclusive cumsum of the psum'd (R, 256) histogram; (b) the count of
+    same-(region, bucket) points on shards with smaller linear index — an
+    exclusive shard scan of the local histogram; (c) its stable local rank
+    within the (region, bucket) cell.  Because global point order is
+    shard-major, (a)+(b)+(c) equals the single-device
+    :func:`label_regions_histogram` rank exactly, so subset ids are
+    bit-for-bit identical — while cross-shard traffic is O(R * 256) ints
+    instead of the dataset-sized all-gather GSPMD makes of a lexsort.
+    """
+    n = points.shape[0]
+    axes = tuple(axis_names)
+    n_shards = _mesh_size(mesh, axes)
+    (pts, reg), active = _pad_for_shards([points, region_ids], n, n_shards)
+    nb = num_regions * _LABEL_BUCKETS
+
+    def body(x_loc, reg_loc, act_loc):
+        b = _region_buckets(x_loc[:, label_axis], reg_loc, num_regions,
+                            active=act_loc, axis_names=axes)
+        rb = jnp.where(act_loc, reg_loc * _LABEL_BUCKETS + b, nb)
+        hist_loc = jnp.zeros(nb, jnp.int32).at[rb].add(
+            act_loc.astype(jnp.int32), mode="drop")
+        hist = jax.lax.psum(hist_loc, axes)
+        h2 = hist.reshape(num_regions, _LABEL_BUCKETS)
+        base = (jnp.cumsum(h2, axis=1) - h2).reshape(-1)   # (a): bucket start
+        pref = _exclusive_shard_scan(hist_loc, mesh, axes)  # (b): shard prefix
+        order = jnp.argsort(rb, stable=True)                # (c): local rank
+        _, lrank_sorted, _ = _segment_rank(rb, order, nb + 1)
+        lrank = jnp.zeros_like(lrank_sorted).at[order].set(lrank_sorted)
+        rbc = jnp.minimum(rb, nb - 1)  # padded rows: any in-range cell
+        rank = base[rbc] + pref[rbc] + lrank
+        return (rank % num_subsets).astype(jnp.int32)
+
+    from jax.sharding import PartitionSpec as P
+    label = shard_map(body, mesh=mesh,
+                      in_specs=(P(axes, None), P(axes), P(axes)),
+                      out_specs=P(axes), check_vma=False)(pts, reg, active)
+    return label[:n]
 
 
 @partial(jax.jit, static_argnames=("num_subsets",))
@@ -230,7 +458,8 @@ def pack_subsets_a2a(points: jnp.ndarray,
                      capacity: int,
                      mesh,
                      axis_names: tuple[str, ...],
-                     slack: float = 1.3):
+                     slack: float = 1.3,
+                     pod_axis: str | None = None):
     """Communication-optimal pack: explicit all_to_all shuffle (§Perf C3).
 
     GSPMD lowers both the scatter- and the sort-based packs as dataset-
@@ -239,25 +468,60 @@ def pack_subsets_a2a(points: jnp.ndarray,
     all_to_all moves each point exactly once — the same dispatch pattern as
     the MoE layer.  Per-(src,dst) capacity is n_loc/R * slack; overflow
     drops are impossible for region-aligned inputs and negligible for
-    random order (asserted via mask count in tests).
+    random order (the returned ``dropped`` count makes any loss loud).
 
-    Returns (packed (M, capacity, d) sharded over M, mask) — same contract
-    as :func:`pack_subsets`.
+    With ``pod_axis`` (the slow DCN axis of a pods x devices mesh, points
+    sharded over ``(pod_axis,) + axis_names``) the all_to_all runs only
+    over the in-pod ``axis_names``: a point moves to its subset's owner
+    *column* inside its own pod row, and the packed tensor's capacity axis
+    is sharded over pods (each pod owns a ``capacity // n_pods`` slice of
+    every subset).  The pack itself therefore costs ZERO DCN payload —
+    exactly the property the S2 cross-pod solve expects, since it reduces
+    per-subset stats over the pod axis anyway.
+
+    Returns ``(packed (M, capacity, d), mask (M, capacity), dropped)`` —
+    packed/mask sharded (M over ``axis_names``, capacity over ``pod_axis``),
+    ``dropped`` a replicated scalar count of points lost to slot or
+    capacity overflow (0 in healthy configurations; callers should check).
+
+    Preconditions (else: warn + scatter fallback): ``num_subsets`` divides
+    by the in-pod device count, ``n`` by the total device count, and
+    ``capacity`` by the pod count.
     """
     from jax.sharding import PartitionSpec as P
 
     n, d = points.shape
-    r = 1
-    for a in axis_names:
-        r *= mesh.shape[a]
-    if num_subsets % r or n % r:
-        return pack_subsets(points, subset_ids, num_subsets, capacity)
+    r = _mesh_size(mesh, tuple(axis_names))
+    n_pods = mesh.shape[pod_axis] if pod_axis else 1
+    n_dev = r * n_pods
+    precondition = None
+    if num_subsets % r:
+        precondition = f"num_subsets={num_subsets} % in-pod devices={r} != 0"
+    elif n % n_dev:
+        precondition = f"n={n} % devices={n_dev} != 0"
+    elif capacity % n_pods:
+        precondition = f"capacity={capacity} % pods={n_pods} != 0"
+    if precondition:
+        warnings.warn(
+            "pack_subsets_a2a: falling back to the scatter pack "
+            f"(all-reduce-shaped collective) because {precondition}",
+            RuntimeWarning, stacklevel=2)
+        out, msk = pack_subsets(points, subset_ids, num_subsets, capacity)
+        return out, msk, jnp.int32(n) - msk.sum(dtype=jnp.int32)
     m_loc = num_subsets // r
-    n_loc = n // r
-    c_send = max(8, -(-int(n_loc / r * slack) // 8) * 8)
+    n_loc = n // n_dev
+    cap_loc = capacity // n_pods
+    # per-(src, dst) send slots: mean * slack plus a 4-sigma binomial floor —
+    # at small per-destination means the multiplicative slack alone is tighter
+    # than ordinary statistical fluctuation (send buffers are r*c_send*d
+    # floats, so the extra headroom is noise)
+    mean = n_loc / r
+    c_send = max(8, -(-int(mean * slack + 4 * math.sqrt(mean)) // 8) * 8)
+    axes = tuple(axis_names)
+    all_axes = ((pod_axis,) + axes) if pod_axis else axes
 
     def body(pts_loc, ids_loc):
-        # route local points to the device owning their subset
+        # route local points to the in-pod device owning their subset
         dst = (ids_loc // m_loc).astype(jnp.int32)
         order = jnp.argsort(dst, stable=True)
         _, slot_sorted, _ = _segment_rank(dst, order, r)
@@ -267,30 +531,32 @@ def pack_subsets_a2a(points: jnp.ndarray,
             dst, slot].set(pts_loc, mode="drop")
         send_id = jnp.full((r, c_send), -1, jnp.int32).at[
             dst, slot].set(ids_loc.astype(jnp.int32), mode="drop")
-        recv_x = jax.lax.all_to_all(send_x, axis_names, 0, 0, tiled=True)
-        recv_id = jax.lax.all_to_all(send_id, axis_names, 0, 0, tiled=True)
-        # local re-pack into (m_loc, capacity, d)
+        recv_x = jax.lax.all_to_all(send_x, axes, 0, 0, tiled=True)
+        recv_id = jax.lax.all_to_all(send_id, axes, 0, 0, tiled=True)
+        # local re-pack into (m_loc, cap_loc, d)
         flat_x = recv_x.reshape(r * c_send, d)
         flat_id = recv_id.reshape(r * c_send)
         local_sub = jnp.where(flat_id >= 0, flat_id % m_loc, m_loc)
         order2 = jnp.argsort(local_sub, stable=True)
         _, rank_sorted, _ = _segment_rank(local_sub, order2, m_loc + 1)
         rank = jnp.zeros(r * c_send, jnp.int32).at[order2].set(rank_sorted)
-        valid = (flat_id >= 0) & (rank < capacity)
-        out = jnp.zeros((m_loc, capacity, d), pts_loc.dtype).at[
+        valid = (flat_id >= 0) & (rank < cap_loc)
+        out = jnp.zeros((m_loc, cap_loc, d), pts_loc.dtype).at[
             jnp.where(valid, local_sub, m_loc),
-            jnp.where(valid, rank, capacity)].set(flat_x, mode="drop")
-        msk = jnp.zeros((m_loc, capacity), bool).at[
+            jnp.where(valid, rank, cap_loc)].set(flat_x, mode="drop")
+        msk = jnp.zeros((m_loc, cap_loc), bool).at[
             jnp.where(valid, local_sub, m_loc),
-            jnp.where(valid, rank, capacity)].set(True, mode="drop")
-        return out, msk
+            jnp.where(valid, rank, cap_loc)].set(True, mode="drop")
+        total = jax.lax.psum(msk.sum(dtype=jnp.int32), all_axes)
+        return out, msk, total
 
-    spec = P(axis_names)
-    return shard_map(
+    spec = P(all_axes)
+    out, msk, total = shard_map(
         body, mesh=mesh,
         in_specs=(spec, spec),
-        out_specs=(P(axis_names, None, None), P(axis_names, None)),
+        out_specs=(P(axes, pod_axis, None), P(axes, pod_axis), P()),
         check_vma=False)(points, subset_ids)
+    return out, msk, jnp.int32(n) - total
 
 
 def partition_dataset(points: jnp.ndarray,
@@ -299,12 +565,25 @@ def partition_dataset(points: jnp.ndarray,
                       leaf_capacity: int | None = None,
                       strategy: str = "kd_axis",
                       label_axis: int = 0,
-                      builder: str = "sort") -> Partition:
+                      builder: str = "sort",
+                      labeler: str = "sort",
+                      mesh=None,
+                      axis_names: tuple[str, ...] | None = None) -> Partition:
     """Full stage-1 pipeline: tree build + labeling (or random partition).
 
     ``strategy`` in {'kd_axis', 'kd_random', 'random'} — the paper's variants
     (2), (1) and (3) respectively.  ``builder``: 'sort' (paper-faithful
     level-sync sorts) or 'histogram' (identical output, sort-free — §Perf).
+    ``labeler``: 'sort' (exact-key order) or 'histogram' (bucketed order,
+    required for the distributed path).
+
+    With ``mesh`` + ``axis_names`` the whole stage runs under ``shard_map``
+    with points sharded over ``axis_names`` (e.g. ``("pods", "data")`` on the
+    k-means pod mesh): per-level cross-shard traffic is the O(R * 256)
+    histogram summaries, never the points.  Requires
+    ``builder == labeler == 'histogram'`` and ``strategy == 'kd_axis'`` —
+    the sort build/labeling would be lowered as dataset-sized collectives,
+    and the random variants have no shard-invariant key stream.
     """
     n = points.shape[0]
     cap = num_subsets if leaf_capacity is None else leaf_capacity
@@ -313,9 +592,29 @@ def partition_dataset(points: jnp.ndarray,
         return Partition(subset_ids=ids,
                          region_ids=jnp.zeros(n, jnp.int32), depth=0)
     depth = required_depth(n, cap)
+    if mesh is not None:
+        if axis_names is None:
+            raise ValueError("sharded partition_dataset needs axis_names")
+        if builder != "histogram" or labeler != "histogram":
+            raise ValueError(
+                "sharded partition_dataset requires builder='histogram' and "
+                f"labeler='histogram' (got {builder!r}/{labeler!r}); the "
+                "sort paths lower as dataset-sized collectives")
+        if strategy != "kd_axis":
+            raise ValueError(
+                f"sharded partition_dataset supports strategy='kd_axis' "
+                f"only (got {strategy!r})")
+        region = build_kdtree_histogram_sharded(points, depth, mesh,
+                                                tuple(axis_names))
+        ids = label_regions_histogram_sharded(points, region, 2 ** depth,
+                                              num_subsets, mesh,
+                                              tuple(axis_names),
+                                              label_axis=label_axis)
+        return Partition(subset_ids=ids, region_ids=region, depth=depth)
     build = build_kdtree_histogram if builder == "histogram" else build_kdtree
     region = build(points, depth)
     label_strategy = "axis" if strategy == "kd_axis" else "random"
-    ids = label_regions(points, region, key, 2 ** depth, num_subsets,
-                        strategy=label_strategy, label_axis=label_axis)
+    label = label_regions_histogram if labeler == "histogram" else label_regions
+    ids = label(points, region, key, 2 ** depth, num_subsets,
+                strategy=label_strategy, label_axis=label_axis)
     return Partition(subset_ids=ids, region_ids=region, depth=depth)

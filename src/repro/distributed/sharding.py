@@ -208,11 +208,12 @@ def replicated(tree, mesh):
 
 
 # ------------------------------------------------------------------
-# k-means pod topology: the IPKMeans S2 mesh is (pods x devices) — the
+# k-means pod topology: the IPKMeans mesh is (pods x devices) — the
 # subset ("reducer") axis shards over the fast in-pod axis, while each
-# subset's POINTS shard over the pod (DCN) axis, so the only cross-host
-# traffic is the per-iteration (sums, counts) reduction that
-# ``distributed/compress.ef_allreduce`` compresses.
+# subset's POINTS shard over the pod (DCN) axis.  Cross-host traffic is
+# then two kinds of summary, never the data: S1's O(R * 256) radix
+# histograms per tree round, and S2's per-iteration (sums, counts)
+# reduction that ``distributed/compress.ef_allreduce`` compresses.
 
 KMEANS_POD_AXIS = "pods"      # the slow (DCN) axis of a k-means pod mesh
 KMEANS_DATA_AXIS = "data"     # the fast (ICI) axis: shards the subset dim
@@ -246,3 +247,18 @@ def subset_specs(subset_axes: tuple[str, ...], pod_axis: str | None):
     return (P(subset_axes, point_part, None),
             P(subset_axes, point_part),
             P(subset_axes))
+
+
+def s1_point_spec(subset_axes: tuple[str, ...],
+                  pod_axis: str | None) -> P:
+    """PartitionSpec for the raw ``(n, d)`` points entering S1.
+
+    The sharded histogram build/labeler (and the pod a2a pack) expect points
+    sharded over ALL mesh axes — ``(pod_axis,) + subset_axes`` — so no
+    single shard ever holds the dataset; the d (coordinate) axis stays
+    unsharded.  With ``pod_axis=None`` this is the single-mesh layout
+    (points over the in-pod axes only).
+    """
+    axes = ((pod_axis,) + tuple(subset_axes)) if pod_axis \
+        else tuple(subset_axes)
+    return P(axes, None)

@@ -125,13 +125,17 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
     replicated and only the scalar potential psum crossing shards; total
     seeding cost = (rounds+1) x this cell plus the O(ell log n) host
     recluster."""
-    # ``pods >= 2`` additionally lowers the CROSS-POD S2 cell: the same M
-    # reducers on a (pods x devices) k-means pod mesh with each subset's
-    # points sharded over the slow DCN axis, so every Lloyd iteration
-    # carries exactly ONE (sums, counts) reduction over the pod axis —
-    # 'exact' f32 psum or 'int8ef' compressed all-gather per ``reduce`` —
-    # and the record reports both the HLO's in-loop collective count (now
-    # intentionally nonzero) and the modeled per-pod DCN bytes.
+    # ``pods >= 2`` additionally lowers the CROSS-POD cells on a
+    # (pods x devices) k-means pod mesh.  S2: the same M reducers with each
+    # subset's points sharded over the slow DCN axis, so every Lloyd
+    # iteration carries exactly ONE (sums, counts) reduction over the pod
+    # axis — 'exact' f32 psum or 'int8ef' compressed all-gather per
+    # ``reduce`` — and the record reports both the HLO's in-loop collective
+    # count (now intentionally nonzero) and the modeled per-pod DCN bytes.
+    # S1 (jnp backend only): the sharded histogram build + labeler + pod
+    # a2a pack, with a hard check that the lowered reduction collectives
+    # stay within 4x the O(R*256) histogram byte model — i.e. summaries
+    # cross hosts, never the dataset.
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "x".join(map(str, mesh.devices.shape))
     file_tag = mesh_tag if backend == "jnp" else f"{mesh_tag}__{backend}"
@@ -285,6 +289,55 @@ def lower_all(multi_pod: bool, backend: str = "jnp",
                                f"reduction (expected nonzero)"})
         results.append(rec)
 
+        # ---- cross-pod S1: sharded histogram build + label + pod a2a ----
+        # (backend-independent like the other S1 cells, so jnp-only)
+        if backend == "jnp":
+            from repro.core.io_model import s1_histogram_dcn_bytes
+            from repro.distributed.sharding import s1_point_spec
+            x_axes = (KMEANS_POD_AXIS, KMEANS_DATA_AXIS)
+
+            def s1_xpod(points, key):
+                part = kdtree.partition_dataset(
+                    points, key, M, leaf_capacity=M, strategy="kd_axis",
+                    builder="histogram", labeler="histogram",
+                    mesh=pmesh, axis_names=x_axes)
+                return kdtree.pack_subsets_a2a(
+                    points, part.subset_ids, M, cap, pmesh,
+                    (KMEANS_DATA_AXIS,), pod_axis=KMEANS_POD_AXIS)
+
+            pt_spec = s1_point_spec((KMEANS_DATA_AXIS,), KMEANS_POD_AXIS)
+            t0 = time.time()
+            low = jax.jit(s1_xpod, in_shardings=(
+                NamedSharding(pmesh, pt_spec),
+                NamedSharding(pmesh, P()))).lower(pts, key_abs)
+            comp = low.compile()
+            coll = collective_bytes(comp.as_text())
+            coll.pop("_counts", None)
+            # the structural claim: every reduction collective carries
+            # O(R*256) histogram summaries, never the dataset.  The a2a is
+            # excluded — it's the pack, which moves each point exactly once
+            # by construction.  Bound = 4x the full-mesh histogram model
+            # (slack for GSPMD scheduling duplication), itself ~100x under
+            # one dataset pass.
+            summary_bytes = sum(v for op, v in coll.items()
+                                if op != "all-to-all")
+            bound = 4 * s1_histogram_dcn_bytes(depth, n_dev)
+            if summary_bytes > bound:
+                raise RuntimeError(
+                    f"sharded S1 reduction collectives move {summary_bytes} "
+                    f"bytes > 4x the histogram model ({bound}): a sort/"
+                    f"gather-shaped lowering leaked into the sharded build")
+            rec = _record(f"ipkmeans-s1-xpod{pods}", pmesh_tag, low, comp,
+                          {"compile_s": round(time.time() - t0, 1),
+                           "pods": pods, "kd_depth": depth,
+                           "s1_summary_collective_bytes": summary_bytes,
+                           "s1_histogram_model_bytes":
+                               s1_histogram_dcn_bytes(depth, pods),
+                           "note": "cross-pod S1: histogram build + label "
+                                   "sharded over (pods, data); reductions "
+                                   "bounded by the O(R*256) summary model"})
+            results.append(rec)
+
     # ---- k-means|| init round: per-shard fused sweep + scalar psi psum ----
     if init_round:
         from repro.core.init import _make_sweep
@@ -356,10 +409,13 @@ def main():
                          "scalar potential psum (total seeding = "
                          "(rounds+1) x this cell)")
     ap.add_argument("--pods", type=int, default=0,
-                    help="also lower the CROSS-POD S2 cell on a "
-                         "(pods x devices) k-means pod mesh: each subset's "
-                         "points shard over the slow DCN axis and every "
-                         "Lloyd iteration reduces (sums, counts) across it")
+                    help="also lower the CROSS-POD cells on a "
+                         "(pods x devices) k-means pod mesh: the S2 cell "
+                         "(each subset's points shard over the slow DCN "
+                         "axis; one (sums, counts) reduction per Lloyd "
+                         "iteration) and the S1 cell (sharded histogram "
+                         "build + label + pod a2a pack, reduction bytes "
+                         "checked against the O(R*256) summary model)")
     ap.add_argument("--reduce", default="exact", choices=["exact", "int8ef"],
                     help="cross-pod stats reduction for the --pods cell: "
                          "f32 psum or int8 error-feedback compression")

@@ -81,3 +81,30 @@ def test_dcn_reduce_bytes_scale_and_degenerate_cases():
     assert b2x == 2 * b2                 # linear in iterations
     q2 = io_model.dcn_reduce_bytes_ipkmeans(16, 8, 32, 20, 2, "int8ef")
     assert q2 * 3 <= b2                  # the ratio survives the ring factor
+
+
+def test_s1_histogram_dcn_bytes_properties():
+    # single pod: no DCN at all
+    assert io_model.s1_histogram_dcn_bytes(10, 1) == 0
+    # independent of n by construction; dominated by the leaf level, so
+    # roughly doubling with depth
+    b = io_model.s1_histogram_dcn_bytes(10, 2)
+    b_deeper = io_model.s1_histogram_dcn_bytes(11, 2)
+    assert b < b_deeper < 3 * b
+    # the headline: at the production shape (n=2^26, depth=14) the
+    # histogram summaries undercut ONE dataset pass by >= 10x, while the
+    # sort path pays depth+1 dataset passes
+    n, d, depth = 1 << 26, 64, 14
+    hist = io_model.s1_histogram_dcn_bytes(depth, 4)
+    sort = io_model.s1_sort_dcn_bytes(n, d, depth)
+    assert hist * 10 <= n * d * 4
+    assert sort == (depth + 1) * n * d * 4
+    assert hist * 100 <= sort
+
+
+def test_s1_sort_dcn_bytes_is_dataset_scaled():
+    # the sort baseline scales with n; the histogram model does not
+    assert io_model.s1_sort_dcn_bytes(2000, 8, 3) \
+        == 2 * io_model.s1_sort_dcn_bytes(1000, 8, 3)
+    assert io_model.s1_histogram_dcn_bytes(3, 2) \
+        == io_model.s1_histogram_dcn_bytes(3, 2, rounds=8)

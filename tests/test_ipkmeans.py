@@ -147,13 +147,15 @@ def test_pack_sorted_falls_back_when_uneven(dataset):
 
 def test_pack_a2a_single_process_falls_back(dataset):
     """pack='a2a' needs a mesh; the single-process entry point has none and
-    must silently take the scatter path (the distributed path wires the mesh
-    through — covered by the 8-device slow test for the kernel itself)."""
+    must take the scatter path — WITH a warning saying so (the distributed
+    path wires the mesh through — covered by the 8-device slow test for
+    the kernel itself)."""
     pts, inits = dataset
     base = IPKMeansConfig(num_clusters=5, num_subsets=6)
     r_scatter = ipkmeans(pts, inits[0], jax.random.key(0), base)
-    r_a2a = ipkmeans(pts, inits[0], jax.random.key(0),
-                     dataclasses.replace(base, pack="a2a"))
+    with pytest.warns(RuntimeWarning, match="needs a device mesh"):
+        r_a2a = ipkmeans(pts, inits[0], jax.random.key(0),
+                         dataclasses.replace(base, pack="a2a"))
     np.testing.assert_allclose(np.asarray(r_a2a.centroids),
                                np.asarray(r_scatter.centroids), rtol=1e-6)
 
@@ -224,7 +226,10 @@ def test_cross_pod_solve_single_pod_matches_reference(dataset):
     pts, inits = dataset
     from repro.distributed.sharding import kmeans_pod_mesh
     cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
-    ref = ipkmeans(pts, inits[0], jax.random.key(0), cfg)
+    # the pod path auto-resolves s1="histogram": the reference must run the
+    # same S1 order for iteration-exact agreement
+    ref = ipkmeans(pts, inits[0], jax.random.key(0),
+                   cfg.with_s1("histogram"))
     pmesh = kmeans_pod_mesh(1, 1)
     res = ipkmeans_distributed(pts, inits[0], jax.random.key(0), cfg,
                                pmesh, ("data",), pod_axis="pods")
@@ -233,3 +238,36 @@ def test_cross_pod_solve_single_pod_matches_reference(dataset):
                                atol=1e-5)
     np.testing.assert_array_equal(np.asarray(res.subset_iters),
                                   np.asarray(ref.subset_iters))
+
+
+def test_s1_mode_validation_and_auto_resolution(dataset):
+    pts, inits = dataset
+    with pytest.raises(ValueError, match="unknown s1"):
+        IPKMeansConfig(num_clusters=5, num_subsets=6, s1="radix")
+    cfg = IPKMeansConfig(num_clusters=5, num_subsets=6)
+    assert cfg.s1 == "auto"
+    assert cfg.with_s1("histogram").s1 == "histogram"
+    assert cfg.s1 == "auto"                          # with_s1 didn't mutate
+    # auto == sort off the pod path: bit-identical to an explicit "sort"
+    r_auto = ipkmeans(pts, inits[0], jax.random.key(0), cfg)
+    r_sort = ipkmeans(pts, inits[0], jax.random.key(0), cfg.with_s1("sort"))
+    np.testing.assert_array_equal(np.asarray(r_auto.centroids),
+                                  np.asarray(r_sort.centroids))
+    # explicit histogram S1 runs end to end and clusters comparably
+    r_hist = ipkmeans(pts, inits[0], jax.random.key(0),
+                      cfg.with_s1("histogram"))
+    assert abs(float(r_hist.sse) - float(r_sort.sse)) / float(r_sort.sse) \
+        < 0.05
+
+
+def test_check_pack_complete_raises_on_loss():
+    from repro.core.ipkmeans import _check_pack_complete
+    full = jnp.ones((4, 8), bool)
+    _check_pack_complete(32, full, None, "scatter")          # no loss: ok
+    _check_pack_complete(32, full, jnp.int32(0), "a2a")
+    with pytest.raises(ValueError, match="dropped 2 of 34"):
+        _check_pack_complete(34, full, None, "scatter")
+    with pytest.raises(ValueError, match="dropped 3 of 32"):
+        _check_pack_complete(32, full, jnp.int32(3), "a2a")
+    # under tracing the counts are abstract — must not raise
+    jax.jit(lambda m: _check_pack_complete(99, m, None, "scatter") or 0)(full)

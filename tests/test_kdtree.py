@@ -73,3 +73,72 @@ def test_pack_subsets_roundtrip(pts):
     orig_sorted = orig[np.lexsort(orig.T)]
     np.testing.assert_allclose(got_sorted, orig_sorted, rtol=1e-6)
     assert int(mask.sum()) == 1000
+
+
+def test_histogram_labeling_is_stratified(pts):
+    """The bucketed-rank labeler keeps the paper's representativeness
+    guarantee: every leaf contributes at most ceil(leaf/M) points per
+    subset, exactly like the exact-sort labeler."""
+    m = 8
+    part = kdtree.partition_dataset(pts, jax.random.key(3), m,
+                                    builder="histogram", labeler="histogram")
+    region = np.asarray(part.region_ids)
+    ids = np.asarray(part.subset_ids)
+    assert np.bincount(ids, minlength=m).sum() == 1000
+    for r in np.unique(region):
+        sel = ids[region == r]
+        per = np.bincount(sel, minlength=m)
+        assert per.max() <= -(-len(sel) // m)
+
+
+def test_histogram_labeler_matches_sort_on_distinct_buckets():
+    """When every point in a region lands in its own bucket the bucketed
+    order IS the key order, so the two labelers agree exactly.  linspace
+    keys with < 256 points per region guarantee distinct buckets."""
+    n, m, depth = 512, 4, 2
+    x = jnp.linspace(0.0, 1.0, n)
+    pts = jnp.stack([x, jnp.sin(x * 9.0)], axis=1)
+    region = kdtree.build_kdtree_histogram(pts, depth)
+    key = jax.random.key(0)
+    a = kdtree.label_regions(pts, region, key, 2 ** depth, m)
+    b = kdtree.label_regions_histogram(pts, region, key, 2 ** depth, m)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partition_dataset_sharded_requires_histogram():
+    pts = jax.random.normal(jax.random.key(0), (64, 2))
+
+    class FakeMesh:
+        shape = {"data": 1}
+    with pytest.raises(ValueError, match="histogram"):
+        kdtree.partition_dataset(pts, jax.random.key(1), 4,
+                                 mesh=FakeMesh(), axis_names=("data",))
+    with pytest.raises(ValueError, match="kd_axis"):
+        kdtree.partition_dataset(pts, jax.random.key(1), 4,
+                                 strategy="kd_random",
+                                 builder="histogram", labeler="histogram",
+                                 mesh=FakeMesh(), axis_names=("data",))
+    with pytest.raises(ValueError, match="axis_names"):
+        kdtree.partition_dataset(pts, jax.random.key(1), 4,
+                                 builder="histogram", labeler="histogram",
+                                 mesh=FakeMesh())
+
+
+def test_pack_a2a_fallback_warns_and_counts():
+    """The a2a preconditions failing must be LOUD: a RuntimeWarning naming
+    the failed precondition, plus the 3-tuple contract with a dropped
+    count (0 — the scatter fallback at adequate capacity loses nothing)."""
+    n, m = 1000, 9                                  # n % devices != 0
+    pts = jax.random.normal(jax.random.key(0), (n, 2))
+    ids = (jnp.arange(n) % m).astype(jnp.int32)
+
+    class FakeMesh:
+        shape = {"data": 3}
+    with pytest.warns(RuntimeWarning, match="n=1000"):
+        packed, mask, dropped = kdtree.pack_subsets_a2a(
+            pts, ids, m, 128, FakeMesh(), ("data",))
+    assert int(dropped) == 0
+    assert int(mask.sum()) == n
+    with pytest.warns(RuntimeWarning, match="num_subsets=8"):
+        kdtree.pack_subsets_a2a(pts, ids[:999] % 8, 8, 128,
+                                FakeMesh(), ("data",))

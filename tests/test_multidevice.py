@@ -22,7 +22,11 @@ def run_script(body: str, devices: int = 8):
     res = subprocess.run([sys.executable, "-c", code],
                          capture_output=True, text=True, timeout=560,
                          env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root",
+                              # force the CPU backend: without this, a
+                              # machine with libtpu spends minutes probing
+                              # TPU metadata before falling back
+                              "JAX_PLATFORMS": "cpu"})
     assert res.returncode == 0, res.stderr[-3000:]
     return res.stdout
 
@@ -75,8 +79,9 @@ def test_pack_subsets_a2a_matches_reference_8dev():
         part = kdtree.partition_dataset(pts, jax.random.key(1), M)
         cap = 2 ** part.depth
         ref_p, ref_m = kdtree.pack_subsets(pts, part.subset_ids, M, cap)
-        a_p, a_m = kdtree.pack_subsets_a2a(pts, part.subset_ids, M, cap,
-                                           mesh, ("data",))
+        a_p, a_m, dropped = kdtree.pack_subsets_a2a(pts, part.subset_ids, M,
+                                                    cap, mesh, ("data",))
+        assert int(dropped) == 0
         assert int(a_m.sum()) == n
         for s in range(M):
             a = np.asarray(ref_p[s][np.asarray(ref_m[s])])
@@ -114,7 +119,10 @@ def test_ipkmeans_cross_pod_2x4_exact_and_int8ef():
         pts, _ = paper_dataset_3000(0)
         init = initial_centroid_groups(pts, 5, groups=1)[0]
         cfg = IPKMeansConfig(num_clusters=5, num_subsets=8)
-        ref = ipkmeans(pts, init, jax.random.key(0), cfg)
+        # the pod path auto-resolves s1="histogram", so the single-process
+        # reference must run the same (bucketed-rank) S1 order
+        ref = ipkmeans(pts, init, jax.random.key(0),
+                       cfg.with_s1("histogram"))
         mesh = kmeans_pod_mesh(2, 4)
         ex = ipkmeans_distributed(pts, init, jax.random.key(0), cfg, mesh,
                                   (KMEANS_DATA_AXIS,),
@@ -128,4 +136,86 @@ def test_ipkmeans_cross_pod_2x4_exact_and_int8ef():
                                  pod_axis=KMEANS_POD_AXIS)
         rel = abs(float(q.sse) - float(ex.sse)) / float(ex.sse)
         assert rel <= 1e-3, rel
+    """)
+
+
+@pytest.mark.parametrize("shape,axes", [((8,), ("data",)),
+                                        ((2, 4), ("pods", "data"))])
+def test_s1_sharded_bitwise_parity(shape, axes):
+    """Sharded build + labeler vs the single-device references, bit for bit:
+    duplicate coordinates forcing tie-breaks, an all-points-equal leaf,
+    depth=0, and uneven n that doesn't divide the shard count — on both a
+    flat (8,) and a 2-D (2, 4) pods x devices mesh (one subprocess each:
+    the depth>0 sharded-build compiles are the slow part).  Even n and
+    deeper trees ride the end-to-end slow test below."""
+    run_script(f"""
+        from repro.core import kdtree
+        mesh = compat.make_mesh({shape!r}, {axes!r})
+        axes = {axes!r}
+        rng = np.random.default_rng(0)
+        pts = jnp.asarray(rng.normal(size=(777, 3)).astype(np.float32))
+        pts = pts.at[50:150, 0].set(pts[0, 0])      # duplicate coords: ties
+        cases = [pts, jnp.ones((256, 2), jnp.float32)]   # + all points equal
+        key = jax.random.PRNGKey(7)
+        for pts in cases:
+            for depth in (0, 3):
+                ref_r = kdtree.build_kdtree_histogram(pts, depth)
+                ref_l = kdtree.label_regions_histogram(
+                    pts, ref_r, key, 2 ** depth, 4)
+                r = kdtree.build_kdtree_histogram_sharded(
+                    pts, depth, mesh, axes)
+                assert np.array_equal(np.asarray(r), np.asarray(ref_r)), (
+                    pts.shape, depth, axes)
+                l = kdtree.label_regions_histogram_sharded(
+                    pts, ref_r, 2 ** depth, 4, mesh, axes)
+                assert np.array_equal(np.asarray(l), np.asarray(ref_l)), (
+                    pts.shape, depth, axes)
+        print("parity ok")
+    """)
+
+
+@pytest.mark.slow
+def test_partition_dataset_sharded_2x4_end_to_end():
+    """partition_dataset on the 2x4 pods x devices mesh: bit-identical ids
+    to the single-device histogram path, and the pod a2a pack loses
+    nothing (dropped == 0, per-subset contents match the scatter pack)."""
+    run_script("""
+        from jax.sharding import NamedSharding
+        from repro.core import kdtree
+        from repro.distributed.sharding import (KMEANS_DATA_AXIS,
+                                                KMEANS_POD_AXIS,
+                                                kmeans_pod_mesh,
+                                                s1_point_spec)
+        mesh = kmeans_pod_mesh(2, 4)
+        axes = (KMEANS_POD_AXIS, KMEANS_DATA_AXIS)
+        n, d, M = 4096, 4, 16
+        pts = jax.random.normal(jax.random.key(0), (n, d))
+        pts = jax.device_put(pts, NamedSharding(
+            mesh, s1_point_spec((KMEANS_DATA_AXIS,), KMEANS_POD_AXIS)))
+        key = jax.random.key(1)
+        ref = kdtree.partition_dataset(pts, key, M, leaf_capacity=256,
+                                       builder="histogram",
+                                       labeler="histogram")
+        got = kdtree.partition_dataset(pts, key, M, leaf_capacity=256,
+                                       builder="histogram",
+                                       labeler="histogram",
+                                       mesh=mesh, axis_names=axes)
+        assert got.depth == ref.depth
+        assert np.array_equal(np.asarray(got.region_ids),
+                              np.asarray(ref.region_ids))
+        assert np.array_equal(np.asarray(got.subset_ids),
+                              np.asarray(ref.subset_ids))
+        cap = 512       # pod-slack: mean per (pod, subset) is 128
+        a_p, a_m, dropped = kdtree.pack_subsets_a2a(
+            pts, got.subset_ids, M, cap, mesh, (KMEANS_DATA_AXIS,),
+            pod_axis=KMEANS_POD_AXIS)
+        assert int(dropped) == 0
+        assert int(a_m.sum()) == n
+        s_p, s_m = kdtree.pack_subsets(pts, got.subset_ids, M, cap)
+        for s in range(M):
+            a = np.asarray(a_p[s][np.asarray(a_m[s])])
+            b = np.asarray(s_p[s][np.asarray(s_m[s])])
+            np.testing.assert_allclose(a[np.lexsort(a.T)],
+                                       b[np.lexsort(b.T)], rtol=1e-6)
+        print("sharded partition ok")
     """)
